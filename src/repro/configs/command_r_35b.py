@@ -1,0 +1,23 @@
+"""command-r-35b [dense] — GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01].
+
+Largest dense assigned arch — the AD-GDA state (theta + CHOCO public copies)
+makes it the memory-roofline stress case; see EXPERIMENTS §Perf.
+
+long_500k: sliding-window decode variant (window 8192).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    num_layers=40,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22528,
+    vocab_size=256000,
+    use_bias=False,
+    layer_pattern=("attn",),
+    long_context_window=8192,
+    source="Command-R 35B: GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01]",
+)

@@ -1,0 +1,25 @@
+"""granite-20b [dense] — llama-arch code model, MQA [arXiv:2405.04324].
+
+MQA (kv=1): in decode the single KV head cannot shard over heads, so the
+cache *sequence* dimension shards over `model` (flash-decoding layout) —
+this is what makes 32k x 128-batch decode fit (see launch/sharding.py).
+
+long_500k: sliding-window decode variant (window 8192).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    head_dim=128,
+    layer_pattern=("attn",),
+    mlp_type="gelu",  # d_ff = 4*d GELU MLP — matches the 20B parameter count
+    long_context_window=8192,
+    source="Granite-20B code: llama-arch, MQA [arXiv:2405.04324]",
+)

@@ -1,0 +1,26 @@
+"""internvl2-2b [vlm] — InternViT + InternLM2 backbone [arXiv:2404.16821].
+
+The ViT/SigLIP vision encoder + MLP projector are STUBBED per spec:
+``input_specs`` supplies 256 precomputed patch embeddings [B, 256, d_model]
+that are early-fused (spliced over the first 256 token positions).  We
+implement the InternLM2-style GQA language decoder that consumes them.
+
+long_500k: SKIPPED — full-attention VLM backbone (see DESIGN §Arch-applicability).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    layer_pattern=("attn",),
+    mlp_type="swiglu",
+    norm_type="rmsnorm",
+    num_patches=256,
+    source="InternVL2-2B: InternViT-300M + InternLM2-1.8B [arXiv:2404.16821]",
+)

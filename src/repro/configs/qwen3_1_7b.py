@@ -1,0 +1,22 @@
+"""qwen3-1.7b [dense] — qk_norm + GQA [hf:Qwen/Qwen3-8B family].
+
+long_500k: runs via the sliding-window decode variant (window 8192) —
+sub-quadratic ring-buffer cache; noted in DESIGN §Arch-applicability.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=6144,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    layer_pattern=("attn",),
+    long_context_window=8192,
+    source="Qwen3-1.7B: qk_norm, GQA [hf:Qwen/Qwen3-8B]",
+)

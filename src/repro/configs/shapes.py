@@ -1,0 +1,67 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+SHAPES maps shape-id -> (seq_len, global_batch, step_kind).  ``input_specs``
+returns the exact abstract inputs each arch's step function consumes — no
+device allocation, weak-type-correct, shardable.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def supports_shape(cfg, shape: InputShape) -> bool:
+    """long_500k requires sub-quadratic decode (see DESIGN §Arch-applicability)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def batch_specs(cfg, batch: int, seq: int, num_nodes: int | None = None):
+    """Abstract train/prefill batch. With num_nodes, adds a leading node axis."""
+    lead = (num_nodes, batch // num_nodes) if num_nodes else (batch,)
+    spec = {"tokens": jax.ShapeDtypeStruct(lead + (seq,), jnp.int32)}
+    if cfg.is_encdec:
+        spec["frames"] = jax.ShapeDtypeStruct(
+            lead + (cfg.encoder_context, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.num_patches > 0:
+        spec["patches"] = jax.ShapeDtypeStruct(
+            lead + (cfg.num_patches, cfg.d_model), jnp.bfloat16
+        )
+    return spec
+
+
+def decode_specs(cfg, batch: int):
+    """Abstract decode-step inputs: one new token per sequence."""
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg, shape_name: str, num_nodes: int | None = None):
+    shape = SHAPES[shape_name]
+    if shape.step == "train":
+        return batch_specs(cfg, shape.global_batch, shape.seq_len, num_nodes)
+    if shape.step == "prefill":
+        return batch_specs(cfg, shape.global_batch, shape.seq_len)
+    return decode_specs(cfg, shape.global_batch)

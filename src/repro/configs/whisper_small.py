@@ -1,0 +1,30 @@
+"""whisper-small [audio] — encoder-decoder, conv frontend STUB [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is stubbed per spec:
+``input_specs`` supplies 1500 precomputed frame embeddings [B, 1500, 768].
+We implement the 12L encoder (non-causal self-attn) + 12L decoder
+(causal self-attn + cross-attn), GELU MLPs, LayerNorm, biases — the
+Whisper transformer backbone.
+
+long_500k: SKIPPED — full-attention enc-dec (DESIGN §Arch-applicability).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    use_bias=True,
+    layer_pattern=("attn",),
+    mlp_type="gelu",
+    norm_type="layernorm",
+    encoder_layers=12,
+    cross_attention=True,
+    encoder_context=1500,
+    source="Whisper-small enc-dec backbone [arXiv:2212.04356]",
+)

@@ -1,0 +1,50 @@
+"""Paper core: AD-GDA distributionally robust decentralized learning."""
+from repro.core.adgda import ADGDA, ADGDAConfig, ADGDAState
+from repro.core.baselines import DRDSGD, DRDSGDConfig, DRFA, DRFAConfig, choco_sgd
+from repro.core.compression import (
+    BlockTopK,
+    Compressor,
+    Identity,
+    RandomQuantization,
+    TopK,
+    make_compressor,
+)
+from repro.core.dro import (
+    chi2_regularizer,
+    kl_closed_form_weights,
+    kl_regularizer,
+    make_regularizer,
+    project_simplex,
+)
+from repro.core.gossip import CHOCOState, choco_init, choco_round, mix_stacked, payload_bits
+from repro.core.topology import Topology, make_topology, spectral_gap
+
+__all__ = [
+    "ADGDA",
+    "ADGDAConfig",
+    "ADGDAState",
+    "DRDSGD",
+    "DRDSGDConfig",
+    "DRFA",
+    "DRFAConfig",
+    "choco_sgd",
+    "BlockTopK",
+    "Compressor",
+    "Identity",
+    "RandomQuantization",
+    "TopK",
+    "make_compressor",
+    "chi2_regularizer",
+    "kl_closed_form_weights",
+    "kl_regularizer",
+    "make_regularizer",
+    "project_simplex",
+    "CHOCOState",
+    "choco_init",
+    "choco_round",
+    "mix_stacked",
+    "payload_bits",
+    "Topology",
+    "make_topology",
+    "spectral_gap",
+]

@@ -1,0 +1,251 @@
+"""Baselines the paper compares against (Table 1, §5.2).
+
+* CHOCO-SGD (Koloskova et al. 2019) — standard (non-robust) decentralized SGD
+  with compressed gossip.  Obtained from :class:`repro.core.adgda.ADGDA` with
+  ``robust=False`` (fixed lambda = prior); no separate code path so the
+  comparison isolates exactly the distributional-robustness delta.
+
+* DR-DSGD (Issaid et al. 2022) — decentralized distributionally robust SGD
+  restricted to the KL regularizer, for which the inner max has the closed
+  form lambda_i ∝ pi_i exp(f_i / alpha).  Uncompressed gossip.  The closed
+  form needs the normalizer sum_j pi_j exp(f_j/alpha); we obtain it with one
+  scalar all-reduce per round (the original paper gossips it — identical in
+  expectation, and the scalar is 32 bits so the accounting difference is nil).
+
+* DRFA (Deng et al. 2021) — federated (star topology) distributionally robust
+  averaging: each round the server samples |U| = ceil(m/2) clients according
+  to lambda, clients run K local SGD steps, the server averages the returned
+  models and periodically updates lambda by projected ascent on the observed
+  losses.
+
+All trainers share the ADGDA interface: ``init(params, rng)``,
+``step(state, batch) -> (state, aux)``, ``network_mean(state)``,
+``bits_per_round(state)`` — so the communication-efficiency benchmark
+(paper Fig. 5) treats them uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dro
+from repro.core.adgda import ADGDA, ADGDAConfig, LossFn
+from repro.core.gossip import mix_stacked, payload_bits
+from repro.core.compression import Identity
+from repro.core.topology import make_topology
+
+__all__ = ["choco_sgd", "DRDSGD", "DRDSGDConfig", "DRFA", "DRFAConfig"]
+
+
+def choco_sgd(config: ADGDAConfig, loss_fn: LossFn, prior=None) -> ADGDA:
+    """CHOCO-SGD = AD-GDA with the dual frozen at the prior."""
+    return ADGDA(dataclasses.replace(config, robust=False), loss_fn, prior)
+
+
+# --------------------------------------------------------------------- DR-DSGD
+@dataclasses.dataclass(frozen=True)
+class DRDSGDConfig:
+    num_nodes: int = 8
+    topology: str = "ring"
+    alpha: float = 6.0  # KL temperature (paper uses alpha = 6)
+    eta_theta: float = 0.1
+    lr_decay: float = 1.0
+    momentum: float = 0.0
+
+
+class DRDSGDState(NamedTuple):
+    step: jax.Array
+    theta: Any
+    momentum: Any
+    theta_avg: Any
+    rng: jax.Array
+
+
+class DRDSGD:
+    def __init__(self, config: DRDSGDConfig, loss_fn: LossFn, prior=None):
+        self.config = config
+        self.loss_fn = loss_fn
+        self.topology = make_topology(config.topology, config.num_nodes)
+        m = config.num_nodes
+        self.prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
+
+    def init(self, params: Any, rng: jax.Array) -> DRDSGDState:
+        m = self.config.num_nodes
+        stacked = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape).copy(), params)
+        return DRDSGDState(
+            step=jnp.zeros((), jnp.int32),
+            theta=stacked,
+            momentum=jax.tree.map(jnp.zeros_like, stacked),
+            theta_avg=jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params),
+            rng=jnp.array(rng, copy=True),
+        )
+
+    @partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def step(self, state: DRDSGDState, batch: Any):
+        cfg = self.config
+        m = cfg.num_nodes
+        rng, *node_keys = jax.random.split(state.rng, m + 1)
+        node_keys = jnp.stack(node_keys)
+
+        losses, grads = jax.vmap(jax.value_and_grad(self.loss_fn))(state.theta, batch, node_keys)
+
+        # closed-form KL dual weights (normalized over the network)
+        lam = dro.kl_closed_form_weights(losses, self.prior, cfg.alpha)
+        scale = (lam / self.prior).astype(jnp.float32)  # = m * lam for uniform prior
+
+        t = state.step.astype(jnp.float32)
+        eta = cfg.eta_theta * jnp.power(cfg.lr_decay, t)
+
+        def upd(p, g, mo):
+            g = g.astype(jnp.float32) * scale.reshape((m,) + (1,) * (g.ndim - 1))
+            mo = cfg.momentum * mo + g
+            return (p.astype(jnp.float32) - eta * mo).astype(p.dtype), mo
+
+        flat_p, tdef = jax.tree_util.tree_flatten(state.theta)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.momentum)
+        stepped = [upd(p, g, mo) for p, g, mo in zip(flat_p, flat_g, flat_m)]
+        theta_half = jax.tree_util.tree_unflatten(tdef, [s[0] for s in stepped])
+        momentum = jax.tree_util.tree_unflatten(tdef, [s[1] for s in stepped])
+
+        theta_new = mix_stacked(theta_half, self.topology)  # uncompressed gossip
+
+        tt = state.step.astype(jnp.float32)
+        theta_avg = jax.tree.map(
+            lambda avg, th: (avg * tt + th.astype(jnp.float32).mean(0)) / (tt + 1.0),
+            state.theta_avg,
+            theta_new,
+        )
+        aux = {"losses": losses, "worst_loss": losses.max(), "mean_loss": losses.mean(), "lambda_mean": lam}
+        return DRDSGDState(state.step + 1, theta_new, momentum, theta_avg, rng), aux
+
+    def network_mean(self, state):
+        return jax.tree.map(lambda x: x.astype(jnp.float32).mean(0), state.theta)
+
+    def bits_per_round(self, state) -> float:
+        return payload_bits(Identity(), state.theta, self.topology)
+
+
+# ------------------------------------------------------------------------ DRFA
+@dataclasses.dataclass(frozen=True)
+class DRFAConfig:
+    num_nodes: int = 8
+    participation: float = 0.5  # fraction of clients sampled per round
+    local_steps: int = 10  # K
+    eta_theta: float = 0.1
+    eta_lambda: float = 0.1
+    lr_decay: float = 1.0
+    momentum: float = 0.0
+
+
+class DRFAState(NamedTuple):
+    step: jax.Array
+    theta: Any  # server model (no node axis)
+    lam: jax.Array  # [m] server dual
+    theta_avg: Any
+    rng: jax.Array
+
+
+class DRFA:
+    """Distributionally Robust Federated Averaging (client-server)."""
+
+    def __init__(self, config: DRFAConfig, loss_fn: LossFn, prior=None):
+        self.config = config
+        self.loss_fn = loss_fn
+        m = config.num_nodes
+        self.prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
+        self.num_sampled = max(1, int(round(config.participation * m)))
+
+    def init(self, params: Any, rng: jax.Array) -> DRFAState:
+        return DRFAState(
+            step=jnp.zeros((), jnp.int32),
+            theta=jax.tree.map(lambda x: jnp.array(x, copy=True), params),
+            lam=self.prior,
+            theta_avg=jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params),
+            rng=jnp.array(rng, copy=True),
+        )
+
+    @partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def step(self, state: DRFAState, batch: Any):
+        """One communication round.
+
+        ``batch`` is stacked [m, K, ...]: K local micro-batches per client.
+        """
+        cfg = self.config
+        m = cfg.num_nodes
+        k = self.num_sampled
+        rng, sample_key, *node_keys = jax.random.split(state.rng, m + 2)
+        node_keys = jnp.stack(node_keys)
+
+        # --- sample |U| clients according to lambda (Gumbel top-k, no repl.)
+        gumbel = -jnp.log(-jnp.log(jax.random.uniform(sample_key, (m,)) + 1e-20) + 1e-20)
+        scores = jnp.log(state.lam + 1e-20) + gumbel
+        _, sampled = jax.lax.top_k(scores, k)
+        mask = jnp.zeros((m,), jnp.float32).at[sampled].set(1.0)
+
+        t = state.step.astype(jnp.float32)
+        eta = cfg.eta_theta * jnp.power(cfg.lr_decay, t)
+
+        # --- K local SGD steps at EVERY client (masked average afterwards):
+        # running all clients keeps the step shape static; only sampled ones
+        # contribute, matching partial participation.
+        def local_train(theta0, client_batch, key):
+            def body(theta, mb):
+                loss, g = jax.value_and_grad(self.loss_fn)(theta, mb, key)
+                theta = jax.tree.map(
+                    lambda p, gg: (p.astype(jnp.float32) - eta * gg.astype(jnp.float32)).astype(p.dtype),
+                    theta,
+                    g,
+                )
+                return theta, loss
+
+            theta_k, losses = jax.lax.scan(body, theta0, client_batch)
+            return theta_k, losses.mean()
+
+        theta_rep = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape), state.theta)
+        theta_locals, local_losses = jax.vmap(local_train)(theta_rep, batch, node_keys)
+
+        # --- server: average sampled client models
+        wsum = mask.sum()
+        theta_new = jax.tree.map(
+            lambda x: (
+                (x.astype(jnp.float32) * mask.reshape((m,) + (1,) * (x.ndim - 1))).sum(0) / wsum
+            ).astype(x.dtype),
+            theta_locals,
+        )
+
+        # --- dual update: projected ascent on observed losses (sampled only,
+        # importance-corrected as in Deng et al.)
+        loss_vec = local_losses * mask * (m / jnp.maximum(wsum, 1.0))
+        lam_new = dro.project_simplex(state.lam + cfg.eta_lambda * cfg.local_steps * loss_vec)
+
+        tt = state.step.astype(jnp.float32)
+        theta_avg = jax.tree.map(
+            lambda avg, th: (avg * tt + th.astype(jnp.float32)) / (tt + 1.0),
+            state.theta_avg,
+            theta_new,
+        )
+        aux = {
+            "losses": local_losses,
+            "worst_loss": local_losses.max(),
+            "mean_loss": local_losses.mean(),
+            "lambda_mean": lam_new,
+        }
+        return DRFAState(state.step + 1, theta_new, lam_new, theta_avg, rng), aux
+
+    def network_mean(self, state):
+        return jax.tree.map(lambda x: x.astype(jnp.float32), state.theta)
+
+    def bits_per_round(self, state) -> float:
+        """Busiest node = the server: |U| models down + |U| models up, f32.
+
+        One DRFA round covers K local iterations; callers comparing against
+        per-iteration algorithms should divide by ``config.local_steps``.
+        """
+        d = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(state.theta))
+        return 2.0 * self.num_sampled * d * 32.0

@@ -1,0 +1,113 @@
+"""Distributionally robust optimization primitives (paper §3, eq. (3)).
+
+The network objective is
+
+    min_theta max_{lambda in simplex}  (1/m) sum_i [ lambda_i f_i(theta) + alpha r(lambda) ]
+
+with r a strongly-concave regularizer.  This module provides:
+
+* Euclidean projection onto the probability simplex (the projected ascent
+  step in Algorithm 1 uses it).
+* The chi^2 and KL regularizers of §3 (with their gradients via autodiff).
+* The closed-form inner maximizer for the KL regularizer (used by the
+  DR-DSGD baseline, Issaid et al. 2022).
+* Worst-node / best-node metrics used throughout the paper's tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "project_simplex",
+    "chi2_regularizer",
+    "kl_regularizer",
+    "make_regularizer",
+    "kl_closed_form_weights",
+    "dual_gradient",
+    "Regularizer",
+]
+
+
+def project_simplex(v: jax.Array) -> jax.Array:
+    """Euclidean projection of v onto the probability simplex.
+
+    Sort-based algorithm (Held et al. 1974): O(m log m), jit/vmap friendly.
+    """
+    m = v.shape[-1]
+    u = jnp.sort(v, axis=-1)[..., ::-1]
+    css = jnp.cumsum(u, axis=-1) - 1.0
+    ind = jnp.arange(1, m + 1, dtype=v.dtype)
+    cond = u - css / ind > 0
+    # rho = largest index where cond holds (guaranteed >= 1)
+    rho = jnp.max(jnp.where(cond, ind, 0.0), axis=-1, keepdims=True)
+    # gather css at rho-1
+    theta = jnp.take_along_axis(css, rho.astype(jnp.int32) - 1, axis=-1) / rho
+    return jnp.maximum(v - theta, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Regularizer:
+    """r(lambda): strongly-concave regularizer, with node-prior pi = n_i/n."""
+
+    name: str
+    fn: Callable[[jax.Array, jax.Array], jax.Array]
+
+    def __call__(self, lam: jax.Array, prior: jax.Array) -> jax.Array:
+        return self.fn(lam, prior)
+
+    def grad(self, lam: jax.Array, prior: jax.Array) -> jax.Array:
+        return jax.grad(self.fn)(lam, prior)
+
+
+def _chi2(lam: jax.Array, prior: jax.Array) -> jax.Array:
+    """-chi^2(lambda || prior) = -sum_i (lambda_i - pi_i)^2 / pi_i (concave)."""
+    return -jnp.sum((lam - prior) ** 2 / prior)
+
+
+def _kl(lam: jax.Array, prior: jax.Array) -> jax.Array:
+    """-D_KL(lambda || prior) (concave); 0 log 0 := 0."""
+    safe = jnp.where(lam > 0, lam, 1.0)
+    return -jnp.sum(jnp.where(lam > 0, lam * jnp.log(safe / prior), 0.0))
+
+
+chi2_regularizer = Regularizer("chi2", _chi2)
+kl_regularizer = Regularizer("kl", _kl)
+
+_REGS = {"chi2": chi2_regularizer, "kl": kl_regularizer}
+
+
+def make_regularizer(name: str) -> Regularizer:
+    if name not in _REGS:
+        raise ValueError(f"unknown regularizer {name!r}; choose from {sorted(_REGS)}")
+    return _REGS[name]
+
+
+def kl_closed_form_weights(losses: jax.Array, prior: jax.Array, alpha: float) -> jax.Array:
+    """Exact inner maximizer for the KL regularizer (DR-DSGD):
+
+    lambda*_i  propto  pi_i * exp(f_i / alpha).
+    """
+    logits = jnp.log(prior) + losses / alpha
+    return jax.nn.softmax(logits)
+
+
+def dual_gradient(
+    local_loss: jax.Array,
+    node_index: jax.Array | int,
+    lam: jax.Array,
+    prior: jax.Array,
+    alpha: float,
+    regularizer: Regularizer,
+) -> jax.Array:
+    """grad_lambda g_i(theta, lambda) = f_i(theta) e_i + alpha grad r(lambda).
+
+    Node i observes only its own loss; the regularizer gradient is global in
+    lambda (which every node stores locally, size m).
+    """
+    m = lam.shape[-1]
+    e_i = jax.nn.one_hot(node_index, m, dtype=lam.dtype)
+    return local_loss * e_i + alpha * regularizer.grad(lam, prior)

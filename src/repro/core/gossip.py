@@ -1,0 +1,225 @@
+"""CHOCO-GOSSIP compressed consensus (Koloskova et al. 2019) on stacked node axes.
+
+All state is stored *stacked*: every pytree leaf has a leading node axis of
+size m.  Under ``jax.jit`` with the production mesh, that axis is sharded over
+the ``data`` (and ``pod``) mesh axes, so each node's state lives on its own
+data-parallel group and the mixing below becomes real inter-node
+communication:
+
+* circulant topologies (ring / torus / mesh): ``sum_k w_k * roll(x, k)`` along
+  the node axis -> XLA ``collective-permute`` chains (sparse, ICI-friendly);
+* arbitrary W: einsum over the node axis -> all-gather + local reduction.
+
+The memory-efficient CHOCO scheme (paper Algorithm 1) keeps two extra
+variables per node: the public copy ``theta_hat_i`` and the neighbor tracker
+``s_i``.  One round:
+
+    theta_i   <- theta_half_i + gamma * (s_i - theta_hat_i)      # averaging
+    q_i       <- Q(theta_i - theta_hat_i)                        # compress
+    exchange q with neighbors                                    # the wire
+    theta_hat <- theta_hat + q_i
+    s_i       <- s_i + sum_j w_ij q_j
+
+``packed=True`` mixes the *encoded payload* (rolled packed ints), which is the
+production path: the collective moves ~delta x fewer bytes.  ``packed=False``
+decodes first (identical numerics, used as a cross-check oracle).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import Compressor, Identity
+from repro.core.topology import Topology
+
+__all__ = ["CHOCOState", "choco_init", "choco_round", "mix_stacked", "payload_bits"]
+
+
+class CHOCOState(NamedTuple):
+    theta_hat: object  # pytree, leaves [m, ...]
+    s: object  # pytree, leaves [m, ...]
+
+
+def choco_init(theta_stacked) -> CHOCOState:
+    zeros = jax.tree.map(jnp.zeros_like, theta_stacked)
+    return CHOCOState(theta_hat=zeros, s=jax.tree.map(jnp.zeros_like, theta_stacked))
+
+
+def _mix_leaf(x: jax.Array, topology: Topology) -> jax.Array:
+    """sum_j w_ij x_j along the leading node axis."""
+    if topology.shifts is not None:
+        out = jnp.zeros_like(x)
+        for shift, weight in topology.shifts:
+            term = x if shift == 0 else jnp.roll(x, shift, axis=0)
+            out = out + weight * term
+        return out
+    w = jnp.asarray(topology.mixing, dtype=x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32)
+    flat = x.reshape(x.shape[0], -1).astype(w.dtype)
+    return (w @ flat).reshape(x.shape).astype(x.dtype)
+
+
+def mix_stacked(tree, topology: Topology):
+    """Gossip-average a stacked pytree: leaf[i] <- sum_j w_ij leaf[j]."""
+    return jax.tree.map(lambda x: _mix_leaf(x, topology), tree)
+
+
+def _roll_payload(payload, shift: int):
+    if shift == 0:
+        return payload
+    return jax.tree.map(lambda x: jnp.roll(x, shift, axis=0), payload)
+
+
+def _vdecode(compressor: Compressor, payload, shape, dtype):
+    return jax.vmap(lambda p: compressor.decode(p, shape, dtype))(payload)
+
+
+def _mix_payload(compressor, payload, shape, dtype, topology: Topology):
+    """sum_j w_ij decode(q_j) — rolling the *packed* payload (production path)."""
+    out = None
+    for shift, weight in topology.shifts:
+        deq = _vdecode(compressor, _roll_payload(payload, shift), shape, dtype)
+        out = weight * deq if out is None else out + weight * deq
+    return out
+
+
+# leaves with more inner elements than this are gossiped with a lax.scan over
+# their leading inner (layer-stack) axis, so the f32 residual / RNG / payload
+# transients are per-layer instead of per-40-layer-stack — see EXPERIMENTS
+# §Perf (command-r-35b train iteration 2).  Quantization norms become
+# per-(node, block), a strictly finer scale that still satisfies Assumption 3.2.
+BLOCK_SCAN_ELEMS = 1 << 24
+
+
+def _scan_plan(shape, inner_elems: int, block_scan_elems: int):
+    """How to gossip a large stacked leaf [m, ...] in chunks.
+
+    Returns (axis, chunks, rows) or None (whole-leaf):
+      * layer-stack leaves (axis-1 size <= 128, e.g. [m, nb_layers, ...]):
+        scan axis 1 — it is never sharded;
+      * otherwise (e.g. embeddings [m, V, d] with V sharded over `model`):
+        split the LAST axis — chunking a sharded axis would force
+        cross-shard indexing every scan step (measured regression,
+        EXPERIMENTS §Perf B3).
+    """
+    if len(shape) <= 1 or inner_elems <= block_scan_elems:
+        return None
+    nb = shape[1] if len(shape) > 2 else 1
+    if 1 < nb <= 128:
+        per_row = inner_elems // nb
+        target_rows = max(1, block_scan_elems // max(per_row, 1))
+        rows = 1
+        for r in range(min(target_rows, nb), 0, -1):
+            if nb % r == 0:
+                rows = r
+                break
+        chunks = nb // rows
+        if 1 < chunks <= 512:
+            return (1, chunks, rows)
+        return None
+    last = shape[-1]
+    per_col = inner_elems // last
+    want = max(2, -(-inner_elems // block_scan_elems))  # ceil
+    for c in range(min(want, last), min(513, last + 1)):
+        if last % c == 0:
+            return (len(shape) - 1, c, last // c)
+    return None
+
+
+def _round_leaf(leaf, hat, s, key, topology, gamma, compressor, use_packed):
+    """One CHOCO round for a single stacked leaf [m, ...]."""
+    m = leaf.shape[0]
+    inner_shape, dtype = leaf.shape[1:], leaf.dtype
+    # averaging step (uses the *old* public variables)
+    theta_new = leaf + jnp.asarray(gamma, dtype) * (s - hat).astype(dtype)
+    resid = (theta_new - hat).astype(jnp.float32)
+    if isinstance(compressor, Identity):
+        q_self = resid
+        mixed = _mix_leaf(q_self, topology)
+    else:
+        node_keys = jax.random.split(key, m)
+        payload = jax.vmap(compressor.encode)(resid, node_keys)
+        q_self = _vdecode(compressor, payload, inner_shape, jnp.float32)
+        if use_packed:
+            mixed = _mix_payload(compressor, payload, inner_shape, jnp.float32, topology)
+        else:
+            mixed = _mix_leaf(q_self, topology)
+    hat_new = (hat.astype(jnp.float32) + q_self).astype(hat.dtype)
+    s_new = (s.astype(jnp.float32) + mixed).astype(s.dtype)
+    return theta_new, hat_new, s_new
+
+
+def choco_round(
+    theta_half,
+    state: CHOCOState,
+    topology: Topology,
+    gamma: float,
+    compressor: Compressor,
+    key: jax.Array,
+    packed: bool = True,
+    block_scan_elems: int = BLOCK_SCAN_ELEMS,
+):
+    """One compressed-consensus round over all leaves of a stacked pytree.
+
+    Returns (theta_new, state_new).  theta_half leaves are [m, ...].
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(theta_half)
+    hat_leaves = treedef.flatten_up_to(state.theta_hat)
+    s_leaves = treedef.flatten_up_to(state.s)
+    keys = jax.random.split(key, len(leaves))
+
+    use_packed = packed and topology.shifts is not None and not isinstance(compressor, Identity)
+
+    new_theta, new_hat, new_s = [], [], []
+    for leaf, hat, s, k in zip(leaves, hat_leaves, s_leaves, keys):
+        inner_elems = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+        plan = _scan_plan(leaf.shape, inner_elems, block_scan_elems)
+        if plan is not None:
+            # scan over chunks (layer-stack axis, or last-axis column groups):
+            # transients become per-chunk.  Slice inside the body — a
+            # pre-scan swapaxes would be fused into the loop as a
+            # full-tensor transpose every iteration.
+            axis, chunks, rows = plan
+            if axis == 1:
+                reshape = lambda x: x.reshape((x.shape[0], chunks, rows) + x.shape[2:])
+            else:  # split the last axis: [..., L] -> [..., chunks, L/chunks]
+                reshape = lambda x: x.reshape(x.shape[:-1] + (chunks, rows))
+            lc, hc, sc = reshape(leaf), reshape(hat), reshape(s)
+            bk = jax.random.split(k, chunks)
+
+            def body(_, xs, lc=lc, hc=hc, sc=sc, axis=axis):
+                i, kb = xs
+                take = lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=axis, keepdims=False)
+                return None, _round_leaf(
+                    take(lc), take(hc), take(sc), kb, topology, gamma, compressor, use_packed
+                )
+
+            _, (tn, hn, sn) = jax.lax.scan(body, None, (jnp.arange(chunks), bk))
+
+            def unshape(x, axis=axis):
+                # ys: [chunks, <leaf dims without the chunk axis position>]
+                x = jnp.moveaxis(x, 0, axis)
+                return x.reshape(leaf.shape)
+
+            theta_new, hat_new, s_new = unshape(tn), unshape(hn), unshape(sn)
+        else:
+            theta_new, hat_new, s_new = _round_leaf(
+                leaf, hat, s, k, topology, gamma, compressor, use_packed
+            )
+        new_theta.append(theta_new)
+        new_hat.append(hat_new)
+        new_s.append(s_new)
+
+    unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+    return unf(new_theta), CHOCOState(theta_hat=unf(new_hat), s=unf(new_s))
+
+
+def payload_bits(compressor: Compressor, theta_template, topology: Topology) -> float:
+    """Bits transmitted per round by the busiest node (degree x payload)."""
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(theta_template):
+        d = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else int(leaf.shape[0])
+        total += compressor.bits_per_element(d) * d
+    return total * topology.max_degree

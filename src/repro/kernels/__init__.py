@@ -1,0 +1,10 @@
+"""Pallas-TPU kernels for the paper's compression hot-spots.
+
+quantize.py — fused stochastic b-bit quantization + bit-packing
+topk.py     — blockwise top-k sparsification via threshold bisection
+ops.py      — jit'd wrappers + gossip-pluggable compressor classes
+ref.py      — pure-jnp oracles the kernels are tested against
+"""
+from repro.kernels.ops import KernelBlockTopK, KernelQuantization, block_topk, dequantize, quantize
+
+__all__ = ["KernelBlockTopK", "KernelQuantization", "block_topk", "dequantize", "quantize"]

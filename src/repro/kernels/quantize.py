@@ -1,0 +1,121 @@
+"""Pallas-TPU stochastic b-bit quantization kernel (fused quantize + bit-pack).
+
+The compression operator is AD-GDA's per-step hot spot: it touches every
+parameter every round (d ~ 1e9 for the large assigned archs).  The kernel
+fuses scale -> stochastic round -> clip -> bit-pack (levels) -> bit-pack
+(signs) in one VMEM pass, so HBM traffic is read 4B/elem + write
+(bits+1)/8 B/elem instead of several full-size round trips.
+
+Layout: the flat vector is reshaped to [rows, 128] (lane-aligned) and tiled
+over the grid in row-blocks of ``BLOCK_ROWS`` (VMEM footprint per step:
+BLOCK_ROWS * 128 * 4B * 2 inputs ~= 1 MiB).  The per-tensor norm rides in
+SMEM.  Packing is a sublane reshape: ``pack = 8 // bits`` level rows fold
+into one uint8 row; 8 sign rows fold into one bitmask row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import LANES
+
+BLOCK_ROWS = 512  # f32 VMEM tile: 512*128*4B = 256 KiB per operand
+
+
+def _quantize_kernel(norm_ref, x_ref, xi_ref, lvl_ref, sign_ref, *, bits: int):
+    pack = 8 // bits
+    maxlvl = (1 << bits) - 1
+    x = x_ref[...]
+    xi = xi_ref[...]
+    rows = x.shape[0]
+
+    scale = (1 << bits) / jnp.maximum(norm_ref[0], 1e-30)
+    q = jnp.floor(jnp.abs(x) * scale + xi)
+    lvl = jnp.clip(q, 0, maxlvl).astype(jnp.uint32)
+    sign = (x < 0).astype(jnp.uint32)
+
+    l = lvl.reshape(rows // pack, pack, LANES)
+    shifts = (jnp.arange(pack, dtype=jnp.uint32) * bits).reshape(1, pack, 1)
+    lvl_ref[...] = (l << shifts).sum(axis=1).astype(jnp.uint8)
+
+    s = sign.reshape(rows // 8, 8, LANES)
+    sshift = jnp.arange(8, dtype=jnp.uint32).reshape(1, 8, 1)
+    sign_ref[...] = (s << sshift).sum(axis=1).astype(jnp.uint8)
+
+
+def _dequantize_kernel(scale_ref, lvl_ref, sign_ref, out_ref, *, bits: int):
+    pack = 8 // bits
+    maxlvl = (1 << bits) - 1
+    packed_lvl = lvl_ref[...].astype(jnp.uint32)
+    packed_sign = sign_ref[...].astype(jnp.uint32)
+    prows = packed_lvl.shape[0]
+    rows = prows * pack
+
+    shifts = (jnp.arange(pack, dtype=jnp.uint32) * bits).reshape(1, pack, 1)
+    lvl = ((packed_lvl[:, None, :] >> shifts) & maxlvl).reshape(rows, LANES).astype(jnp.float32)
+    sshift = jnp.arange(8, dtype=jnp.uint32).reshape(1, 8, 1)
+    sign = ((packed_sign[:, None, :] >> sshift) & 1).reshape(rows, LANES)
+
+    mag = lvl * scale_ref[0]
+    out_ref[...] = jnp.where(sign == 1, -mag, mag)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_pallas(x: jax.Array, xi: jax.Array, norm: jax.Array, bits: int, interpret: bool = True):
+    """x, xi: [rows, 128] f32 (rows % (8*pack*BLOCK alignment) handled by caller).
+
+    Returns (packed_levels [rows/pack, 128] u8, packed_signs [rows/8, 128] u8).
+    """
+    assert x.shape[1] == LANES and x.shape[0] % (8 * (8 // bits)) == 0
+    rows = x.shape[0]
+    pack = 8 // bits
+    block = min(BLOCK_ROWS, rows)
+    assert rows % block == 0 and block % (8 * pack) == 0
+    grid = (rows // block,)
+    norm_arr = jnp.reshape(norm.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block // pack, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block // 8, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows // pack, LANES), jnp.uint8),
+            jax.ShapeDtypeStruct((rows // 8, LANES), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(norm_arr, x, xi)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def dequantize_pallas(packed_lvl, packed_sign, scale, bits: int, interpret: bool = True):
+    """scale = norm / (2^b * tau) — see ref.tau_for."""
+    pack = 8 // bits
+    prows = packed_lvl.shape[0]
+    rows = prows * pack
+    block = min(BLOCK_ROWS // pack, prows)
+    assert prows % block == 0
+    grid = (prows // block,)
+    norm_arr = jnp.reshape(scale.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        functools.partial(_dequantize_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block * pack // 8, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block * pack, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(norm_arr, packed_lvl, packed_sign)

@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for the Pallas compression kernels.
+
+These are the ground truth the kernels are tested against (allclose across a
+shape/dtype sweep with ``interpret=True``).  They implement *exactly* the same
+algorithm as the kernels:
+
+* ``quantize_ref`` / ``dequantize_ref`` — stochastic b-bit quantization with
+  2^b levels {0..2^b-1} (one fewer than paper eq. (2), so levels pack into
+  b bits exactly; the contraction delta changes by O(2^-b), negligible),
+  plus bit-packing: ``8/bits`` levels per uint8 and 8 sign bits per uint8.
+* ``block_topk_ref`` — per-block top-k selection via N-iteration threshold
+  bisection (the TPU-native form of top-k: vector compares + row reductions,
+  no sort).  Keeps all entries with |x| >= tau where tau is the bisection
+  threshold whose kept-count is <= k; ties below may drop extra elements,
+  exactly as the kernel does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANES = 128
+BISECT_ITERS = 20
+
+
+# ----------------------------------------------------------------- quantize
+def _rows_for(d: int, pack: int) -> int:
+    """Pad flat length d up to a multiple of pack*8*LANES and return rows."""
+    unit = pack * 8 * LANES  # pack rows x sign rows x lanes alignment
+    padded = ((d + unit - 1) // unit) * unit
+    return padded // LANES
+
+
+def quantize_ref(x: jax.Array, xi: jax.Array, norm: jax.Array, bits: int):
+    """Quantize a [rows, 128] f32 array (pre-padded, pre-scaled noise xi in [0,1)).
+
+    Returns (packed_levels [rows/pack, 128] uint8, packed_signs [rows/8, 128] uint8).
+    """
+    assert x.ndim == 2 and x.shape[1] == LANES
+    pack = 8 // bits
+    rows = x.shape[0]
+    maxlvl = (1 << bits) - 1
+    scale = (1 << bits) / jnp.maximum(norm, 1e-30)
+    q = jnp.floor(jnp.abs(x) * scale + xi)
+    lvl = jnp.clip(q, 0, maxlvl).astype(jnp.uint8)
+    sign = (x < 0).astype(jnp.uint8)
+
+    l = lvl.reshape(rows // pack, pack, LANES).astype(jnp.uint32)
+    shifts = (jnp.arange(pack, dtype=jnp.uint32) * bits).reshape(1, pack, 1)
+    packed_lvl = (l << shifts).sum(axis=1).astype(jnp.uint8)
+
+    s = sign.reshape(rows // 8, 8, LANES).astype(jnp.uint32)
+    sshift = jnp.arange(8, dtype=jnp.uint32).reshape(1, 8, 1)
+    packed_sign = (s << sshift).sum(axis=1).astype(jnp.uint8)
+    return packed_lvl, packed_sign
+
+
+def tau_for(d: int, bits: int) -> float:
+    """Paper eq. (2) normalizer: tau = 1 + min(d/2^2b, sqrt(d)/2^b)."""
+    lvl = float(1 << bits)
+    return 1.0 + min(d / lvl**2, (d**0.5) / lvl)
+
+
+def dequantize_ref(packed_lvl: jax.Array, packed_sign: jax.Array, scale: jax.Array, bits: int):
+    """Inverse of quantize_ref -> [rows, 128] f32 reconstruction.
+
+    ``scale`` = norm / (2^b * tau): the paper's 1/tau shrinkage makes the
+    roundtrip a delta = 1/tau contraction (without it the unbiased decode has
+    variance (tau-1)||x||^2, which explodes for small b / large d).
+    """
+    pack = 8 // bits
+    rows = packed_lvl.shape[0] * pack
+    maxlvl = (1 << bits) - 1
+    l = packed_lvl.astype(jnp.uint32)[:, None, :]
+    shifts = (jnp.arange(pack, dtype=jnp.uint32) * bits).reshape(1, pack, 1)
+    lvl = ((l >> shifts) & maxlvl).reshape(rows, LANES).astype(jnp.float32)
+
+    s = packed_sign.astype(jnp.uint32)[:, None, :]
+    sshift = jnp.arange(8, dtype=jnp.uint32).reshape(1, 8, 1)
+    sign = ((s >> sshift) & 1).reshape(rows, LANES)
+
+    mag = lvl * scale
+    return jnp.where(sign == 1, -mag, mag)
+
+
+# ---------------------------------------------------------------- block top-k
+def block_topk_ref(x: jax.Array, k: int, iters: int = BISECT_ITERS) -> jax.Array:
+    """Per-row top-k masking via threshold bisection; x: [nb, block] f32.
+
+    Returns x masked to (approximately, ties aside) its k largest-|.| entries
+    per row.
+    """
+    assert x.ndim == 2
+    mag = jnp.abs(x)
+    hi = mag.max(axis=1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        cnt = (mag >= mid).sum(axis=1, keepdims=True)
+        too_many = cnt > k
+        lo = jnp.where(too_many, mid, lo)
+        hi = jnp.where(too_many, hi, mid)
+    mask = mag >= hi
+    return x * mask.astype(x.dtype)
+
+
+# -------------------------------------------------------- flash attention
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Pure-jnp oracle for the flash attention kernel.
+
+    q, k, v: [BH, S, hd].  Plain materialized-softmax attention with the
+    same causal/sliding-window masking.
+    """
+    import math
+
+    hd = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqk,bsk->bqs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(q.shape[1])
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqs,bsk->bqk", p, v.astype(jnp.float32)).astype(q.dtype)

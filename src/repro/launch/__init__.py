@@ -1,0 +1,2 @@
+"""Distributed launch layer: production meshes, sharding rules, dry-run,
+train/serve drivers.  Importing this package never touches jax device state."""

@@ -1,0 +1,346 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` (XLA HloCostAnalysis) counts each ``while`` body
+ONCE — with layers executed under ``lax.scan`` (which we rely on to keep
+compile times tractable), flops/bytes/collectives inside the loop are
+undercounted by the trip count.  This module re-derives the three roofline
+inputs from the optimized HLO text, multiplying loop bodies by their
+``backend_config known_trip_count``:
+
+  * flops: dot ops (2 * prod(result) * K from the contracting dims) +
+    1 flop/element for arithmetic ops — dots dominate every assigned arch;
+  * bytes: operands + result of every top-level (post-fusion) instruction —
+    fusion internals are register/VMEM traffic, the boundaries are HBM;
+  * collective bytes: operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, by kind.
+
+All quantities are per-device (the module is the post-GSPMD per-partition
+program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+__all__ = ["Cost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+# opcodes whose results we count as 1 flop / element
+_ARITH = {
+    "add", "subtract", "multiply", "divide", "power", "exponential", "log",
+    "tanh", "rsqrt", "sqrt", "negate", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "sine", "cosine", "floor", "ceil", "abs",
+    "sign", "atan2", "remainder", "clamp", "reduce", "exponential-minus-one",
+    "log-plus-one", "logistic", "erf",
+}
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict | None = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in _COLLECTIVES}
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k]
+        return self
+
+    def scaled(self, n: float) -> "Cost":
+        return Cost(self.flops * n, self.bytes * n, {k: v * n for k, v in self.coll.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    """(elements, bytes) of a shape string; tuples are summed."""
+    elems = byts = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = re.search(r"\w+\[([\d,]*)\]", shape_str)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operand list + attrs
+
+
+def _parse_instr(line: str) -> Instr | None:
+    line = line.strip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    m = re.match(r"%?([\w.\-]+)\s*=\s*(.*)$", line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    # shape: either a tuple "( ... )" or a single token
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape, rem = rhs[: i + 1], rhs[i + 1 :].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape, rem = rhs[:sp], rhs[sp + 1 :].lstrip()
+    om = re.match(r"([\w\-]+)\((.*)$", rem)
+    if not om:
+        return None
+    return Instr(name, shape, om.group(1), om.group(2))
+
+
+def _split_computations(text: str) -> tuple[dict[str, list[Instr]], str]:
+    comps: dict[str, list[Instr]] = {}
+    entry = ""
+    current = None
+    for line in text.splitlines():
+        hm = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if hm and not line.startswith(" "):
+            current = hm.group(2)
+            comps[current] = []
+            if hm.group(1):
+                entry = current
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is not None:
+            inst = _parse_instr(line)
+            if inst:
+                comps[current].append(inst)
+    return comps, entry
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Operand refs up to the closing paren of the op's argument list."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                arglist = rest[:i]
+                break
+    else:
+        arglist = rest
+    return re.findall(r"%([\w.\-]+)", arglist)
+
+
+def _attr(rest: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _trip_count(rest: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+    return int(m.group(1)) if m else 1
+
+
+def _dot_flops(inst: Instr, shapes: dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(inst.shape)
+    ops = _operand_names(inst.rest)
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.rest)
+    if m and ops:
+        lhs_dims = _shape_dims(shapes.get(ops[0], ""))
+        for d in (int(x) for x in m.group(1).split(",") if x):
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+    return 2.0 * out_elems * k
+
+
+def analyze_hlo(text: str) -> Cost:
+    comps, entry = _split_computations(text)
+    # global name -> shape (HLO value names are module-unique post-optimization)
+    shapes: dict[str, str] = {}
+    for instrs in comps.values():
+        for inst in instrs:
+            shapes[inst.name] = inst.shape
+
+    memo: dict[str, Cost] = {}
+    fused_memo: dict[str, float] = {}
+    fusion_bytes_memo: dict[str, float] = {}
+
+    def fusion_bytes(inst: Instr, comp_name: str | None) -> float:
+        """HBM traffic of a fusion: slice-consumed parameters count only the
+        sliced region (XLA fuses dynamic-slice of the scan xs into the body
+        fusion — the full array is an *operand* but only a slice is read);
+        a dynamic-update-slice root writes only the update region."""
+        _, rb = _shape_elems_bytes(inst.shape)
+        ops = _operand_names(inst.rest)
+        if comp_name is None or comp_name not in comps:
+            return rb + sum(_shape_elems_bytes(shapes.get(o, ""))[1] for o in ops)
+        instrs = comps[comp_name]
+        # parameter index -> name, and uses
+        param_names = {}
+        for fi in instrs:
+            if fi.opcode == "parameter":
+                m = re.match(r"(\d+)", fi.rest)
+                if m:
+                    param_names[int(m.group(1))] = fi.name
+        read = 0.0
+        for idx, opnd in enumerate(ops):
+            pname = param_names.get(idx)
+            full = _shape_elems_bytes(shapes.get(opnd, ""))[1]
+            if pname is None:
+                read += full
+                continue
+            uses = [fi for fi in instrs if pname in _operand_names(fi.rest)]
+            if uses and all(u.opcode in ("dynamic-slice", "slice", "gather") for u in uses):
+                read += sum(_shape_elems_bytes(u.shape)[1] for u in uses)
+            elif uses and all(
+                u.opcode == "dynamic-update-slice" and _operand_names(u.rest)[:1] == [pname]
+                for u in uses
+            ):
+                read += 0.0  # in-place DUS destination: aliased, not read
+            else:
+                read += full
+        root = instrs[-1] if instrs else None
+        write = rb
+        if root is not None and root.opcode == "dynamic-update-slice":
+            rops = _operand_names(root.rest)
+            if len(rops) > 1:
+                write = _shape_elems_bytes(shapes.get(rops[1], ""))[1]
+        return read + write
+
+    def fused_flops(comp: str) -> float:
+        """Flops inside a fusion computation (bytes are register traffic)."""
+        if comp in fused_memo:
+            return fused_memo[comp]
+        total = 0.0
+        for inst in comps.get(comp, []):
+            if inst.opcode in ("dot", "dot-general"):
+                total += _dot_flops(inst, shapes)
+            elif inst.opcode in _ARITH:
+                e, _ = _shape_elems_bytes(inst.shape)
+                total += e
+            elif inst.opcode == "fusion":
+                sub = _attr(inst.rest, "calls")
+                if sub:
+                    total += fused_flops(sub)
+        fused_memo[comp] = total
+        return total
+
+    def cost_of(comp: str) -> Cost:
+        if comp in memo:
+            return memo[comp]
+        memo[comp] = Cost()  # break cycles defensively
+        c = Cost()
+        for inst in comps.get(comp, []):
+            op = inst.opcode
+            # ---- bytes: operands + result at top (post-fusion) level.
+            # Slicing ops only touch the sliced region, not the full operand
+            # (critical inside scan bodies, where the full stacked xs array is
+            # an operand every iteration); update ops are in-place.
+            if op in ("dynamic-slice", "gather", "slice"):
+                _, rb = _shape_elems_bytes(inst.shape)
+                c.bytes += 2.0 * rb
+            elif op == "dynamic-update-slice":
+                ops = _operand_names(inst.rest)
+                ub = _shape_elems_bytes(shapes.get(ops[1], ""))[1] if len(ops) > 1 else 0
+                c.bytes += 2.0 * ub
+            elif op == "scatter":
+                ops = _operand_names(inst.rest)
+                ub = _shape_elems_bytes(shapes.get(ops[2], ""))[1] if len(ops) > 2 else 0
+                ib = _shape_elems_bytes(shapes.get(ops[1], ""))[1] if len(ops) > 1 else 0
+                c.bytes += 2.0 * ub + ib
+            elif op == "fusion":
+                c.bytes += fusion_bytes(inst, _attr(inst.rest, "calls"))
+            elif op not in _SKIP_BYTES:
+                _, rb = _shape_elems_bytes(inst.shape)
+                ob = sum(_shape_elems_bytes(shapes.get(o, ""))[1] for o in _operand_names(inst.rest))
+                c.bytes += rb + ob
+            # ---- flops / recursion / collectives
+            if op in ("dot", "dot-general"):
+                c.flops += _dot_flops(inst, shapes)
+            elif op == "fusion":
+                sub = _attr(inst.rest, "calls")
+                if sub:
+                    c.flops += fused_flops(sub)
+            elif op == "while":
+                trip = _trip_count(inst.rest)
+                body = _attr(inst.rest, "body")
+                cond = _attr(inst.rest, "condition")
+                inner = Cost()
+                if body:
+                    inner += cost_of(body)
+                if cond:
+                    inner += cost_of(cond)
+                c += inner.scaled(trip)
+            elif op in ("call", "async-start", "custom-call"):
+                sub = _attr(inst.rest, "to_apply") or _attr(inst.rest, "called_computation")
+                if sub:
+                    c += cost_of(sub)
+            elif op == "conditional":
+                # count the most expensive branch
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", inst.rest)
+                names = re.findall(r"%([\w.\-]+)", branches[0]) if branches else []
+                tf = [_attr(inst.rest, "true_computation"), _attr(inst.rest, "false_computation")]
+                names += [n for n in tf if n]
+                if names:
+                    best = max((cost_of(n) for n in names), key=lambda x: x.flops + x.bytes, default=Cost())
+                    c += best
+            elif op in _ARITH:
+                e, _ = _shape_elems_bytes(inst.shape)
+                c.flops += e
+            kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+            if kind is not None:
+                ob = sum(_shape_elems_bytes(shapes.get(o, ""))[1] for o in _operand_names(inst.rest))
+                if ob == 0:
+                    _, ob = _shape_elems_bytes(inst.shape)
+                c.coll[kind] += ob
+        memo[comp] = c
+        return c
+
+    return cost_of(entry) if entry else Cost()

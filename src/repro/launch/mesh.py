@@ -1,0 +1,45 @@
+"""Production meshes (TPU v5e).
+
+Single pod: (data=16, model=16) = 256 chips.  Multi-pod: a leading "pod"
+axis of 2 -> 512 chips; AD-GDA nodes map to the flattened ("pod","data")
+axes so gossip's ring neighbors land on ICI within a pod and only the
+ring's two pod-boundary edges cross DCN — exactly the thin-cut regime the
+compressed gossip targets (DESIGN §3).
+
+Functions, not module constants, so importing never initializes devices.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cpu_mesh", "node_axes", "NODE_AXIS"]
+
+NODE_AXIS = "nodes"  # logical name used in PartitionSpecs for the AD-GDA node dim
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 512 if multi_pod else 256
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"production mesh needs {need} devices, found {len(devices)} — "
+            "run via repro.launch.dryrun (which forces 512 host devices) or on real hardware"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def node_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes the AD-GDA node dimension shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def num_nodes(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes.get("pod", 1) * sizes["data"])
+
+
+def make_cpu_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU smoke/integration tests on the real local devices."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,70 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline markdown table.
+
+  PYTHONPATH=src python -m repro.launch.roofline_table [--mesh 16x16] [--tag TAG]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS
+from repro.configs.shapes import SHAPES
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def load_rows(mesh: str = "16x16", tag: str = "") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, f"*_{mesh}{('_' + tag) if tag else ''}.json"))):
+        base = os.path.basename(f)
+        if not tag and base.count("_") > 2 and any(
+            base.endswith(f"_{mesh}_{t}.json") for t in ("",)
+        ):
+            pass
+        with open(f) as fh:
+            r = json.load(fh)
+        if tag and r.get("tag") != tag:
+            continue
+        if not tag and r.get("tag"):
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    dom = r["dominant"]
+    coll = sum(r["coll_bytes"].values()) / 1e9
+    temp = (r.get("mem_per_device") or {}).get("temp_bytes")
+    temp_gb = f"{temp / 2**30:.1f}" if temp else "—"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:9.1f} | "
+        f"{r['memory_s']*1e3:9.1f} | {r['collective_s']*1e3:9.1f} | **{dom}** | "
+        f"{r['useful_flops_frac']*100:5.1f}% | {coll:7.1f} | {temp_gb} |"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+
+    rows = load_rows(args.mesh, args.tag)
+    order = {get_config(a).name: i for i, a in enumerate(ARCHS)}
+    shape_order = {s: i for i, s in enumerate(SHAPES)}
+    rows.sort(key=lambda r: (order.get(r["arch"], 99), shape_order.get(r["shape"], 9)))
+
+    print(f"Mesh {args.mesh} ({512 if 'x16x16' in args.mesh and args.mesh.startswith('2') else 256} chips)"
+          + (f", variant tag: {args.tag}" if args.tag else " (paper-faithful baseline)"))
+    print("| arch | shape | compute ms | memory ms | collective ms | dominant | useful FLOPs | coll GB/dev | temp GiB/dev |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---:|")
+    for r in rows:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""PartitionSpec rules for every parameter/cache/batch pytree.
+
+Megatron-style tensor parallelism over the ``model`` axis inside each
+AD-GDA node; the node dimension (stacked leading axis of the AD-GDA state)
+shards over ``data`` (x ``pod``).  Rules are name-based on the tree path and
+check divisibility — a dim that doesn't divide the axis stays replicated.
+
+Decode caches: KV heads shard over ``model`` when divisible; MQA/GQA-small
+archs (kv < model axis) shard the cache *sequence* dim instead
+(flash-decoding layout) — that is what makes granite-20b (kv=1) fit 32k x 128.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "param_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "adgda_state_pspecs",
+    "shardings",
+]
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def _leaf_spec(names: list[str], shape: tuple[int, ...], msize: int) -> tuple:
+    """Spec for an *unstacked* model leaf (no node axis, no block axis)."""
+    name = names[-1]
+    div = lambda d: d < len(shape) and shape[d] % msize == 0 and shape[d] >= msize
+    # NOTE: uneven (padded) sharding of parameters is rejected at the pjit
+    # argument boundary, so head counts that don't divide the model axis
+    # (llama4: 40 over 16) fall back to replication — the structural remedy
+    # (TP sub-axis of 8, or context-parallel attention) is recorded in
+    # EXPERIMENTS §Perf C3.
+
+    if name == "table":  # embedding [V, d]: shard vocab
+        return ("model", None) if div(0) else (None, None)
+    if name == "wq":
+        return (None, "model", None) if div(1) else (None, None, None)
+    if name in ("wk", "wv"):
+        return (None, "model", None) if div(1) else (None, None, None)
+    if name == "wo":
+        return ("model", None, None) if div(0) else (None, None, None)
+    if name in ("bq", "bk", "bv"):
+        return ("model", None) if div(0) else (None, None)
+    if name in ("w_gate", "w_up"):
+        if len(shape) == 3:  # MoE experts [E, d, f]: expert parallelism
+            return ("model", None, None) if div(0) else (None, None, "model" if shape[2] % msize == 0 else None)
+        return (None, "model") if div(1) else (None, None)
+    if name == "w_down":
+        if len(shape) == 3:
+            return ("model", None, None) if div(0) else (None, "model" if shape[1] % msize == 0 else None, None)
+        return ("model", None) if div(0) else (None, None)
+    if name == "w1":
+        return (None, "model") if div(1) else (None, None)
+    if name == "w2":
+        return ("model", None) if div(0) else (None, None)
+    if name == "b1":
+        return ("model",) if div(0) else (None,)
+    if name == "in_proj":  # mamba2 [d, 2di+2N+H]: column-parallel
+        return (None, "model") if div(1) else (None, None)
+    if name == "out_proj":
+        return ("model", None) if div(0) else (None, None)
+    if name in ("w_gate_branch", "w_in", "w_a", "w_x"):
+        return (None, "model") if div(1) else (None, None)
+    if name == "w_out":
+        return ("model", None) if div(0) else (None, None)
+    # router, norms, biases, conv weights, SSM scalars: replicate
+    return (None,) * len(shape)
+
+
+def param_pspecs(params: Any, mesh: Mesh, *, node_axes: tuple[str, ...] = ()) -> Any:
+    """PartitionSpec tree mirroring ``params``.
+
+    ``node_axes``: mesh axes of a leading stacked AD-GDA node dimension
+    (e.g. ("data",) or ("pod", "data")) — prepended to every leaf spec.
+    Stacked pattern-block leaves (under "blocks"/"encoder") get a leading
+    ``None`` for the repeat dimension.
+    """
+    msize = _axis_size(mesh, "model")
+    lead: tuple = (node_axes,) if node_axes else ()
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        drop = len(lead)
+        block = ("blocks" in names) or ("encoder" in names and "final_norm" not in names)
+        drop += 1 if block else 0
+        inner = _leaf_spec(names, shape[drop:], msize)
+        full = lead + ((None,) if block else ()) + tuple(inner)
+        return P(*full)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_pspecs(batch: Any, mesh: Mesh, *, lead_axes: tuple[str, ...] = ("data",)) -> Any:
+    """Token/frame/patch batches: shard the leading (node or batch) dim over
+    ``lead_axes`` when divisible, else replicate."""
+    lsize = 1
+    for a in lead_axes:
+        lsize *= _axis_size(mesh, a)
+
+    def spec_for(path, leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % lsize == 0 and leaf.shape[0] >= lsize:
+            return P(lead_axes, *(None,) * (leaf.ndim - 1))
+        return P(*(None,) * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def cache_pspecs(cache: Any, mesh: Mesh, batch: int, *, lead_axes: tuple[str, ...] = ("data",)) -> Any:
+    """Decode-cache specs: batch over ``data`` (x ``pod``); heads over
+    ``model`` when divisible, else the sequence dim (flash-decoding layout)."""
+    msize = _axis_size(mesh, "model")
+    dsize = 1
+    for a in lead_axes:
+        dsize *= _axis_size(mesh, a)
+    batch_ax = lead_axes if batch % dsize == 0 and batch >= dsize else None
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        block = "blocks" in names
+        inner = shape[1:] if block else shape
+        lead = (None,) if block else ()
+        name = names[-1]
+        if name in ("k", "v") and len(inner) == 4:
+            b, s, kv, hd = inner
+            if kv % msize == 0 and kv >= msize:
+                spec = (batch_ax, None, "model", None)
+            elif s % msize == 0 and s >= msize:
+                spec = (batch_ax, "model", None, None)  # seq-sharded (MQA)
+            else:
+                spec = (batch_ax, None, None, None)
+        elif name == "ssm" and len(inner) == 4:  # [B, H, P, N]
+            b, h, p_, n = inner
+            spec = (batch_ax, "model" if h % msize == 0 and h >= msize else None, None, None)
+        elif name == "conv" and len(inner) == 3:  # [B, W, C]
+            spec = (batch_ax, None, "model" if inner[2] % msize == 0 else None)
+        elif name == "h" and len(inner) == 2:  # rglru state [B, dr]
+            spec = (batch_ax, "model" if inner[1] % msize == 0 else None)
+        elif len(inner) == 4 and names[-2] == "cross_kv" or (len(inner) == 4 and "cross_kv" in names):
+            b, s, kv, hd = inner
+            spec = (batch_ax, None, "model" if kv % msize == 0 and kv >= msize else None, None)
+        else:
+            spec = (batch_ax,) + (None,) * (len(inner) - 1) if inner else ()
+        return P(*(lead + tuple(spec)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def adgda_state_pspecs(state: Any, params_spec: Any, mesh: Mesh, node_axes: tuple[str, ...]):
+    """Spec tree for an ADGDAState: theta/hat/s/momentum like params (with
+    node axis), lam [m, m] sharded on the node dim, scalars replicated."""
+    from repro.core.adgda import ADGDAState
+    from repro.core.gossip import CHOCOState
+
+    return ADGDAState(
+        step=P(),
+        theta=params_spec,
+        lam=P(node_axes, None),
+        choco=CHOCOState(theta_hat=params_spec, s=params_spec),
+        momentum=params_spec if state.momentum != () else (),
+        theta_avg=(
+            param_pspecs(state.theta_avg, mesh) if state.theta_avg != () else ()
+        ),  # no node axis
+        rng=P(),
+    )
+
+
+def shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,84 @@
+"""Step-function builders: the glue between the model zoo and AD-GDA.
+
+``make_trainer(cfg, num_nodes, ...)`` wires an architecture's ``lm_loss``
+into the AD-GDA trainer (paper Algorithm 1).  ``make_prefill_step`` /
+``make_decode_step`` build the serving entry points on the *consensus*
+model (no node axis).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adgda import ADGDA, ADGDAConfig
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+__all__ = ["make_trainer", "make_prefill_step", "make_decode_step", "abstract_params"]
+
+
+def make_trainer(
+    cfg: ModelConfig,
+    num_nodes: int,
+    *,
+    topology: str = "ring",
+    compressor: str = "q4b",
+    alpha: float = 0.01,
+    eta_theta: float = 0.1,
+    eta_lambda: float = 0.01,
+    track_average: bool = False,
+    packed_gossip: bool = True,
+    robust: bool = True,
+    microbatches: int = 1,
+    grad_accum_dtype: str = "float32",
+    spmd_axis_name=None,
+) -> ADGDA:
+    def loss_fn(params, batch, rng):
+        return T.lm_loss(params, batch, cfg, rng)
+
+    adgda_cfg = ADGDAConfig(
+        num_nodes=num_nodes,
+        topology=topology,
+        compressor=compressor,
+        alpha=alpha,
+        eta_theta=eta_theta,
+        eta_lambda=eta_lambda,
+        track_average=track_average,
+        packed_gossip=packed_gossip,
+        robust=robust,
+        microbatches=microbatches,
+        grad_accum_dtype=grad_accum_dtype,
+        spmd_axis_name=spmd_axis_name,
+    )
+    return ADGDA(adgda_cfg, loss_fn)
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return T.prefill(params, batch, cfg, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, tokens, pos):
+        return T.decode_step(params, tokens, cache, pos, cfg)
+
+    return decode_step
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the model parameters (no allocation)."""
+    return jax.eval_shape(lambda k: T.init_model(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, length: int):
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, length))
+
+
+def abstract_adgda_state(trainer: ADGDA, cfg: ModelConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(trainer.init, params, jax.random.PRNGKey(0))

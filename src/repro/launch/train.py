@@ -1,0 +1,107 @@
+"""End-to-end AD-GDA training driver.
+
+Runs the paper's Algorithm 1 on any assigned architecture with the synthetic
+heterogeneous LM pipeline.  On real hardware pass ``--mesh prod`` /
+``--mesh multipod``; on this CPU container use the default local mesh with a
+reduced config (``--reduced``), which is what ``examples/train_transformer.py``
+demonstrates.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --steps 100 --nodes 4 --compressor q4b --topology ring
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save
+from repro.configs import get_config
+from repro.data import node_token_stream
+from repro.launch import steps as st
+from repro.models import transformer as T
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", help="2-layer smoke-scale variant (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--batch-per-node", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--compressor", default="q4b")
+    ap.add_argument("--alpha", type=float, default=0.01)
+    ap.add_argument("--eta-theta", type=float, default=0.05)
+    ap.add_argument("--eta-lambda", type=float, default=0.01)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None, help="path prefix for npz checkpoints")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    seq = args.seq
+    if cfg.ssm_state:
+        seq = max(seq, cfg.ssm_chunk)
+        seq -= seq % cfg.ssm_chunk
+
+    trainer = st.make_trainer(
+        cfg,
+        args.nodes,
+        topology=args.topology,
+        compressor=args.compressor,
+        alpha=args.alpha,
+        eta_theta=args.eta_theta,
+        eta_lambda=args.eta_lambda,
+        track_average=False,
+    )
+
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_model(key, cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params:,} nodes={args.nodes} "
+          f"compressor={args.compressor} topology={args.topology}")
+
+    state = trainer.init(params, jax.random.PRNGKey(args.seed + 1))
+    stream = node_token_stream(args.nodes, args.batch_per_node, seq, cfg.vocab_size, seed=args.seed)
+
+    def make_batch(tokens):
+        batch = {"tokens": jnp.asarray(tokens)}
+        if cfg.is_encdec:
+            batch["frames"] = jnp.zeros(
+                (args.nodes, args.batch_per_node, cfg.encoder_context, cfg.d_model), jnp.float32
+            )
+        if cfg.num_patches > 0:
+            batch["patches"] = jnp.zeros(
+                (args.nodes, args.batch_per_node, cfg.num_patches, cfg.d_model), jnp.float32
+            )
+        return batch
+
+    t0 = time.time()
+    for step in range(args.steps):
+        state, aux = trainer.step(state, make_batch(next(stream)))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            losses = np.asarray(aux["losses"])
+            print(
+                f"step {step:5d}  worst={losses.max():.4f}  mean={losses.mean():.4f}  "
+                f"consensus={float(aux['consensus_err']):.3e}  "
+                f"lambda_max={float(aux['lambda_mean'].max()):.3f}  "
+                f"bits/round={trainer.bits_per_round(state):.3e}  "
+                f"({(time.time() - t0) / (step + 1):.2f}s/step)"
+            )
+        if args.checkpoint and step and step % 100 == 0:
+            save(args.checkpoint, trainer.network_mean(state), step=step)
+
+    if args.checkpoint:
+        fname = save(args.checkpoint, trainer.network_mean(state), step=args.steps)
+        print(f"saved consensus model to {fname}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,319 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (train/prefill/decode),
+MLPs.  Functional style: ``init_*`` builds param dicts, ``apply_*`` consumes
+them.  Shape convention: activations [batch, seq, d_model]; caches
+[batch, seq, kv_heads, head_dim].
+
+Scale-critical choices:
+* attention is query-chunked (lax.scan) above ``CHUNK_THRESHOLD`` so 32k+
+  prefill never materializes a [S, S] score matrix (flash-style at XLA level);
+* sliding-window decode caches are ring buffers of window size (sub-quadratic
+  long-context variant for dense archs);
+* weights are stored with head/ffn dims explicit so PartitionSpecs can target
+  them (see repro/launch/sharding.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+CHUNK_THRESHOLD = 4096
+QUERY_CHUNK = 1024
+
+# Context-parallel attention (EXPERIMENTS §Perf C4): when the head count does
+# not divide the model axis (llama4: 40 heads / 16 ranks), QKV projections
+# fall back to replication and every rank computes all heads' scores.  Setting
+# this to a mesh axis name shards the *query-sequence* dim of the attention
+# inner loop instead — requires the caller's vmap to pass spmd_axis_name so
+# the constraint applies under the AD-GDA node vmap.  Off by default.
+SEQ_SHARD_AXIS: str | None = None
+
+
+def _seq_shard(x, dim: int = 1):
+    """Best-effort sharding constraint of dim `dim` over SEQ_SHARD_AXIS."""
+    if SEQ_SHARD_AXIS is None:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        spec = [None] * x.ndim
+        spec[dim] = SEQ_SHARD_AXIS
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------- init
+def dense_init(key, fan_in, shape, dtype):
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), cfg.activation_dtype), "bias": jnp.zeros((d,), cfg.activation_dtype)}
+    return {"scale": jnp.ones((d,), cfg.activation_dtype)}
+
+
+def apply_norm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in params:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        ms = (xf**2).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] or [S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def init_attention(key, cfg, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (d, H, hd), dt),
+        "wk": dense_init(ks[1], d, (d, KV, hd), dt),
+        "wv": dense_init(ks[2], d, (d, KV, hd), dt),
+        "wo": dense_init(ks[3], H * hd, (H, hd, d), dt),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((KV, hd), dt)
+        p["bv"] = jnp.zeros((KV, hd), dt)
+        p["bo"] = jnp.zeros((d,), dt)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _qk_normalize(v, scale):
+    vf = v.astype(jnp.float32)
+    ms = (vf**2).mean(-1, keepdims=True)
+    return (vf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(v.dtype)
+
+
+def _project_qkv(params, x, kv_src, cfg, positions, kv_positions, cross):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if "q_norm" in params:
+        q = _qk_normalize(q, params["q_norm"])
+        k = _qk_normalize(k, params["k_norm"])
+    if not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """[B,S,KV,hd] -> [B,S,H,hd] by repeating groups."""
+    kv = k.shape[2]
+    if kv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kv, axis=2)
+
+
+def _attend(q, k, v, mask, scale):
+    """q:[B,Sq,H,hd] k,v:[B,Sk,H,hd] mask:[B?,Sq,Sk] or None -> [B,Sq,H,hd]."""
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+
+def apply_attention(
+    params,
+    x: jax.Array,
+    cfg,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_src: jax.Array | None = None,
+    positions: jax.Array | None = None,
+) -> jax.Array:
+    """Full (train/prefill) attention; query-chunked beyond CHUNK_THRESHOLD."""
+    B, S, _ = x.shape
+    cross = kv_src is not None
+    kv_in = kv_src if cross else x
+    Sk = kv_in.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+    kv_positions = jnp.arange(Sk)
+    q, k, v = _project_qkv(params, x, kv_in, cfg, positions, kv_positions, cross)
+    k = _repeat_kv(k, cfg.num_heads)
+    v = _repeat_kv(v, cfg.num_heads)
+    scale = 1.0 / math.sqrt(cfg.hd)
+
+    def mask_for(q_pos):
+        # q_pos: [Sq] absolute query positions
+        if cross or (not causal and window is None):
+            return None
+        kpos = jnp.arange(Sk)
+        m = jnp.ones((q_pos.shape[0], Sk), bool)
+        if causal:
+            m &= q_pos[:, None] >= kpos[None, :]
+        if window is not None:
+            m &= q_pos[:, None] - kpos[None, :] < window
+        return jnp.broadcast_to(m[None], (B, q_pos.shape[0], Sk))
+
+    if S <= CHUNK_THRESHOLD:
+        q = _seq_shard(q)  # context parallelism (no-op unless enabled)
+        out = _attend(q, k, v, mask_for(jnp.arange(S)), scale)
+    else:
+        nchunk = S // QUERY_CHUNK
+        assert S % QUERY_CHUNK == 0, "long-seq prefill requires seq % QUERY_CHUNK == 0"
+        qs = q.reshape(B, nchunk, QUERY_CHUNK, cfg.num_heads, cfg.hd).transpose(1, 0, 2, 3, 4)
+
+        def body(c, qc):
+            qpos = c * QUERY_CHUNK + jnp.arange(QUERY_CHUNK)
+            qc = _seq_shard(qc)  # context parallelism within the chunk
+            o = _attend(qc, k, v, mask_for(qpos), scale)
+            return c + 1, o
+
+        _, outs = jax.lax.scan(body, 0, qs)
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.num_heads, cfg.hd)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if "bo" in params:
+        y = y + params["bo"]
+    return y
+
+
+# --------------------------------------------------------------- decode path
+def init_attn_cache(cfg, batch: int, length: int, dtype=None):
+    dt = dtype or cfg.activation_dtype
+    return {
+        "k": jnp.zeros((batch, length, cfg.num_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((batch, length, cfg.num_kv_heads, cfg.hd), dt),
+    }
+
+
+def decode_attention(
+    params,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    cfg,
+    *,
+    window: int | None = None,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: [B, 1, d]; pos: scalar int32 (tokens so far).
+
+    Self-attention path updates the cache (ring buffer when ``window``).
+    ``cross_kv`` (whisper) attends precomputed encoder K/V with no update.
+    """
+    B = x.shape[0]
+    scale = 1.0 / math.sqrt(cfg.hd)
+
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        if "bq" in params:
+            q = q + params["bq"]
+        k, v = cross_kv
+        k = _repeat_kv(k, cfg.num_heads)
+        v = _repeat_kv(v, cfg.num_heads)
+        out = _attend(q, k, v, None, scale)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        if "bo" in params:
+            y = y + params["bo"]
+        return y, cache
+
+    length = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, x, cfg, positions, positions[:, 0:1], cross=False)
+
+    slot = pos % length if window is not None else pos  # ring buffer for windows
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    new_cache = {"k": ck, "v": cv}
+
+    kk = _repeat_kv(ck.astype(x.dtype), cfg.num_heads)
+    vv = _repeat_kv(cv.astype(x.dtype), cfg.num_heads)
+    idx = jnp.arange(length)
+    if window is not None:
+        # ring buffer slot i holds absolute position: valid iff within window
+        # absolute pos of slot i: the latest write to slot i <= pos
+        age = (slot - idx) % length  # 0 = newest
+        valid = age < jnp.minimum(pos + 1, length)
+    else:
+        valid = idx <= pos
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, length))
+    out = _attend(q, kk, vv, mask, scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if "bo" in params:
+        y = y + params["bo"]
+    return y, new_cache
+
+
+# ----------------------------------------------------------------------- mlp
+def init_mlp(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, (d, f), dt),
+            "w_up": dense_init(ks[1], d, (d, f), dt),
+            "w_down": dense_init(ks[2], f, (f, d), dt),
+        }
+    p = {"w1": dense_init(ks[0], d, (d, f), dt), "w2": dense_init(ks[1], f, (f, d), dt)}
+    if cfg.use_bias:
+        p["b1"] = jnp.zeros((f,), dt)
+        p["b2"] = jnp.zeros((d,), dt)
+    return p
+
+
+def apply_mlp(params, x):
+    if "w_gate" in params:
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        return h @ params["w_down"]
+    h = x @ params["w1"]
+    if "b1" in params:
+        h = h + params["b1"]
+    h = jax.nn.gelu(h)
+    y = h @ params["w2"]
+    if "b2" in params:
+        y = y + params["b2"]
+    return y
+
+
+# ----------------------------------------------------------------- embedding
+def init_embedding(key, cfg):
+    return {"table": dense_init(key, cfg.d_model, (cfg.vocab_size, cfg.d_model), cfg.activation_dtype)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    return jnp.einsum("bsd,vd->bsv", x, params["table"])

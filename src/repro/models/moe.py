@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (expert parallel).
+
+Token -> expert routing is top-k softmax; dispatch is the static-shape
+sort/scatter scheme (no [T, E, C] one-hot einsum, whose FLOPs would dwarf the
+expert matmuls):
+
+  1. top-k experts per token, gates renormalized;
+  2. assignments sorted by expert id (stable argsort);
+  3. position-in-expert via cumulative counts; tokens beyond the capacity
+     C = ceil(cf * T * k / E) are dropped (GShard-style);
+  4. tokens gathered into an [E, C, d] buffer; experts run as one batched
+     einsum with weights [E, d, f] (expert dim shardable over `model`);
+  5. results scattered back, gate-weighted, plus optional shared experts.
+
+The router load-balance auxiliary loss (Switch/GShard form) is returned so
+the trainer can add ``router_aux_weight * aux``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mlp, dense_init, init_mlp
+
+
+def init_moe(key, cfg):
+    d, f, E = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], d, (E, d, f), dt),
+        "w_up": dense_init(ks[2], d, (E, d, f), dt),
+        "w_down": dense_init(ks[3], f, (E, f, d), dt),
+    }
+    if cfg.num_shared_experts > 0:
+        shared_f = f * cfg.num_shared_experts
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sks[0], d, (d, shared_f), dt),
+            "w_up": dense_init(sks[1], d, (d, shared_f), dt),
+            "w_down": dense_init(sks[2], shared_f, (shared_f, d), dt),
+        }
+    return p
+
+
+def capacity_for(tokens: int, cfg) -> int:
+    c = int(math.ceil(cfg.capacity_factor * tokens * cfg.experts_per_token / cfg.num_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def apply_moe(params, x: jax.Array, cfg):
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    C = capacity_for(T, cfg)
+    xt = x.reshape(T, d)
+
+    # --- routing (fp32 for numerics) -----------------------------------
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # [T, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balance aux (Switch eq. 4) --------------------------------
+    me = probs.mean(0)  # mean router prob per expert
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch (gather form) --------------------------------
+    # Expert-parallel sharding note: the [E, C, d] buffer is built by a
+    # *gather* from the (replicated) token table, indexed by a slot->token
+    # map.  With the expert weights sharded over `model` on E, GSPMD keeps
+    # the gather local to each expert shard; the combine is a scatter-add of
+    # shard-local partials followed by one [T, d] all-reduce.  (The previous
+    # scatter-into-sharded-buffer formulation forced GSPMD to replicate the
+    # full [E*C, d] buffer on every shard — see EXPERIMENTS §Perf.)
+    flat_e = expert_idx.reshape(T * K)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_g = gate_vals.reshape(T * K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts
+
+    # slot (e, c) <- sorted assignment starts[e] + c (valid while c < counts[e])
+    slot_src = starts[:, None] + jnp.arange(C)[None, :]  # [E, C]
+    valid = jnp.arange(C)[None, :] < jnp.minimum(counts, C)[:, None]
+    slot_src = jnp.where(valid, slot_src, T * K)  # sentinel -> pad row
+    st_pad = jnp.concatenate([st, jnp.array([T], st.dtype)])
+    sg_pad = jnp.concatenate([sg, jnp.zeros((1,), sg.dtype)])
+    src_tok = st_pad[slot_src]  # [E, C] token index feeding each slot
+    gate_slot = jnp.where(valid, sg_pad[slot_src], 0.0)  # [E, C]
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), x.dtype)], axis=0)
+    eb = xt_pad[src_tok]  # [E, C, d] — local gather per expert shard
+
+    # --- batched expert FFN (E shardable over `model`) -------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", eb, params["w_up"])
+    yb = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    # --- combine: shard-local scatter-add of gated outputs + all-reduce ---
+    weighted = yb * gate_slot[..., None].astype(yb.dtype)
+    y = jnp.zeros((T + 1, d), x.dtype).at[src_tok.reshape(-1)].add(
+        weighted.reshape(E * C, d)
+    )[:T]
+
+    if "shared" in params:
+        y = y + apply_mlp(params["shared"], xt)
+    return y.reshape(B, S, d), aux

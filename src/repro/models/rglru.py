@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Griffin's recurrent block: two branches — a GeLU gate branch and a
+(causal conv -> RG-LRU) branch — multiplied and projected out.  The RG-LRU
+is a gated linear recurrence
+
+    r_t = sigmoid(W_a u_t);  i_t = sigmoid(W_x u_t)
+    log a_t = -c * softplus(Lambda) * r_t            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ u_t)
+
+evaluated in parallel over the sequence with ``jax.lax.associative_scan``
+(first-order linear recurrences compose associatively), and as an O(1) update
+in decode — hence native long_500k support for the hybrid arch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+C_FACTOR = 8.0
+CONV_WIDTH = 4
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    dr = cfg.rglru_width or cfg.d_model
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate_branch": dense_init(ks[0], d, (d, dr), dt),
+        "w_in": dense_init(ks[1], d, (d, dr), dt),
+        "conv_w": dense_init(ks[2], CONV_WIDTH, (CONV_WIDTH, dr), dt),
+        "conv_b": jnp.zeros((dr,), dt),
+        "w_a": dense_init(ks[3], dr, (dr, dr), dt),
+        "w_x": dense_init(ks[4], dr, (dr, dr), dt),
+        "lamb": jnp.full((dr,), 0.65, jnp.float32),  # softplus -> a ~ exp(-8*1.05*r)
+        "w_out": dense_init(ks[5], dr, (dr, d), dt),
+    }
+
+
+def _causal_conv(u, w, b):
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(pad[:, i : i + u.shape[1], :] * w[i] for i in range(W)) + b
+
+
+def _gates(params, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ params["w_x"].astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(params["lamb"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(params, u: jax.Array, init_state=None):
+    """u: [B, S, dr] -> (h [B, S, dr], final_state [B, dr]) via associative scan."""
+    a, b = _gates(params, u)  # [B, S, dr] f32
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    acc_a, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if init_state is not None:
+        h = h + acc_a * init_state[:, None, :].astype(jnp.float32)
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def apply_rglru(params, x: jax.Array, cfg, init_state=None, return_state: bool = False):
+    """Griffin recurrent block. x: [B, S, d] -> [B, S, d]."""
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    conv_in = x @ params["w_in"]
+    u = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    h0 = init_state["h"] if init_state is not None else None
+    h, final = rglru_scan(params, u, init_state=h0)
+    out = (gate * h) @ params["w_out"]
+    if not return_state:
+        return out
+    tail = jax.lax.dynamic_slice_in_dim(conv_in, x.shape[1] - (CONV_WIDTH - 1), CONV_WIDTH - 1, axis=1)
+    return out, {"h": final, "conv": tail}
+
+
+# ------------------------------------------------------------------- decode
+def init_rglru_cache(cfg, batch: int):
+    dr = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, dr), cfg.activation_dtype),
+    }
+
+
+def decode_rglru(params, x: jax.Array, cache: dict, cfg):
+    """x: [B, 1, d] -> (y [B, 1, d], cache)."""
+    gate = jax.nn.gelu(x[:, 0] @ params["w_gate_branch"])  # [B, dr]
+    cin = x[:, 0] @ params["w_in"]
+    window = jnp.concatenate([cache["conv"], cin[:, None, :]], axis=1)
+    u = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    a, b = _gates(params, u[:, None, :])
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = (gate * h.astype(x.dtype)) @ params["w_out"]
+    return out[:, None, :], {"h": h, "conv": window[:, 1:, :]}

@@ -1,0 +1,178 @@
+"""Mamba2 — state-space duality (SSD) mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of length L; within a chunk the recurrence is evaluated as a masked
+attention-like matmul (MXU-friendly), states are passed between chunks with a
+lax.scan.  Decode is the O(1)-state recurrent step — this is why mamba2 runs
+the long_500k shape natively.
+
+Layout: x [B, S, d]; heads H = expand*d / head_dim P; shared B/C of state
+size N (n_groups = 1).  The recurrence per head h:
+
+    state_t = exp(dt_t * A_h) * state_{t-1} + dt_t * x_t ⊗ B_t
+    y_t     = C_t · state_t + D_h * x_t
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = di + 2 * N
+    return di, H, N, conv_ch
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di, H, N, conv_ch = dims(cfg)
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": dense_init(ks[0], d, (d, 2 * di + 2 * N + H), dt),
+        "conv_w": dense_init(ks[1], cfg.ssm_conv_width, (cfg.ssm_conv_width, conv_ch), dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),  # softplus^-1(1)
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[2], di, (di, d), dt),
+    }
+
+
+def _split_proj(proj, cfg):
+    di, H, N, _ = dims(cfg)
+    z = proj[..., :di]
+    x = proj[..., di : 2 * di]
+    b = proj[..., 2 * di : 2 * di + N]
+    c = proj[..., 2 * di + N : 2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N :]
+    return z, x, b, c, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d; u: [B, S, C], w: [W, C]."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + u.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    ms = (gf**2).mean(-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def apply_mamba2(params, x: jax.Array, cfg) -> jax.Array:
+    """Full-sequence (train/prefill) chunked SSD.  x: [B, S, d] -> [B, S, d]."""
+    y, _ = mamba2_scan(params, x, cfg, return_state=False)
+    return y
+
+
+def mamba2_scan(params, x: jax.Array, cfg, return_state: bool = True, init_state=None):
+    B, S, d = x.shape
+    di, H, N, conv_ch = dims(cfg)
+    P = cfg.ssm_head_dim
+    L = min(cfg.ssm_chunk, S)
+    assert S % L == 0, f"seq {S} must be divisible by ssm chunk {L}"
+    nc = S // L
+
+    proj = x @ params["in_proj"]
+    z, xs, bs, cs, dts = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xs, bs, cs], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"]))
+    xs, bs, cs = conv_out[..., :di], conv_out[..., di : di + N], conv_out[..., di + N :]
+
+    xh = xs.reshape(B, S, H, P).astype(jnp.float32)
+    bs = bs.astype(jnp.float32)
+    cs = cs.astype(jnp.float32)
+    dt = jax.nn.softplus(dts.astype(jnp.float32) + params["dt_bias"])  # [B, S, H]
+    A = -jnp.exp(params["A_log"])  # [H], negative
+
+    # chunk views: [nc, B, L, ...]
+    def chunked(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).swapaxes(0, 1)
+
+    xh_c, b_c, c_c, dt_c = chunked(xh), chunked(bs), chunked(cs), chunked(dt)
+
+    tril = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(state, inp):
+        xc, bc, cc, dtc = inp  # [B,L,H,P], [B,L,N], [B,L,N], [B,L,H]
+        dA = dtc * A  # [B,L,H] (<= 0)
+        cum = jnp.cumsum(dA, axis=1)  # inclusive
+        # intra-chunk: y_t += sum_{s<=t} exp(cum_t - cum_s) (C_t.B_s) dt_s x_s
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # [B,L,L,H]
+        decay = jnp.exp(jnp.where(tril[None, :, :, None], diff, -jnp.inf))
+        cb = jnp.einsum("bln,bsn->bls", cc, bc)
+        m = cb[..., None] * decay * dtc[:, None, :, :]  # [B,l,s,H]
+        y = jnp.einsum("blsh,bshp->blhp", m, xc)
+        # inter-chunk: contribution of the incoming state
+        y = y + jnp.exp(cum)[..., None] * jnp.einsum("bln,bhpn->blhp", cc, state)
+        # state to pass on
+        to_end = jnp.exp(cum[:, -1:, :] - cum) * dtc  # [B,L,H]
+        state = jnp.exp(cum[:, -1, :])[:, :, None, None] * state + jnp.einsum(
+            "blh,blhp,bln->bhpn", to_end, xc, bc
+        )
+        y = y + params["D"][None, None, :, None] * xc
+        return state, y
+
+    state0 = init_state if init_state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+    final_state, ys = jax.lax.scan(body, state0, (xh_c, b_c, c_c, dt_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+
+    out = _gated_norm(y, z, params["norm_scale"]) @ params["out_proj"]
+    if not return_state:
+        return out, None
+    # conv tail for seamless decode continuation
+    conv_tail = jax.lax.dynamic_slice_in_dim(conv_in, S - (cfg.ssm_conv_width - 1), cfg.ssm_conv_width - 1, axis=1)
+    return out, {"ssm": final_state, "conv": conv_tail}
+
+
+# ----------------------------------------------------------------- decode
+def init_mamba2_cache(cfg, batch: int):
+    di, H, N, conv_ch = dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), cfg.activation_dtype),
+    }
+
+
+def decode_mamba2(params, x: jax.Array, cache: dict, cfg):
+    """One-token step. x: [B, 1, d] -> (y [B, 1, d], cache)."""
+    B = x.shape[0]
+    di, H, N, conv_ch = dims(cfg)
+    P = cfg.ssm_head_dim
+
+    proj = (x @ params["in_proj"])[:, 0]  # [B, ...]
+    z, xs, bs, cs, dts = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xs, bs, cs], axis=-1)  # [B, conv_ch]
+    window = jnp.concatenate([cache["conv"], conv_in[:, None, :]], axis=1)  # [B, W, C]
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"])
+    new_conv = window[:, 1:, :]
+
+    xs, bs, cs = conv_out[:, :di], conv_out[:, di : di + N], conv_out[:, di + N :]
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dts.astype(jnp.float32) + params["dt_bias"])  # [B, H]
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * A)  # [B, H]
+
+    state = cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cs.astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+
+    out = _gated_norm(y, z, params["norm_scale"]) @ params["out_proj"]
+    return out[:, None, :], {"ssm": state, "conv": new_conv}

@@ -1,0 +1,567 @@
+"""Full model assembly for every assigned architecture family.
+
+The model is a decoder stack whose per-layer sequence mixer is selected by
+``cfg.layer_pattern`` (attn / local_attn / mamba2 / rglru) and whose FFN is
+dense or MoE.  Layers are grouped into **repeated blocks of one pattern
+period** and the repeats are executed with ``jax.lax.scan`` over *stacked*
+parameters — this keeps the lowered HLO O(pattern) instead of O(num_layers),
+which is what makes the 80 (arch x shape x mesh) dry-run compiles tractable
+and is also the production-sane choice (MaxText does the same).
+
+Layout:
+
+    params = {
+      "embed": {...},
+      "prefix":  [layer, ...]          # first_dense_layers (unrolled)
+      "blocks":  (stacked_layer_0, ..., stacked_layer_{p-1})
+                                       # leaves [n_blocks, ...] per pattern pos
+      "suffix":  [layer, ...]          # num_layers % p remainder (unrolled)
+      "final_norm": {...},
+      "encoder": {...}                 # whisper only
+    }
+
+Three entry points per model, matching the assigned input shapes:
+
+    forward(params, batch, cfg)                  -> logits       (train_4k)
+    prefill(params, batch, cfg, cache_len)       -> logits, cache (prefill_32k)
+    decode_step(params, tokens, cache, pos, cfg) -> logits, cache (decode_*)
+
+[audio]/[vlm] carve-out: the modality frontend is a stub — ``batch`` carries
+precomputed frame/patch *embeddings* ([B, T, d_model]) next to the tokens.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_attention,
+    apply_mlp,
+    apply_norm,
+    decode_attention,
+    embed,
+    init_attention,
+    init_attn_cache,
+    init_embedding,
+    init_mlp,
+    init_norm,
+    unembed,
+)
+from repro.models.moe import apply_moe, init_moe
+from repro.models.rglru import (
+    apply_rglru,
+    decode_rglru,
+    init_rglru,
+    init_rglru_cache,
+)
+from repro.models.ssm import (
+    decode_mamba2,
+    init_mamba2,
+    init_mamba2_cache,
+    mamba2_scan,
+)
+
+__all__ = [
+    "init_model",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "lm_loss",
+    "param_count",
+    "active_param_count",
+]
+
+
+# ---------------------------------------------------------------- structure
+def _pattern_split(cfg: ModelConfig) -> tuple[int, int, int]:
+    """-> (prefix_layers, n_blocks, suffix_layers) with p = len(pattern)."""
+    p = len(cfg.layer_pattern)
+    body = cfg.num_layers - cfg.first_dense_layers
+    return cfg.first_dense_layers, body // p, body % p
+
+
+def _layer_kind(cfg: ModelConfig, global_idx: int) -> str:
+    return cfg.mixer_for_layer(global_idx)
+
+
+# -------------------------------------------------------------------- init
+def _init_layer(key, cfg: ModelConfig, kind: str, moe: bool, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"norm1": init_norm(cfg)}
+    if kind in ("attn", "local_attn"):
+        p["mixer"] = init_attention(ks[0], cfg)
+    elif kind == "mamba2":
+        p["mixer"] = init_mamba2(ks[0], cfg)
+    elif kind == "rglru":
+        p["mixer"] = init_rglru(ks[0], cfg)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown mixer kind {kind!r}")
+    if cross:
+        p["norm_cross"] = init_norm(cfg)
+        p["cross"] = init_attention(ks[2], cfg, cross=True)
+    if cfg.d_ff > 0 or moe:
+        p["norm2"] = init_norm(cfg)
+        p["ffn"] = init_moe(ks[1], cfg) if moe else init_mlp(ks[1], cfg)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_model(key, cfg: ModelConfig):
+    pre, nb, suf = _pattern_split(cfg)
+    p_len = len(cfg.layer_pattern)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    cross = cfg.is_encdec
+
+    params: dict[str, Any] = {"embed": init_embedding(keys[-1], cfg)}
+
+    li = 0
+    prefix = []
+    for _ in range(pre):
+        prefix.append(
+            _init_layer(keys[li], cfg, _layer_kind(cfg, li), moe=False, cross=cross)
+        )
+        li += 1
+    if prefix:
+        params["prefix"] = prefix
+
+    blocks = []
+    for pos in range(p_len):
+        per_pos = []
+        for b in range(nb):
+            gidx = pre + b * p_len + pos
+            per_pos.append(
+                _init_layer(
+                    keys[pre + pos * nb + b],
+                    cfg,
+                    _layer_kind(cfg, gidx),
+                    moe=cfg.ffn_is_moe(gidx),
+                    cross=cross,
+                )
+            )
+        blocks.append(_stack(per_pos) if per_pos else None)
+    if nb > 0:
+        params["blocks"] = blocks
+
+    suffix = []
+    for s in range(suf):
+        gidx = pre + nb * p_len + s
+        suffix.append(
+            _init_layer(keys[li + s], cfg, _layer_kind(cfg, gidx), moe=cfg.ffn_is_moe(gidx), cross=cross)
+        )
+    if suffix:
+        params["suffix"] = suffix
+
+    params["final_norm"] = init_norm(cfg)
+
+    if cfg.is_encdec:
+        ek = jax.random.split(keys[-2], cfg.encoder_layers + 1)
+        enc_layers = [
+            _init_layer(ek[i], cfg, "attn", moe=False, cross=False)
+            for i in range(cfg.encoder_layers)
+        ]
+        params["encoder"] = {"blocks": _stack(enc_layers), "final_norm": init_norm(cfg)}
+    return params
+
+
+# ----------------------------------------------------------------- forward
+def _apply_layer(p, x, cfg: ModelConfig, kind: str, moe: bool, *, enc_out=None, causal=True):
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x)
+    if kind == "attn":
+        window = None
+    elif kind == "local_attn":
+        window = cfg.sliding_window
+    if kind in ("attn", "local_attn"):
+        y = apply_attention(p["mixer"], h, cfg, causal=causal, window=window)
+    elif kind == "mamba2":
+        y, _ = mamba2_scan(p["mixer"], h, cfg, return_state=False)
+    else:  # rglru
+        y = apply_rglru(p["mixer"], h, cfg)
+    x = x + y
+    if "cross" in p and enc_out is not None:
+        h = apply_norm(p["norm_cross"], x)
+        x = x + apply_attention(p["cross"], h, cfg, causal=False, kv_src=enc_out)
+    if "ffn" in p:
+        h = apply_norm(p["norm2"], x)
+        if moe:
+            y, a = apply_moe(p["ffn"], h, cfg)
+            aux = aux + a
+        else:
+            y = apply_mlp(p["ffn"], h)
+        x = x + y
+    return x, aux
+
+
+def _run_blocks(params, x, cfg: ModelConfig, *, enc_out=None):
+    """Scan the repeated pattern blocks; returns (x, aux_sum)."""
+    pre, nb, suf = _pattern_split(cfg)
+    p_len = len(cfg.layer_pattern)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i, p in enumerate(params.get("prefix", [])):
+        x, a = _apply_layer(p, x, cfg, _layer_kind(cfg, i), moe=False, enc_out=enc_out)
+        aux_total += a
+
+    if nb > 0:
+        kinds = [_layer_kind(cfg, pre + pos) for pos in range(p_len)]
+        moes = [cfg.ffn_is_moe(pre + pos) for pos in range(p_len)]
+
+        @jax.checkpoint  # remat: backward recomputes block activations
+        def block_fwd(xc, block_params, enc):
+            auxc = jnp.zeros((), jnp.float32)
+            for pos in range(p_len):
+                xc, a = _apply_layer(
+                    block_params[pos], xc, cfg, kinds[pos], moes[pos], enc_out=enc
+                )
+                auxc += a
+            return xc, auxc
+
+        def body(carry, block_params):
+            xc, auxc = carry
+            xc, a = block_fwd(xc, block_params, enc_out)
+            return (xc, auxc + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), tuple(params["blocks"])
+        )
+
+    for s, p in enumerate(params.get("suffix", [])):
+        gidx = pre + nb * p_len + s
+        x, a = _apply_layer(p, x, cfg, _layer_kind(cfg, gidx), cfg.ffn_is_moe(gidx), enc_out=enc_out)
+        aux_total += a
+    return x, aux_total
+
+
+def _encode(params, frames, cfg: ModelConfig):
+    """Whisper encoder over precomputed frame embeddings (conv frontend stub)."""
+    enc = params["encoder"]
+    x = frames.astype(cfg.activation_dtype)
+
+    def body(xc, p):
+        xc, _ = _apply_layer(p, xc, cfg, "attn", moe=False, causal=False)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return apply_norm(enc["final_norm"], x)
+
+
+def _fuse_inputs(params, batch, cfg: ModelConfig):
+    """Token embedding + modality splicing. Returns (x, enc_out)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(params, batch["frames"], cfg)
+    if cfg.num_patches > 0 and "patches" in batch:
+        # early fusion: first num_patches positions carry patch embeddings
+        pe = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, cfg.num_patches :, :]], axis=1)
+    return x, enc_out
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Training/eval forward. batch: {"tokens": [B,S], ("frames"|"patches")}.
+
+    Returns (logits [B,S,V], aux_loss scalar).
+    """
+    x, enc_out = _fuse_inputs(params, batch, cfg)
+    x, aux = _run_blocks(params, x, cfg, enc_out=enc_out)
+    x = apply_norm(params["final_norm"], x)
+    logits = unembed(params["embed"], x)
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg: ModelConfig, rng=None):
+    """Next-token cross entropy (f32), masking pad/patch positions."""
+    logits, aux = forward(params, batch, cfg)
+    targets = batch["tokens"][:, 1:]
+    logits = logits[:, :-1].astype(jnp.float32)
+    mask = jnp.ones_like(targets, jnp.float32)
+    if cfg.num_patches > 0:
+        pos = jnp.arange(targets.shape[1])
+        mask = mask * (pos[None, :] >= cfg.num_patches).astype(jnp.float32)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"][:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + cfg.router_aux_weight * aux
+
+
+# ------------------------------------------------------------------- cache
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, length: int):
+    if kind == "attn":
+        if cfg.long_context_window is not None and length > cfg.long_context_window:
+            return init_attn_cache(cfg, batch, cfg.long_context_window)
+        return init_attn_cache(cfg, batch, length)
+    if kind == "local_attn":
+        return init_attn_cache(cfg, batch, min(cfg.sliding_window, length))
+    if kind == "mamba2":
+        return init_mamba2_cache(cfg, batch)
+    return init_rglru_cache(cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int):
+    """Decode cache for `length` context. Mirrors the params block structure."""
+    pre, nb, suf = _pattern_split(cfg)
+    p_len = len(cfg.layer_pattern)
+    cache: dict[str, Any] = {}
+    if pre:
+        cache["prefix"] = [
+            _init_layer_cache(cfg, _layer_kind(cfg, i), batch, length) for i in range(pre)
+        ]
+    if nb > 0:
+        cache["blocks"] = [
+            _stack(
+                [
+                    _init_layer_cache(cfg, _layer_kind(cfg, pre + b * p_len + pos), batch, length)
+                    for b in range(nb)
+                ]
+            )
+            for pos in range(p_len)
+        ]
+    if suf:
+        cache["suffix"] = [
+            _init_layer_cache(cfg, _layer_kind(cfg, pre + nb * p_len + s), batch, length)
+            for s in range(suf)
+        ]
+    if cfg.is_encdec:
+        # cross K/V computed at prefill from encoder output
+        cache["cross_kv"] = [
+            (
+                jnp.zeros((batch, cfg.encoder_context, cfg.num_kv_heads, cfg.hd), cfg.activation_dtype),
+                jnp.zeros((batch, cfg.encoder_context, cfg.num_kv_heads, cfg.hd), cfg.activation_dtype),
+            )
+            for _ in range(cfg.num_layers)
+        ]
+    return cache
+
+
+def _decode_layer(p, x, cache, pos, cfg: ModelConfig, kind: str, moe: bool, cross_kv=None):
+    h = apply_norm(p["norm1"], x)
+    if kind in ("attn", "local_attn"):
+        if kind == "local_attn":
+            window = cfg.sliding_window
+        else:
+            window = cache["k"].shape[1] if cfg.long_context_window is not None else None
+        y, cache = decode_attention(p["mixer"], h, cache, pos, cfg, window=window)
+    elif kind == "mamba2":
+        y, cache = decode_mamba2(p["mixer"], h, cache, cfg)
+    else:
+        y, cache = decode_rglru(p["mixer"], h, cache, cfg)
+    x = x + y
+    if "cross" in p and cross_kv is not None:
+        h = apply_norm(p["norm_cross"], x)
+        y, _ = decode_attention(p["cross"], h, {}, pos, cfg, cross_kv=cross_kv)
+        x = x + y
+    if "ffn" in p:
+        h = apply_norm(p["norm2"], x)
+        if moe:
+            y, _ = apply_moe(p["ffn"], h, cfg)
+        else:
+            y = apply_mlp(p["ffn"], h)
+        x = x + y
+    return x, cache
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig):
+    """One-token decode. tokens: [B, 1]; pos: scalar int32 (context length so far).
+
+    Returns (logits [B, 1, V], new_cache).
+    """
+    pre, nb, suf = _pattern_split(cfg)
+    p_len = len(cfg.layer_pattern)
+    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    cross_list = cache.get("cross_kv")
+
+    new_cache = dict(cache)
+    li = 0
+    if pre:
+        pc = []
+        for i, p in enumerate(params.get("prefix", [])):
+            ckv = cross_list[li] if cross_list else None
+            x, c = _decode_layer(p, x, cache["prefix"][i], pos, cfg, _layer_kind(cfg, i), False, ckv)
+            pc.append(c)
+            li += 1
+        new_cache["prefix"] = pc
+
+    if nb > 0:
+        kinds = [_layer_kind(cfg, pre + pos_i) for pos_i in range(p_len)]
+        moes = [cfg.ffn_is_moe(pre + pos_i) for pos_i in range(p_len)]
+        if cross_list:
+            # enc-dec: stack cross K/V to scan alongside (whisper: single-pos pattern)
+            ck = _stack([cross_list[pre + b * p_len] for b in range(nb)])
+        blocks_new = []
+
+        def body(carry, scanned):
+            xc = carry
+            bp = scanned[: p_len]
+            bc = scanned[p_len : 2 * p_len]
+            ckv = scanned[2 * p_len] if cross_list else None
+            new_cs = []
+            for pp in range(p_len):
+                xc, c = _decode_layer(bp[pp], xc, bc[pp], pos, cfg, kinds[pp], moes[pp], ckv)
+                new_cs.append(c)
+            return xc, tuple(new_cs)
+
+        scanned_in = tuple(params["blocks"]) + tuple(cache["blocks"])
+        if cross_list:
+            scanned_in = scanned_in + (ck,)
+        x, cs = jax.lax.scan(body, x, scanned_in)
+        blocks_new = list(cs)
+        new_cache["blocks"] = blocks_new
+
+    if suf:
+        sc = []
+        for s, p in enumerate(params.get("suffix", [])):
+            gidx = pre + nb * p_len + s
+            ckv = cross_list[gidx] if cross_list else None
+            x, c = _decode_layer(p, x, cache["suffix"][s], pos, cfg, _layer_kind(cfg, gidx), cfg.ffn_is_moe(gidx), ckv)
+            sc.append(c)
+        new_cache["suffix"] = sc
+
+    x = apply_norm(params["final_norm"], x)
+    logits = unembed(params["embed"], x)
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------- prefill
+def prefill(params, batch, cfg: ModelConfig, cache_len: int):
+    """Full forward that also returns a primed decode cache.
+
+    For attention layers the K/V of the prompt are written into the cache;
+    recurrent layers return their final state.  batch["tokens"]: [B, S<=cache_len].
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x, enc_out = _fuse_inputs(params, batch, cfg)
+    cache = init_cache(cfg, B, cache_len)
+
+    pre, nb, suf = _pattern_split(cfg)
+    p_len = len(cfg.layer_pattern)
+
+    def prime_layer(p, x, c, kind, moe):
+        h = apply_norm(p["norm1"], x)
+        if kind in ("attn", "local_attn"):
+            window = cfg.sliding_window if kind == "local_attn" else (
+                cfg.long_context_window if cfg.long_context_window is not None and cache_len > (cfg.long_context_window or 0) else None
+            )
+            y = apply_attention(p["mixer"], h, cfg, causal=True, window=window)
+            # write prompt K/V into the cache head (positions [0, S))
+            from repro.models.layers import _project_qkv  # reuse projection
+
+            positions = jnp.arange(S)
+            q, k, v = _project_qkv(p["mixer"], h, h, cfg, positions, positions, False)
+            L = c["k"].shape[1]
+            if S <= L:
+                # linear cache (or ring buffer not yet wrapped): slot == pos
+                c = {
+                    "k": jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype), (0, 0, 0, 0)),
+                }
+            else:
+                # ring buffer: slot of absolute position p is p % L — the last L
+                # keys land rolled by S % L
+                c = {
+                    "k": jnp.roll(k[:, S - L :].astype(c["k"].dtype), S % L, axis=1),
+                    "v": jnp.roll(v[:, S - L :].astype(c["v"].dtype), S % L, axis=1),
+                }
+        elif kind == "mamba2":
+            y, st = mamba2_scan(p["mixer"], h, cfg, return_state=True)
+            c = st
+        else:
+            y, st = apply_rglru(p["mixer"], h, cfg, return_state=True)
+            c = st
+        x = x + y
+        if "cross" in p and enc_out is not None:
+            hh = apply_norm(p["norm_cross"], x)
+            x = x + apply_attention(p["cross"], hh, cfg, causal=False, kv_src=enc_out)
+        if "ffn" in p:
+            hh = apply_norm(p["norm2"], x)
+            if moe:
+                y2, _ = apply_moe(p["ffn"], hh, cfg)
+            else:
+                y2 = apply_mlp(p["ffn"], hh)
+            x = x + y2
+        return x, c
+
+    if pre:
+        pc = []
+        for i, p in enumerate(params.get("prefix", [])):
+            x, c = prime_layer(p, x, cache["prefix"][i], _layer_kind(cfg, i), False)
+            pc.append(c)
+        cache["prefix"] = pc
+
+    if nb > 0:
+        kinds = [_layer_kind(cfg, pre + pos_i) for pos_i in range(p_len)]
+        moes = [cfg.ffn_is_moe(pre + pos_i) for pos_i in range(p_len)]
+
+        def body(xc, scanned):
+            bp = scanned[: p_len]
+            bc = scanned[p_len :]
+            ncs = []
+            for pp in range(p_len):
+                xc, c = prime_layer(bp[pp], xc, bc[pp], kinds[pp], moes[pp])
+                ncs.append(c)
+            return xc, tuple(ncs)
+
+        x, cs = jax.lax.scan(body, x, tuple(params["blocks"]) + tuple(cache["blocks"]))
+        cache["blocks"] = list(cs)
+
+    if suf:
+        sc = []
+        for s, p in enumerate(params.get("suffix", [])):
+            gidx = pre + nb * p_len + s
+            x, c = prime_layer(p, x, cache["suffix"][s], _layer_kind(cfg, gidx), cfg.ffn_is_moe(gidx))
+            sc.append(c)
+        cache["suffix"] = sc
+
+    if cfg.is_encdec and enc_out is not None:
+        ckv = []
+        all_layers = list(params.get("prefix", []))
+        # reconstruct per-layer cross params in global order
+        if nb > 0:
+            for b in range(nb):
+                for pp in range(p_len):
+                    all_layers.append(jax.tree.map(lambda leaf: leaf[b], params["blocks"][pp]))
+        all_layers += list(params.get("suffix", []))
+        for p in all_layers:
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"])
+            if "bk" in p["cross"]:
+                k = k + p["cross"]["bk"]
+                v = v + p["cross"]["bv"]
+            ckv.append((k.astype(cfg.activation_dtype), v.astype(cfg.activation_dtype)))
+        cache["cross_kv"] = ckv
+
+    x = apply_norm(params["final_norm"], x)
+    logits = unembed(params["embed"], x)
+    return logits, cache
+
+
+# ------------------------------------------------------------- accounting
+def param_count(cfg: ModelConfig) -> int:
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda k: init_model(k, cfg), key)
+    return sum(int(math.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top-k of routed experts + shared)."""
+    total = param_count(cfg)
+    if cfg.num_experts == 0:
+        return total
+    f = cfg.moe_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * f
+    moe_layers = sum(cfg.ffn_is_moe(i) for i in range(cfg.num_layers))
+    inactive = moe_layers * (cfg.num_experts - cfg.experts_per_token) * per_expert
+    return total - inactive

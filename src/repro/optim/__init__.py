@@ -1,0 +1,8 @@
+from repro.optim.sgd import (
+    OptState,
+    adam,
+    make_schedule,
+    sgd,
+)
+
+__all__ = ["OptState", "adam", "make_schedule", "sgd"]

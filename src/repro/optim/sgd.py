@@ -1,0 +1,109 @@
+"""Minimal functional optimizers + LR schedules (no external deps).
+
+API mirrors optax: ``opt = sgd(...)``; ``state = opt.init(params)``;
+``updates, state = opt.update(grads, state, params)``; apply with
+``jax.tree.map(lambda p, u: p + u, params, updates)``.
+
+The paper's experiments use SGD with a geometrically decaying learning rate
+eta_t = r^t * eta_0 (r = 0.995 / 0.998) — ``make_schedule("exp", ...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def make_schedule(kind: str, base: float, *, decay: float = 0.995, total_steps: int = 1000, warmup: int = 0) -> Schedule:
+    def sched(step):
+        t = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        if kind == "const":
+            lr = jnp.float32(base)
+        elif kind == "exp":
+            lr = base * jnp.power(decay, t)
+        elif kind == "cosine":
+            frac = jnp.clip(t / max(total_steps, 1), 0.0, 1.0)
+            lr = base * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        else:
+            raise ValueError(f"unknown schedule {kind!r}")
+        if warmup > 0:
+            lr = lr * jnp.clip(t / warmup, 0.0, 1.0)
+        return lr
+    return sched
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moment / momentum
+    nu: Any  # second moment (adam only; zeros for sgd)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+
+
+def sgd(lr: float | Schedule, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros, ())
+
+    def update(grads, state, params=None):
+        lr_t = sched(state.step)
+
+        def upd(g, m):
+            g = g.astype(jnp.float32)
+            if momentum > 0:
+                m = momentum * m + g
+                g = momentum * m + g if nesterov else m
+            return -lr_t * g, m
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        pairs = [upd(g, m) for g, m in zip(flat_g, flat_m)]
+        updates = jax.tree_util.tree_unflatten(tdef, [p[0] for p in pairs])
+        mu = jax.tree_util.tree_unflatten(tdef, [p[1] for p in pairs])
+        return updates, OptState(state.step + 1, mu, ())
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float | Schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+    def update(grads, state, params=None):
+        t = state.step + 1
+        lr_t = sched(state.step)
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return -lr_t * step_, m, v
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params) if params is not None else [None] * len(flat_g)
+        trip = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        unf = lambda i: jax.tree_util.tree_unflatten(tdef, [tr[i] for tr in trip])
+        return unf(0), OptState(t, unf(1), unf(2))
+
+    return Optimizer(init, update)

@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,250 @@
+"""Continuous-batching serving engine on the consensus model.
+
+vLLM-style slot management on top of the model zoo's decode path:
+
+* a fixed pool of ``max_slots`` cache slots (attention K/V ring buffers,
+  SSM/RG-LRU states — whatever the arch family uses), preallocated once;
+* requests are admitted whenever a slot is free: the prompt is prefilled
+  into a fresh single-sequence cache (bucketed/padded lengths keep the jit
+  cache warm) and spliced into the pool at the slot index;
+* every engine tick decodes ONE token for ALL active slots in a single
+  vmapped decode step with **per-slot positions** — sequences of different
+  lengths progress independently;
+* finished requests (max tokens or EOS) release their slot immediately.
+
+This is the production shape of the ``decode_32k`` dry-run: the engine is
+the host-side loop, the vmapped decode step is the device program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    # filled by the engine
+    rid: int = -1
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _batch_axes(cache) -> object:
+    """Per-leaf vmap axis of the batch dim: 1 under stacked 'blocks', else 0."""
+
+    def axis_for(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        return 1 if "blocks" in names else 0
+
+    return jax.tree_util.tree_map_with_path(axis_for, cache)
+
+
+def _round_up(n: int, unit: int) -> int:
+    return max(unit, -(-n // unit) * unit)
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_slots: int = 4,
+        cache_len: int = 256,
+        prompt_bucket: int = 32,
+        sample: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+        extra_inputs: dict | None = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.prompt_bucket = prompt_bucket
+        self.extra_inputs = extra_inputs or {}
+
+        self.cache = T.init_cache(cfg, max_slots, cache_len)
+        self._axes = _batch_axes(self.cache)
+        self.pos = np.zeros(max_slots, np.int32)  # context length per slot
+        self.last_tok = np.zeros(max_slots, np.int32)
+        self.active: dict[int, Request] = {}
+        self.pending: deque[Request] = deque()
+        self._ids = itertools.count()
+        self._steps = 0
+
+        # one-token decode for every slot, per-slot positions.  The vmapped
+        # axis is the pool's batch dim: axis 1 for stacked-blocks leaves
+        # ([nb, B, ...]), axis 0 elsewhere — decode_one reinserts a size-1
+        # batch dim at the same position for the model.
+        def _expand(path, leaf):
+            names = [getattr(p, "key", None) for p in path]
+            ax = 1 if "blocks" in names else 0
+            return jnp.expand_dims(leaf, ax)
+
+        def _squeeze(path, leaf):
+            names = [getattr(p, "key", None) for p in path]
+            ax = 1 if "blocks" in names else 0
+            return jax.lax.index_in_dim(leaf, 0, axis=ax, keepdims=False)
+
+        def decode_one(params, tok, cache_slot, pos):
+            cache_b = jax.tree_util.tree_map_with_path(_expand, cache_slot)
+            logits, new_cache = T.decode_step(params, tok[None, None], cache_b, pos, cfg)
+            return logits[0, 0], jax.tree_util.tree_map_with_path(_squeeze, new_cache)
+
+        self._decode = jax.jit(
+            jax.vmap(
+                decode_one,
+                in_axes=(None, 0, self._axes, 0),
+                out_axes=(0, self._axes),  # keep the pool's per-leaf batch axis
+            )
+        )
+        self._prefills: dict[int, Callable] = {}
+        self._sample = sample or (lambda logits, key: jnp.argmax(logits, -1).astype(jnp.int32))
+        self._key = jax.random.PRNGKey(0)
+        mixers = {cfg.mixer_for_layer(i) for i in range(cfg.num_layers)}
+        self._recurrent = bool(mixers & {"mamba2", "rglru"})
+        # windowed ring buffers: once the window wraps, every slot is
+        # attendable, so bucket-padding garbage would poison the cache —
+        # such archs also prefill at exact prompt length
+        self._windowed = ("local_attn" in mixers) or (
+            cfg.long_context_window is not None and cache_len > cfg.long_context_window
+        )
+
+    # ------------------------------------------------------------- slots
+    def _slot_view(self, cache, slot):
+        """Extract slot `slot` as a batchless cache pytree."""
+
+        def take(path, leaf):
+            names = [getattr(p, "key", None) for p in path]
+            ax = 1 if "blocks" in names else 0
+            return jax.lax.index_in_dim(leaf, slot, axis=ax, keepdims=False)
+
+        return jax.tree_util.tree_map_with_path(take, cache)
+
+    def _insert_slot(self, cache, cache1, slot):
+        """Splice a batch-1 cache into the pool at `slot`."""
+
+        def put(path, pool, new):
+            names = [getattr(p, "key", None) for p in path]
+            ax = 1 if "blocks" in names else 0
+            idx = [0] * pool.ndim
+            idx[ax] = slot
+            return jax.lax.dynamic_update_slice(pool, new.astype(pool.dtype), tuple(idx))
+
+        flat_pool, tdef = jax.tree_util.tree_flatten_with_path(cache)
+        flat_new = jax.tree_util.tree_leaves(cache1)
+        out = [put(p, pool, new) for (p, pool), new in zip(flat_pool, flat_new)]
+        return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(cache), out)
+
+    # ----------------------------------------------------------- prefill
+    def _prefill_fn(self, length: int):
+        if length not in self._prefills:
+            cfg = self.cfg
+
+            def fn(params, batch):
+                return T.prefill(params, batch, cfg, cache_len=self.cache_len)
+
+            self._prefills[length] = jax.jit(fn)
+        return self._prefills[length]
+
+    def _admit(self, req: Request, slot: int) -> None:
+        plen = len(req.prompt)
+        if self._recurrent or self._windowed:
+            # recurrent states absorb every consumed token, and wrapped ring
+            # buffers attend every slot — both need exact-length prefill
+            # (mamba2 additionally needs chunk-divisible lengths)
+            if self.cfg.ssm_state:
+                assert plen % self.cfg.ssm_chunk == 0, (
+                    f"mamba2 prompts must be multiples of ssm_chunk={self.cfg.ssm_chunk}"
+                )
+            bucket = plen
+        else:
+            bucket = min(_round_up(plen, self.prompt_bucket), self.cache_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        batch = {"tokens": jnp.asarray(toks), **{
+            k: v[None] if hasattr(v, "ndim") else v for k, v in self.extra_inputs.items()
+        }}
+        logits, cache1 = self._prefill_fn(bucket)(self.params, batch)
+        # first generated token comes from the last REAL prompt position
+        first = int(jnp.argmax(logits[0, plen - 1]))
+        # cache1 keeps its size-1 batch dim (already at the per-leaf batch
+        # axis), so the splice below is a rank-preserving dynamic_update_slice
+        self.cache = self._insert_slot(self.cache, cache1, slot)
+        # NOTE: bucket-padded positions beyond plen hold garbage K/V; decode
+        # masks by position (pos = plen), so they are never attended.
+        self.pos[slot] = plen
+        self.last_tok[slot] = first
+        req.output.append(first)
+        self.active[slot] = req
+
+    # -------------------------------------------------------------- API
+    def submit(self, req: Request) -> int:
+        req.rid = next(self._ids)
+        self.pending.append(req)
+        return req.rid
+
+    def _finish(self, slot: int) -> None:
+        self.active[slot].done = True
+        del self.active[slot]
+        self.pos[slot] = 0
+
+    def step(self) -> None:
+        """One engine tick: admit, decode one token for all active slots."""
+        # admit as many pending requests as there are free slots
+        for slot in range(self.max_slots):
+            if not self.pending:
+                break
+            if slot not in self.active:
+                self._admit(self.pending.popleft(), slot)
+
+        # early completion check (a prompt-only request may finish at admit)
+        for slot in list(self.active):
+            r = self.active[slot]
+            if len(r.output) >= r.max_new_tokens or (
+                r.eos_id is not None and r.output and r.output[-1] == r.eos_id
+            ):
+                self._finish(slot)
+
+        if not self.active:
+            return
+
+        toks = jnp.asarray(self.last_tok)
+        pos = jnp.asarray(self.pos)
+        logits, new_cache = self._decode(self.params, toks, self.cache, pos)
+        self.cache = new_cache
+        self._key, sub = jax.random.split(self._key)
+        next_tok = np.asarray(self._sample(logits, sub))
+
+        for slot in list(self.active):
+            r = self.active[slot]
+            tok = int(next_tok[slot])
+            r.output.append(tok)
+            self.pos[slot] += 1
+            self.last_tok[slot] = tok
+            if len(r.output) >= r.max_new_tokens or (r.eos_id is not None and tok == r.eos_id):
+                self._finish(slot)
+        self._steps += 1
+
+    def run(self, requests: list[Request], max_ticks: int = 10_000) -> list[Request]:
+        """Submit everything and tick until done.  Returns the requests."""
+        for r in requests:
+            self.submit(r)
+        ticks = 0
+        while (self.pending or self.active) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return requests

@@ -1,0 +1,154 @@
+"""AD-GDA algorithm: minimax convergence, robustness vs. CHOCO-SGD, baselines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ADGDA, ADGDAConfig, DRDSGD, DRDSGDConfig, DRFA, DRFAConfig, choco_sgd
+
+M = 6  # nodes
+
+
+def _quadratic_loss(offsets):
+    """Node i's loss: f_i(theta) = 0.5 ||theta - mu_i||^2 (convex, heterogeneous)."""
+    mus = jnp.asarray(offsets)
+
+    def loss_fn(params, batch, rng):
+        mu = batch["mu"]
+        return 0.5 * jnp.sum((params["w"] - mu) ** 2)
+
+    batch = {"mu": mus}
+    return loss_fn, batch, mus
+
+
+def _run(trainer, params, batch, steps, seed=0):
+    state = trainer.init(params, jax.random.PRNGKey(seed))
+    aux = None
+    for _ in range(steps):
+        state, aux = trainer.step(state, batch)
+    return state, aux
+
+
+def test_adgda_converges_to_robust_solution():
+    """With strong heterogeneity the robust theta should balance worst nodes.
+
+    Quadratics with means spread on a line: DRO solution shifts towards the
+    extreme nodes relative to the mean of the means.
+    """
+    offsets = [[-4.0], [-0.5], [0.0], [0.0], [0.5], [4.0]]
+    loss_fn, batch, mus = _quadratic_loss(offsets)
+    cfg = ADGDAConfig(
+        num_nodes=M, topology="ring", compressor="q8b", alpha=0.05,
+        eta_theta=0.05, eta_lambda=0.05, lr_decay=0.995,
+    )
+    trainer = ADGDA(cfg, loss_fn)
+    params = {"w": jnp.zeros((1,))}
+    state, aux = _run(trainer, params, batch, steps=600)
+
+    losses = np.asarray(aux["losses"])
+    # worst-node losses should be nearly balanced between the two extremes
+    assert abs(losses[0] - losses[-1]) < 0.5 * max(losses[0], losses[-1]) + 0.3
+    # lambda concentrates on the extreme nodes
+    lam = np.asarray(aux["lambda_mean"])
+    assert lam[0] + lam[-1] > 0.5
+    # consensus reached
+    assert float(aux["consensus_err"]) < 5e-2
+
+
+def test_adgda_beats_choco_sgd_on_worst_node():
+    offsets = [[-3.0], [0.0], [0.0], [0.0], [0.0], [3.0]]
+    loss_fn, batch, _ = _quadratic_loss(offsets)
+    cfg = ADGDAConfig(num_nodes=M, topology="ring", compressor="q8b",
+                      alpha=0.05, eta_theta=0.05, eta_lambda=0.05)
+    robust_state, robust_aux = _run(ADGDA(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 500)
+    sgd_state, sgd_aux = _run(choco_sgd(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 500)
+    # symmetric problem: same consensus mean, but check worst-loss tracking
+    assert float(robust_aux["worst_loss"]) <= float(sgd_aux["worst_loss"]) + 1e-3
+
+
+def test_adgda_beats_choco_sgd_asymmetric():
+    """Asymmetric populations: 5 nodes at 0, 1 outlier — the standard risk
+    minimizer parks near 0 and the outlier suffers; DRO balances."""
+    offsets = [[0.0]] * 5 + [[6.0]]
+    loss_fn, batch, _ = _quadratic_loss(offsets)
+    cfg = ADGDAConfig(num_nodes=M, topology="ring", compressor="q4b",
+                      alpha=0.01, eta_theta=0.05, eta_lambda=0.1)
+    _, robust_aux = _run(ADGDA(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 800)
+    _, sgd_aux = _run(choco_sgd(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 800)
+    assert float(robust_aux["worst_loss"]) < 0.7 * float(sgd_aux["worst_loss"])
+
+
+def test_lambda_stays_on_simplex():
+    offsets = [[float(i)] for i in range(M)]
+    loss_fn, batch, _ = _quadratic_loss(offsets)
+    cfg = ADGDAConfig(num_nodes=M, alpha=0.1, eta_lambda=0.5)  # aggressive dual lr
+    trainer = ADGDA(cfg, loss_fn)
+    state = trainer.init({"w": jnp.zeros((1,))}, jax.random.PRNGKey(0))
+    for _ in range(50):
+        state, _ = trainer.step(state, batch)
+        lam = np.asarray(state.lam)
+        np.testing.assert_allclose(lam.sum(-1), 1.0, atol=1e-4)
+        assert (lam >= -1e-6).all()
+
+
+def test_choco_sgd_matches_uncompressed_sgd_direction():
+    """With Identity compression + mesh topology, CHOCO-SGD's network mean
+    after one step equals centralized SGD on the average loss."""
+    offsets = [[1.0], [2.0], [3.0], [4.0], [5.0], [6.0]]
+    loss_fn, batch, mus = _quadratic_loss(offsets)
+    cfg = ADGDAConfig(num_nodes=M, topology="mesh", compressor="none",
+                      eta_theta=0.1, robust=False)
+    trainer = choco_sgd(cfg, loss_fn)
+    state = trainer.init({"w": jnp.zeros((1,))}, jax.random.PRNGKey(0))
+    state, _ = trainer.step(state, batch)
+    mean_w = float(np.asarray(trainer.network_mean(state)["w"])[0])
+    # centralized: w1 = 0 - 0.1 * mean(0 - mu_i) = 0.1 * mean(mu)
+    assert mean_w == pytest.approx(0.1 * float(mus.mean()), abs=1e-5)
+
+
+def test_theory_gamma_accepted():
+    loss_fn, batch, _ = _quadratic_loss([[0.0]] * M)
+    cfg = ADGDAConfig(num_nodes=M, compressor="q4b", gamma="theory")
+    trainer = ADGDA(cfg, loss_fn)
+    assert 0 < trainer.gamma < 0.1
+
+
+# --------------------------------------------------------------------- baselines
+def test_drdsgd_converges_and_weights_worst():
+    offsets = [[0.0]] * 5 + [[4.0]]
+    loss_fn, batch, _ = _quadratic_loss(offsets)
+    cfg = DRDSGDConfig(num_nodes=M, topology="ring", alpha=1.0, eta_theta=0.05)
+    trainer = DRDSGD(cfg, loss_fn)
+    state, aux = _run(trainer, {"w": jnp.zeros((1,))}, batch, 500)
+    lam = np.asarray(aux["lambda_mean"])
+    assert lam[-1] == lam.max()  # worst node gets the largest weight
+    _, sgd_aux = _run(
+        choco_sgd(ADGDAConfig(num_nodes=M, topology="ring", compressor="none", eta_theta=0.05), loss_fn),
+        {"w": jnp.zeros((1,))}, batch, 500)
+    assert float(aux["worst_loss"]) < float(sgd_aux["worst_loss"])
+
+
+def test_drfa_runs_and_improves_worst_node():
+    offsets = [[0.0]] * 5 + [[4.0]]
+    loss_fn, _, mus = _quadratic_loss(offsets)
+    cfg = DRFAConfig(num_nodes=M, local_steps=4, eta_theta=0.05, eta_lambda=0.05)
+    trainer = DRFA(cfg, loss_fn)
+    # batch: [m, K, ...]
+    batch = {"mu": jnp.broadcast_to(mus[:, None, :], (M, 4, 1))}
+    state, aux = _run(trainer, {"w": jnp.zeros((1,))}, batch, 300)
+    w = float(np.asarray(state.theta["w"])[0])
+    assert 0.2 < w < 4.0  # pulled towards the outlier, away from plain mean (0.67)
+    assert float(aux["worst_loss"]) < 0.5 * 16.0 / 2  # better than w=0
+
+
+def test_bits_per_round_ordering():
+    loss_fn, batch, _ = _quadratic_loss([[0.0]] * M)
+    params = {"w": jnp.zeros((1000,))}
+    cfg_q4 = ADGDAConfig(num_nodes=M, topology="ring", compressor="q4b")
+    cfg_id = ADGDAConfig(num_nodes=M, topology="ring", compressor="none")
+    t_q4, t_id = ADGDA(cfg_q4, loss_fn), ADGDA(cfg_id, loss_fn)
+    s_q4 = t_q4.init(params, jax.random.PRNGKey(0))
+    s_id = t_id.init(params, jax.random.PRNGKey(0))
+    assert t_q4.bits_per_round(s_q4) < 0.3 * t_id.bits_per_round(s_id)

@@ -1,0 +1,133 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each test instantiates the REDUCED variant of the family (2-3 layers,
+d_model <= 512, <= 4 experts), runs one forward and one AD-GDA train step on
+CPU, and asserts output shapes + finiteness.  The FULL configs are exercised
+only by the dry-run (launch/dryrun.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch import steps as st
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _reduced(arch):
+    cfg = get_config(arch)
+    layers = 3 if cfg.family == "hybrid" else 2  # hybrid: cover rglru AND local_attn
+    return cfg.reduced(layers=layers)
+
+
+def _batch(cfg, nodes=None, b=2, s=64):
+    if cfg.ssm_state:
+        s = max(s, cfg.ssm_chunk)
+        s -= s % cfg.ssm_chunk
+    lead = (nodes, b) if nodes else (b,)
+    batch = {"tokens": jax.random.randint(KEY, lead + (s,), 0, cfg.vocab_size)}
+    if cfg.is_encdec:
+        batch["frames"] = 0.02 * jax.random.normal(KEY, lead + (cfg.encoder_context, cfg.d_model))
+    if cfg.num_patches > 0:
+        batch["patches"] = 0.02 * jax.random.normal(KEY, lead + (cfg.num_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", [a.replace("_", "-") for a in ARCHS])
+def test_forward_shapes_and_finite(arch):
+    cfg = _reduced(arch)
+    params = T.init_model(KEY, cfg)
+    batch = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: T.forward(p, b, cfg))(params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", [a.replace("_", "-") for a in ARCHS])
+def test_one_adgda_train_step(arch):
+    cfg = _reduced(arch)
+    m = 2
+    trainer = st.make_trainer(cfg, m, compressor="q8b", eta_theta=0.01)
+    params = T.init_model(KEY, cfg)
+    state = trainer.init(params, KEY)
+    state, aux = trainer.step(state, _batch(cfg, nodes=m, b=1, s=32))
+    assert aux["losses"].shape == (m,)
+    assert np.isfinite(np.asarray(aux["losses"])).all()
+    assert np.isfinite(np.asarray(aux["consensus_err"]))
+    # lambda stays a distribution at every node
+    lam = np.asarray(state.lam)
+    np.testing.assert_allclose(lam.sum(-1), 1.0, atol=1e-5)
+    assert (lam >= -1e-6).all()
+    # theta stayed finite
+    for leaf in jax.tree_util.tree_leaves(state.theta):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", [a.replace("_", "-") for a in ARCHS])
+def test_decode_step_shapes(arch):
+    cfg = _reduced(arch)
+    params = T.init_model(KEY, cfg)
+    B, S = 2, 32
+    batch = _batch(cfg, b=B, s=S)
+    S = batch["tokens"].shape[-1]
+    logits, cache = jax.jit(lambda p, b: T.prefill(p, b, cfg, cache_len=S + 8))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    tok = jnp.argmax(logits[:, -1:], -1)
+    dlogits, cache2 = jax.jit(lambda p, t, c, pos: T.decode_step(p, t, c, pos, cfg))(
+        params, tok, cache, jnp.int32(S)
+    )
+    assert dlogits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(dlogits, np.float32)).all()
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned hyperparameters (guard against accidental edits)."""
+    spec = {
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "mamba2-1.3b": (48, 2048, 16, 16, 0, 50280),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+    }
+    for arch, (L, d, H, KV, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size) == (
+            L, d, H, KV, ff, V,
+        ), arch
+        assert cfg.source, f"{arch} missing citation"
+    # MoE details
+    ds = get_config("deepseek-moe-16b")
+    assert (ds.num_experts, ds.experts_per_token, ds.num_shared_experts) == (64, 6, 2)
+    ll = get_config("llama4-scout-17b-a16e")
+    assert (ll.num_experts, ll.experts_per_token) == (16, 1)
+    mm = get_config("mamba2-1.3b")
+    assert mm.ssm_state == 128
+    rg = get_config("recurrentgemma-2b")
+    assert rg.layer_pattern == ("rglru", "rglru", "local_attn")
+
+
+def test_long_context_support_flags():
+    """long_500k policy: native for ssm/hybrid, windowed for dense/moe,
+    skipped for full-attention audio/vlm (DESIGN §Arch-applicability)."""
+    from repro.configs.shapes import SHAPES, supports_shape
+
+    long = SHAPES["long_500k"]
+    native_or_windowed = [
+        "mamba2-1.3b", "recurrentgemma-2b", "qwen3-1.7b", "qwen3-4b",
+        "command-r-35b", "granite-20b", "deepseek-moe-16b", "llama4-scout-17b-a16e",
+    ]
+    skipped = ["whisper-small", "internvl2-2b"]
+    for a in native_or_windowed:
+        assert supports_shape(get_config(a), long), a
+    for a in skipped:
+        assert not supports_shape(get_config(a), long), a

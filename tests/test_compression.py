@@ -1,0 +1,145 @@
+"""Compression operators: Assumption 3.2 contraction + wire-format roundtrips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    BlockTopK,
+    Identity,
+    RandomQuantization,
+    TopK,
+    make_compressor,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def contraction_ratio(comp, x, n_trials=32):
+    """Monte-Carlo estimate of E||Q(x)-x||^2 / ||x||^2."""
+    keys = jax.random.split(KEY, n_trials)
+    errs = jnp.stack([jnp.sum((comp(x, k) - x) ** 2) for k in keys])
+    return float(errs.mean() / jnp.maximum(jnp.sum(x**2), 1e-30))
+
+
+# ------------------------------------------------------------------ assumption 3.2
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantization_contraction(bits):
+    comp = RandomQuantization(bits=bits)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    delta = comp.delta_for(4096)
+    assert contraction_ratio(comp, x) <= (1 - delta) + 0.05
+
+
+@pytest.mark.parametrize("fraction", [0.5, 0.25, 0.1])
+def test_topk_contraction(fraction):
+    comp = TopK(fraction=fraction)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2048,))
+    # top-k is deterministic: exact bound, no expectation needed
+    err = float(jnp.sum((comp(x) - x) ** 2) / jnp.sum(x**2))
+    assert err <= (1 - fraction) + 1e-6
+
+
+@pytest.mark.parametrize("fraction", [0.5, 0.25, 0.1])
+def test_block_topk_contraction(fraction):
+    comp = BlockTopK(fraction=fraction, block=256)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2048,))
+    err = float(jnp.sum((comp(x) - x) ** 2) / jnp.sum(x**2))
+    assert err <= (1 - fraction) + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    data=st.lists(st.floats(-100, 100, allow_nan=False), min_size=8, max_size=300),
+    fraction=st.sampled_from([0.1, 0.25, 0.5, 1.0]),
+)
+def test_property_topk_contraction_any_vector(data, fraction):
+    x = jnp.asarray(data, jnp.float32)
+    comp = TopK(fraction=fraction)
+    err = float(jnp.sum((comp(x) - x) ** 2))
+    assert err <= (1 - fraction) * float(jnp.sum(x**2)) + 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bits=st.sampled_from([2, 4, 6, 8]),
+    d=st.sampled_from([64, 257, 1024]),
+)
+def test_property_quantization_contraction(seed, bits, d):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    comp = RandomQuantization(bits=bits)
+    ratio = contraction_ratio(comp, x, n_trials=8)
+    assert ratio <= (1 - comp.delta_for(d)) + 0.15  # MC slack
+
+
+# ------------------------------------------------------------------ exactness
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -0.3])
+    out = TopK(fraction=0.25)(x)  # k = 2
+    np.testing.assert_allclose(np.asarray(out), [0, -5.0, 0, 3.0, 0, 0, 0, 0], atol=1e-7)
+
+
+def test_block_topk_is_per_block():
+    # one huge value per block must always survive regardless of other blocks
+    x = jnp.zeros((512,)).at[0].set(100.0).at[256].set(0.001)
+    out = BlockTopK(fraction=0.01, block=256)(x)  # k_b >= 1 per block
+    assert float(out[0]) == pytest.approx(100.0)
+    assert float(out[256]) == pytest.approx(0.001)
+
+
+def test_quantization_preserves_sign_and_scale():
+    x = jnp.asarray([1.0, -1.0, 0.5, -0.5] * 64)
+    comp = RandomQuantization(bits=8)
+    q = comp(x, jax.random.PRNGKey(0))
+    assert float(jnp.max(jnp.abs(q - x))) < 0.2
+    assert (jnp.sign(q) * jnp.sign(x) >= 0).all()  # no sign flips
+
+
+def test_identity_exact():
+    x = jax.random.normal(KEY, (100,))
+    np.testing.assert_array_equal(np.asarray(Identity()(x)), np.asarray(x))
+
+
+# ------------------------------------------------------------------ payloads
+def test_quantization_payload_is_packed_ints():
+    comp = RandomQuantization(bits=4)
+    payload = comp.encode(jax.random.normal(KEY, (1024,)), KEY)
+    assert payload["levels"].dtype == jnp.uint8
+    assert payload["signs"].dtype == jnp.bool_
+
+
+def test_payload_roundtrip_under_jit_and_vmap():
+    comp = BlockTopK(fraction=0.25, block=128)
+    x = jax.random.normal(KEY, (4, 640))  # stacked node axis
+
+    @jax.jit
+    def roundtrip(xs):
+        payload = jax.vmap(comp.encode)(xs, jax.random.split(KEY, 4))
+        return jax.vmap(lambda p: comp.decode(p, (640,), jnp.float32))(payload)
+
+    out = roundtrip(x)
+    assert out.shape == x.shape
+    # decoded values are a subset of the original entries
+    mask = out != 0
+    np.testing.assert_allclose(np.asarray(out[mask]), np.asarray(x[mask]), rtol=1e-6)
+
+
+# ------------------------------------------------------------------ factory/bits
+def test_make_compressor_specs():
+    assert isinstance(make_compressor("none"), Identity)
+    assert make_compressor("q4b").bits == 4
+    assert make_compressor("top10").fraction == pytest.approx(0.10)
+    assert make_compressor("btop25").fraction == pytest.approx(0.25)
+    with pytest.raises(ValueError):
+        make_compressor("bogus")
+
+
+def test_bits_per_element_ordering():
+    d = 1 << 20
+    b4 = RandomQuantization(bits=4).bits_per_element(d)
+    b8 = RandomQuantization(bits=8).bits_per_element(d)
+    t10 = TopK(fraction=0.10).bits_per_element(d)
+    assert b4 < b8 < 32
+    assert t10 < 32

@@ -1,0 +1,120 @@
+"""DRO primitives: simplex projection, regularizers, closed-form KL weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dro
+
+
+# ------------------------------------------------------------------ projection
+def _proj_brute(v, grid=200001):
+    """Reference projection via scalar bisection on the KKT threshold."""
+    v = np.asarray(v, np.float64)
+    lo, hi = v.min() - 1.0, v.max()
+    for _ in range(100):
+        mid = (lo + hi) / 2
+        if np.maximum(v - mid, 0).sum() > 1.0:
+            lo = mid
+        else:
+            hi = mid
+    return np.maximum(v - (lo + hi) / 2, 0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=2, max_size=20))
+def test_projection_matches_reference(vals):
+    v = jnp.asarray(vals, jnp.float32)
+    out = np.asarray(dro.project_simplex(v))
+    ref = _proj_brute(vals)
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-50, 50, allow_nan=False), min_size=2, max_size=32))
+def test_projection_lands_on_simplex(vals):
+    out = np.asarray(dro.project_simplex(jnp.asarray(vals, jnp.float32)))
+    assert (out >= -1e-6).all()
+    assert out.sum() == pytest.approx(1.0, abs=1e-4)
+
+
+def test_projection_idempotent_on_simplex():
+    lam = jnp.asarray([0.2, 0.3, 0.5])
+    np.testing.assert_allclose(np.asarray(dro.project_simplex(lam)), np.asarray(lam), atol=1e-6)
+
+
+def test_projection_vmap():
+    v = jax.random.normal(jax.random.PRNGKey(0), (8, 10))
+    out = jax.vmap(dro.project_simplex)(v)
+    np.testing.assert_allclose(np.asarray(out.sum(-1)), 1.0, atol=1e-5)
+
+
+# ------------------------------------------------------------------ regularizers
+def test_chi2_zero_at_prior_negative_elsewhere():
+    prior = jnp.asarray([0.25] * 4)
+    assert float(dro.chi2_regularizer(prior, prior)) == pytest.approx(0.0)
+    assert float(dro.chi2_regularizer(jnp.asarray([0.7, 0.1, 0.1, 0.1]), prior)) < 0
+
+
+def test_kl_zero_at_prior_negative_elsewhere():
+    prior = jnp.asarray([0.25] * 4)
+    assert float(dro.kl_regularizer(prior, prior)) == pytest.approx(0.0)
+    assert float(dro.kl_regularizer(jnp.asarray([0.7, 0.1, 0.1, 0.1]), prior)) < 0
+
+
+def test_regularizers_concave_along_segments():
+    prior = jnp.full((5,), 0.2)
+    a = jnp.asarray([0.6, 0.1, 0.1, 0.1, 0.1])
+    b = jnp.asarray([0.1, 0.1, 0.1, 0.1, 0.6])
+    for reg in (dro.chi2_regularizer, dro.kl_regularizer):
+        mid = reg(0.5 * a + 0.5 * b, prior)
+        assert float(mid) >= 0.5 * float(reg(a, prior)) + 0.5 * float(reg(b, prior)) - 1e-6
+
+
+def test_make_regularizer():
+    assert dro.make_regularizer("chi2").name == "chi2"
+    assert dro.make_regularizer("kl").name == "kl"
+    with pytest.raises(ValueError):
+        dro.make_regularizer("l2")
+
+
+# ------------------------------------------------------------------ KL closed form
+def test_kl_closed_form_is_argmax():
+    """lambda* = argmax_lam <lam, f> - alpha * KL(lam || prior)."""
+    key = jax.random.PRNGKey(1)
+    losses = jax.random.uniform(key, (6,)) * 3
+    prior = jnp.full((6,), 1 / 6)
+    alpha = 2.0
+    lam_star = dro.kl_closed_form_weights(losses, prior, alpha)
+
+    def objective(lam):
+        return jnp.dot(lam, losses) + alpha * dro.kl_regularizer(lam, prior)
+
+    base = float(objective(lam_star))
+    # perturb within the simplex: must not improve
+    for seed in range(20):
+        pert = jax.random.normal(jax.random.PRNGKey(seed), (6,)) * 0.01
+        lam_p = dro.project_simplex(lam_star + pert)
+        assert float(objective(lam_p)) <= base + 1e-5
+
+
+def test_kl_closed_form_limits():
+    losses = jnp.asarray([1.0, 2.0, 3.0])
+    prior = jnp.full((3,), 1 / 3)
+    # alpha -> inf: weights -> prior
+    np.testing.assert_allclose(
+        np.asarray(dro.kl_closed_form_weights(losses, prior, 1e6)), np.asarray(prior), atol=1e-5
+    )
+    # alpha -> 0: all mass on the worst node
+    w = np.asarray(dro.kl_closed_form_weights(losses, prior, 1e-2))
+    assert w.argmax() == 2 and w[2] > 0.99
+
+
+# ------------------------------------------------------------------ dual gradient
+def test_dual_gradient_structure():
+    prior = jnp.full((4,), 0.25)
+    lam = prior
+    g = dro.dual_gradient(2.0, 1, lam, prior, alpha=0.5, regularizer=dro.chi2_regularizer)
+    # at lam == prior the chi2 gradient is zero -> only the e_i term remains
+    np.testing.assert_allclose(np.asarray(g), [0, 2.0, 0, 0], atol=1e-6)

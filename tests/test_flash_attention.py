@@ -1,0 +1,119 @@
+"""Flash attention Pallas kernel vs the pure-jnp oracle (interpret mode).
+
+Sweeps shapes, dtypes, masks (causal / sliding window), and block sizes, and
+cross-checks against the model's XLA attention path.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ops import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(bh, sq, sk, hd, dtype=jnp.float32, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = (jax.random.normal(k1, (bh, sq, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(k2, (bh, sk, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(k3, (bh, sk, hd)) * 0.5).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("sq,sk,hd,bq,bk", [
+    (128, 128, 64, 32, 32),
+    (256, 256, 128, 64, 64),
+    (64, 256, 32, 32, 64),   # cross-length (query shorter than kv)
+    (256, 256, 100, 64, 32), # non-128 head_dim
+])
+def test_kernel_matches_ref_causal(sq, sk, hd, bq, bk):
+    q, k, v = _qkv(3, sq, sk, hd)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("window", [16, 64, 250])
+def test_kernel_matches_ref_sliding_window(window):
+    q, k, v = _qkv(2, 256, 256, 64, seed=1)
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_kernel_dtypes(dtype, atol):
+    q, k, v = _qkv(2, 128, 128, 64, dtype=dtype, seed=2)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=32, block_k=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=atol, rtol=1e-2
+    )
+    assert out.dtype == dtype
+
+
+def test_kernel_skips_fully_masked_blocks_correctly():
+    """Causal masking with small blocks: early q rows see few kv blocks."""
+    q, k, v = _qkv(1, 256, 256, 32, seed=3)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=32, block_k=32, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+def test_ops_wrapper_matches_model_attention():
+    """ops.flash_attention over [B,S,H,hd] == the model's XLA attention."""
+    from repro.models.config import ModelConfig
+    from repro.models.layers import _repeat_kv, apply_attention, init_attention
+
+    cfg = ModelConfig(
+        name="t", family="dense", num_layers=1, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=97, head_dim=16, dtype="float32",
+    )
+    p = init_attention(KEY, cfg)
+    x = 0.1 * jax.random.normal(KEY, (2, 64, cfg.d_model))
+    ref = apply_attention(p, x, cfg, causal=True)
+
+    # reproduce the projection, run the kernel, project out
+    from repro.models.layers import _project_qkv
+
+    positions = jnp.arange(64)
+    q, k, v = _project_qkv(p, x, x, cfg, positions, positions, False)
+    k = _repeat_kv(k, cfg.num_heads)
+    v = _repeat_kv(v, cfg.num_heads)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32, interpret=True)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+def test_padding_path():
+    """Non-block-multiple sequence lengths round-trip through the padded path."""
+    B, S, H, hd = 1, 100, 2, 32
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = 0.5 * jax.random.normal(k1, (B, S, H, hd))
+    k = 0.5 * jax.random.normal(k2, (B, S, H, hd))
+    v = 0.5 * jax.random.normal(k3, (B, S, H, hd))
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    ref = flash_attention_ref(qf, kf, vf, causal=True)
+    ref = ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+def test_online_softmax_invariance_to_block_size():
+    """Defining property: the result must not depend on the kv block size."""
+    q, k, v = _qkv(2, 128, 128, 64, seed=4)
+    outs = [
+        np.asarray(flash_attention_pallas(q, k, v, causal=True, block_q=32,
+                                          block_k=bk, interpret=True))
+        for bk in (16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=2e-5, rtol=1e-4)

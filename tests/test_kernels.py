@@ -1,0 +1,156 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweep, interpret=True."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.quantize import dequantize_pallas, quantize_pallas
+from repro.kernels.topk import block_topk_pallas
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ----------------------------------------------------------------- quantize
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("rows", [64, 512, 1536])
+def test_quantize_kernel_matches_ref(bits, rows):
+    x = jax.random.normal(KEY, (rows, 128), jnp.float32)
+    xi = jax.random.uniform(jax.random.PRNGKey(1), x.shape)
+    norm = jnp.linalg.norm(x)
+    lvl_k, sign_k = quantize_pallas(x, xi, norm, bits, interpret=True)
+    lvl_r, sign_r = ref.quantize_ref(x, xi, norm, bits)
+    np.testing.assert_array_equal(np.asarray(lvl_k), np.asarray(lvl_r))
+    np.testing.assert_array_equal(np.asarray(sign_k), np.asarray(sign_r))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_dequantize_kernel_matches_ref(bits):
+    x = jax.random.normal(KEY, (512, 128), jnp.float32)
+    xi = jax.random.uniform(jax.random.PRNGKey(1), x.shape)
+    norm = jnp.linalg.norm(x)
+    lvl, sign = ref.quantize_ref(x, xi, norm, bits)
+    scale = norm / ((1 << bits) * ref.tau_for(x.size, bits))
+    out_k = dequantize_pallas(lvl, sign, scale, bits, interpret=True)
+    out_r = ref.dequantize_ref(lvl, sign, scale, bits)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantize_roundtrip_contraction(bits):
+    """Kernel roundtrip must satisfy the Assumption-3.2 style error bound."""
+    x = jax.random.normal(KEY, (1024, 128), jnp.float32)
+    xi = jax.random.uniform(jax.random.PRNGKey(1), x.shape)
+    norm = jnp.linalg.norm(x)
+    lvl, sign = quantize_pallas(x, xi, norm, bits, interpret=True)
+    tau = ref.tau_for(x.size, bits)
+    scale = norm / ((1 << bits) * tau)
+    xhat = dequantize_pallas(lvl, sign, scale, bits, interpret=True)
+    err = float(jnp.sum((xhat - x) ** 2) / jnp.sum(x**2))
+    assert err <= (1 - 1 / tau) + 0.1
+
+
+def test_quantize_wire_size():
+    """Packed payload is (bits+1)/8 bytes per element."""
+    x = jax.random.normal(KEY, (512, 128), jnp.float32)
+    xi = jax.random.uniform(KEY, x.shape)
+    lvl, sign = quantize_pallas(x, xi, jnp.linalg.norm(x), 4, interpret=True)
+    assert lvl.size == x.size // 2  # 2 levels / byte
+    assert sign.size == x.size // 8  # 8 signs / byte
+
+
+# -------------------------------------------------------------------- top-k
+@pytest.mark.parametrize("block", [128, 512, 1024])
+@pytest.mark.parametrize("nb", [4, 64, 300])
+def test_topk_kernel_matches_ref(block, nb):
+    x = jax.random.normal(KEY, (nb, block), jnp.float32)
+    k = max(1, block // 4)
+    out_k = block_topk_pallas(x, k, interpret=True)
+    out_r = ref.block_topk_ref(x, k)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_kernel_dtypes(dtype):
+    x = jax.random.normal(KEY, (16, 256)).astype(dtype)
+    out = block_topk_pallas(x, 64, interpret=True)
+    assert out.dtype == dtype
+    # kept entries match original values
+    mask = np.asarray(out, np.float32) != 0
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32)[mask], np.asarray(x, np.float32)[mask], rtol=1e-3
+    )
+
+
+@pytest.mark.parametrize("frac", [0.1, 0.25, 0.5])
+def test_topk_kernel_count_and_energy(frac):
+    block = 1024
+    x = jax.random.normal(KEY, (32, block), jnp.float32)
+    k = int(frac * block)
+    out = np.asarray(block_topk_pallas(x, k, interpret=True))
+    counts = (out != 0).sum(axis=1)
+    assert (counts <= k).all()
+    assert (counts >= k - 8).all()  # bisection converges to within ties
+    # contraction: per-row residual energy <= (1 - frac) * energy + tolerance
+    xn = np.asarray(x)
+    res = ((xn - out) ** 2).sum(1)
+    tot = (xn**2).sum(1)
+    assert (res <= (1 - frac) * tot * 1.05 + 1e-6).all()
+
+
+def test_topk_keeps_largest_entries():
+    x = jnp.zeros((1, 128)).at[0, 7].set(10.0).at[0, 100].set(-9.0).at[0, 55].set(0.01)
+    out = np.asarray(block_topk_pallas(x, 2, interpret=True))[0]
+    assert out[7] == 10.0 and out[100] == -9.0
+    assert (out != 0).sum() == 2
+
+
+# ---------------------------------------------------------------- ops layer
+@pytest.mark.parametrize("shape", [(1000,), (33, 77), (8, 16, 25)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_ops_quantize_roundtrip_arbitrary_shapes(shape, bits):
+    x = jax.random.normal(KEY, shape, jnp.float32)
+    payload = ops.quantize(x, KEY, bits=bits)
+    xhat = ops.dequantize(payload, shape, jnp.float32, bits=bits)
+    assert xhat.shape == shape
+    err = float(jnp.sum((xhat - x) ** 2) / jnp.sum(x**2))
+    assert err < 0.9
+
+
+@pytest.mark.parametrize("shape", [(4096,), (100, 41)])
+def test_ops_block_topk_arbitrary_shapes(shape):
+    x = jax.random.normal(KEY, shape, jnp.float32)
+    out = ops.block_topk(x, fraction=0.25, block=512)
+    assert out.shape == shape
+    err = float(jnp.sum((out - x) ** 2) / jnp.sum(x**2))
+    assert err <= 0.75 * 1.1
+
+
+def test_kernel_compressors_plug_into_gossip():
+    from repro.core import gossip, topology
+
+    topo = topology.ring(4)
+    comp = ops.KernelQuantization(bits=4, interpret=True)
+    theta = {"w": jax.random.normal(KEY, (4, 640))}
+    state = gossip.choco_init(theta)
+    t, s = gossip.choco_round(theta, state, topo, 0.3, comp, KEY)
+    assert t["w"].shape == (4, 640)
+    # average preservation still holds with the kernel compressor
+    np.testing.assert_allclose(
+        np.asarray(t["w"].mean(0)), np.asarray(theta["w"].mean(0)), atol=1e-4
+    )
+
+
+def test_kernel_vs_core_block_topk_equivalence():
+    """Kernel bisection selection ~= exact top-k from the core compressor."""
+    from repro.core.compression import BlockTopK
+
+    x = jax.random.normal(KEY, (2048,), jnp.float32)
+    exact = BlockTopK(fraction=0.25, block=512)(x)
+    kern = ops.block_topk(x, fraction=0.25, block=512)
+    # selections may differ at the threshold boundary; energies must agree
+    e_exact = float(jnp.sum(exact**2))
+    e_kern = float(jnp.sum(kern**2))
+    assert abs(e_exact - e_kern) / e_exact < 0.02

@@ -1,0 +1,67 @@
+"""Mixing matrices: Assumption 3.1 (symmetric, doubly stochastic, rho in (0,1])."""
+import numpy as np
+import pytest
+
+from repro.core import topology as topo
+
+
+ALL = [
+    topo.ring(10),
+    topo.ring(16),
+    topo.torus_2d(16),
+    topo.torus_2d(25),
+    topo.mesh(8),
+    topo.star(10),
+    topo.erdos_renyi(12, 0.4, seed=3),
+]
+
+
+@pytest.mark.parametrize("t", ALL, ids=lambda t: f"{t.name}{t.num_nodes}")
+def test_doubly_stochastic_symmetric(t):
+    w = t.mixing
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-12)
+    assert (w >= -1e-12).all()
+
+
+@pytest.mark.parametrize("t", ALL, ids=lambda t: f"{t.name}{t.num_nodes}")
+def test_spectral_gap_in_range(t):
+    assert 0.0 < t.spectral_gap <= 1.0 + 1e-12
+
+
+@pytest.mark.parametrize("t", ALL, ids=lambda t: f"{t.name}{t.num_nodes}")
+def test_supported_on_adjacency(t):
+    off_graph = (t.adjacency == 0) & (np.abs(t.mixing) > 1e-12)
+    assert not off_graph.any()
+
+
+def test_mesh_is_one_shot_consensus():
+    assert topo.mesh(8).spectral_gap == pytest.approx(1.0)
+
+
+def test_denser_topologies_have_larger_gap():
+    ring, torus, mesh = topo.ring(16), topo.torus_2d(16), topo.mesh(16)
+    assert ring.spectral_gap < torus.spectral_gap < mesh.spectral_gap
+
+
+@pytest.mark.parametrize("t", [topo.ring(10), topo.torus_2d(16), topo.mesh(6)])
+def test_circulant_shift_decomposition_matches_matrix(t):
+    m = t.num_nodes
+    w_from_shifts = np.zeros((m, m))
+    for shift, weight in t.shifts:
+        w_from_shifts += weight * np.roll(np.eye(m), shift, axis=1)
+    np.testing.assert_allclose(w_from_shifts, t.mixing, atol=1e-12)
+
+
+def test_consensus_step_size_positive():
+    for t in ALL:
+        for delta in (1.0, 0.25, 0.06):
+            g = t.consensus_step_size(delta)
+            assert 0 < g <= 1.0, (t.name, delta, g)
+
+
+def test_metropolis_on_star_doubly_stochastic():
+    w = topo.metropolis_weights(topo.star(7).adjacency)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
