@@ -1,0 +1,81 @@
+"""Gossip-round benchmark — fused vs packed vs unpacked CHOCO paths.
+
+Times one complete ``choco_round`` (jitted, state donated semantics aside)
+per {compressor x topology x d} for the three dispatch paths:
+
+  fused     single-pass Pallas kernels (kernels/choco_fused.py)
+  packed    encode once, roll the packed payload, dequantize per shift
+  unpacked  decode first, mix dense f32 (the numerics oracle)
+
+On CPU the kernels run in interpret mode, so absolute numbers are indicative
+only, but the *ratio* tracks the eliminated full-tensor passes — the fused
+path must stay ahead of packed (the acceptance bar is >=1.5x at d >= 2^20).
+``benchmarks.run`` persists these rows to BENCH_G.json so the perf
+trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip
+from repro.core.topology import make_topology
+from repro.kernels.ops import KernelQuantization
+
+M = 8  # nodes; ring degree 2, torus degree 4
+
+
+def _time_round(topo, comp, theta, state, key, reps, **round_kw):
+    fn = jax.jit(
+        lambda t, s, k: gossip.choco_round(t, s, topo, 0.2, comp, k, **round_kw)
+    )
+    jax.block_until_ready(fn(theta, state, key))  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(theta, state, key))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3  # ms
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    # the acceptance bar lives at d >= 2^20, so quick mode still measures it
+    ds = [1 << 14, 1 << 20] if quick else [1 << 14, 1 << 17, 1 << 20, 1 << 22]
+    reps = 3 if quick else 5
+    paths = {
+        "fused": dict(fused=True),
+        "packed": dict(packed=True),
+        "unpacked": dict(packed=False),
+    }
+    for bits in (8, 4):
+        comp = KernelQuantization(bits=bits)
+        for topo_name in ("ring", "torus"):
+            topo = make_topology(topo_name, M)
+            for d in ds:
+                theta = {"w": jax.random.normal(jax.random.PRNGKey(0), (M, d))}
+                state = gossip.choco_init(theta)
+                key = jax.random.PRNGKey(1)
+                ms = {
+                    name: _time_round(topo, comp, theta, state, key, reps, **kw)
+                    for name, kw in paths.items()
+                }
+                rows.append({
+                    "table": "G",
+                    "compressor": f"kq{bits}b",
+                    "topology": topo_name,
+                    "d": d,
+                    "ms_fused": ms["fused"],
+                    "ms_packed": ms["packed"],
+                    "ms_unpacked": ms["unpacked"],
+                    "speedup_fused_vs_packed": ms["packed"] / ms["fused"],
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

@@ -9,17 +9,24 @@ Paper-artifact map:
   T5  bench_comparison     Table 5 + Fig. 5 (vs DRFA / DR-DSGD, bits)
   F3  bench_convergence    Figs. 3/4 (worst-loss curves)
   K   bench_kernels        Pallas kernels vs refs
+  G   bench_gossip         fused vs packed vs unpacked CHOCO round
 Roofline/dry-run artifacts live in launch/dryrun.py (§Dry-run, §Roofline).
+
+Each suite's rows are persisted to BENCH_<suite>.json next to this package's
+parent (the repo root) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 from benchmarks import (
     bench_comparison,
     bench_compression,
     bench_convergence,
+    bench_gossip,
     bench_kernels,
     bench_regularization,
     bench_topology,
@@ -33,22 +40,47 @@ SUITES = {
     "T5": bench_comparison,
     "F3": bench_convergence,
     "K": bench_kernels,
+    "G": bench_gossip,
 }
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def persist(sid: str, rows: list[dict], quick: bool) -> Path:
+    """Write one suite's rows to BENCH_<sid>.json in the repo root."""
+    path = REPO_ROOT / f"BENCH_{sid}.json"
+    payload = {
+        "suite": sid,
+        "module": SUITES[sid].__name__,
+        "quick": quick,
+        "rows": rows,
+    }
+    path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale iteration counts")
     ap.add_argument("--only", default=None, help="comma-separated suite ids (e.g. T2,K)")
+    ap.add_argument(
+        "--no-persist", action="store_true", help="skip writing BENCH_<suite>.json"
+    )
     args = ap.parse_args()
 
     selected = args.only.split(",") if args.only else list(SUITES)
+    unknown = [sid for sid in selected if sid not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite id(s) {unknown}; choose from {sorted(SUITES)}")
     for sid in selected:
         mod = SUITES[sid]
         t0 = time.time()
         print(f"\n=== {sid}: {mod.__name__} ===")
         rows = mod.run(quick=not args.full)
         print_rows(rows)
+        if not args.no_persist:
+            path = persist(sid, rows, quick=not args.full)
+            print(f"[{sid} rows -> {path.name}]")
         print(f"[{sid} done in {time.time() - t0:.1f}s]")
 
 

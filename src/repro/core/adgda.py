@@ -28,10 +28,19 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dro
 from repro.core.compression import Compressor, make_compressor
-from repro.core.gossip import CHOCOState, choco_init, choco_round, mix_stacked, payload_bits
+from repro.core.gossip import (
+    BLOCK_SCAN_ELEMS,
+    CHOCOState,
+    _scan_plan,
+    choco_init,
+    choco_round,
+    mix_stacked,
+    payload_bits,
+)
 from repro.core.topology import Topology, make_topology
 
 __all__ = ["ADGDAConfig", "ADGDAState", "ADGDA"]
@@ -52,6 +61,10 @@ class ADGDAConfig:
     gamma: float | str | None = None  # None -> 0.5*delta; "theory" -> Thm 4.1 value
     momentum: float = 0.0
     packed_gossip: bool = True
+    fused_gossip: bool = False  # dispatch the theta gossip to the single-pass
+    # Pallas fast path (kernels/choco_fused.py).  Requires a compressor that
+    # advertises ``supports_fused_round`` (e.g. "kq4b"/"kq8b") and a
+    # circulant topology; other combinations silently use the reference path
     robust: bool = True  # False -> CHOCO-SGD (fixed lambda = prior)
     track_average: bool = True  # f32 running mean of the network mean (theta_o,
     # Thm 4.1); disable at transformer scale to avoid an extra f32 model copy
@@ -92,23 +105,66 @@ class ADGDA:
         m = config.num_nodes
         self.prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
         self.regularizer = dro.make_regularizer(config.regularizer)
+        # provisional gamma until init()/step_impl() see the real leaf sizes
+        self.gamma = self._resolve_gamma(4096)
+
+    @staticmethod
+    def _encode_dim(theta) -> int:
+        """Largest per-node encode size the gossip layer will actually run on
+        a *stacked* pytree — the dimension the compressor's contraction
+        factor delta depends on.  Mirrors ``gossip._scan_plan``'s chunking
+        exactly (a chunk can exceed BLOCK_SCAN_ELEMS when the leaf has no
+        suitable divisor, or the whole leaf is encoded when no plan exists)."""
+        best = 1
+        for leaf in jax.tree_util.tree_leaves(theta):
+            inner = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+            plan = _scan_plan(leaf.shape, inner, BLOCK_SCAN_ELEMS)
+            best = max(best, inner if plan is None else inner // plan[1])
+        return best
+
+    def _resolve_gamma(self, d: int) -> float:
+        """Consensus step size gamma for a model with d parameters.
+
+        Gamma trades consensus speed against compression-noise injection; the
+        right value scales with the compressor's contraction factor delta,
+        which for quantization depends on the dimension d being compressed
+        (delta = 1/tau, tau = 1 + min(d/2^2b, sqrt(d)/2^b) — paper eq. (2)).
+        Resolution order:
+
+        * ``config.gamma == "theory"`` — the Theorem 4.1 value
+          rho^2 delta / (16 rho + rho^2 + 4 beta^2 + 2 rho beta^2 - 8 rho delta):
+          provably convergent but very conservative in practice;
+        * ``config.gamma`` a number — used verbatim (the paper grid-searches
+          gamma per compression level, §5.1.1);
+        * ``config.gamma is None`` — 0.5 * delta(d), a robust default across
+          our experiments.
+
+        Called with a 4096-element placeholder at construction, then from
+        ``init()`` and again at every ``step_impl()`` trace with the size of
+        the largest per-leaf encode of the actual pytree.  The compressor contracts *leaf-wise* (and
+        the gossip layer chunks leaves above BLOCK_SCAN_ELEMS), so the
+        dimension that matters is the largest single encode — the smallest
+        delta any leaf sees — not the total parameter count.
+        """
         delta = getattr(self.compressor, "delta", 1.0)
         if hasattr(self.compressor, "delta_for"):
-            delta = self.compressor.delta_for(4096)  # representative payload size
-        if config.gamma == "theory":
-            # Theorem 4.1 value — provably convergent but very conservative
-            self.gamma = self.topology.consensus_step_size(max(delta, 1e-3))
-        elif config.gamma is not None:
-            self.gamma = float(config.gamma)
-        else:
-            # the paper grid-searches gamma per compression level (§5.1.1);
-            # 0.5*delta is a robust default across our experiments
-            self.gamma = 0.5 * max(delta, 1e-3)
+            delta = self.compressor.delta_for(max(int(d), 1))
+        if self.config.gamma == "theory":
+            return self.topology.consensus_step_size(max(delta, 1e-3))
+        if self.config.gamma is not None:
+            return float(self.config.gamma)
+        return 0.5 * max(delta, 1e-3)
 
     # ------------------------------------------------------------------ init
     def init(self, params: Any, rng: jax.Array) -> ADGDAState:
         m = self.config.num_nodes
         stacked = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape).copy(), params)
+        # re-resolve gamma from the actual params pytree (the construction-
+        # time value used a placeholder d).  step_impl() recomputes this from
+        # the state's own leaf shapes at trace time, so a step() traced
+        # without init() still gets the right value; this assignment just
+        # keeps ``trainer.gamma`` introspectable.
+        self.gamma = self._resolve_gamma(self._encode_dim(stacked))
         lam = jnp.broadcast_to(self.prior[None], (m, m)).copy()
         return ADGDAState(
             step=jnp.zeros((), jnp.int32),
@@ -265,14 +321,18 @@ class ADGDA:
             lam_new = state.lam
 
         # --- compressed consensus on theta ----------------------------------
+        # gamma is re-resolved from the traced state's own (static) leaf
+        # shapes, so it is correct even if step() was traced without init()
+        gamma = self._resolve_gamma(self._encode_dim(theta_half))
         theta_new, choco_new = choco_round(
             theta_half,
             state.choco,
             self.topology,
-            self.gamma,
+            gamma,
             self.compressor,
             gossip_key,
             packed=cfg.packed_gossip,
+            fused=cfg.fused_gossip,
         )
 
         # --- running average of the network mean (output theta_o) -----------

@@ -223,10 +223,23 @@ class BlockTopK(Compressor):
 
 
 def make_compressor(spec: str) -> Compressor:
-    """Parse 'none' | 'qXb' (e.g. q4b) | 'topK%' (e.g. top10) | 'btopK%'."""
+    """Parse 'none' | 'qXb' (e.g. q4b) | 'kqXb' (Pallas kernel-backed, packed
+    wire format, supports the fused gossip round) | 'topK%' (e.g. top10) |
+    'btopK%'."""
     spec = spec.lower().strip()
     if spec in ("none", "identity"):
         return Identity()
+    if spec.startswith("kq") and spec.endswith("b"):
+        # lazy import: kernels.ops imports this module for the Compressor base
+        from repro.kernels.ops import KernelQuantization
+
+        bits = int(spec[2:-1])
+        if bits not in (1, 2, 4, 8):
+            raise ValueError(
+                f"kernel quantization needs bits in (1, 2, 4, 8) so levels "
+                f"pack into bytes; got {spec!r}"
+            )
+        return KernelQuantization(bits=bits)
     if spec.startswith("q") and spec.endswith("b"):
         return RandomQuantization(bits=int(spec[1:-1]))
     if spec.startswith("btop"):

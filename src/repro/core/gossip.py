@@ -128,8 +128,15 @@ def _scan_plan(shape, inner_elems: int, block_scan_elems: int):
     return None
 
 
-def _round_leaf(leaf, hat, s, key, topology, gamma, compressor, use_packed):
+def _round_leaf(leaf, hat, s, key, topology, gamma, compressor, use_packed,
+                use_fused=False):
     """One CHOCO round for a single stacked leaf [m, ...]."""
+    if use_fused:
+        # single-pass fused kernels: averaging + residual + quantize + pack +
+        # hat update in one VMEM pass, then a multi-shift dequant-accumulate
+        # into s — never materializing per-neighbor f32 tensors.  Payload is
+        # bit-identical to the packed/unpacked oracle paths below.
+        return compressor.fused_round(leaf, hat, s, key, topology, gamma)
     m = leaf.shape[0]
     inner_shape, dtype = leaf.shape[1:], leaf.dtype
     # averaging step (uses the *old* public variables)
@@ -159,11 +166,18 @@ def choco_round(
     compressor: Compressor,
     key: jax.Array,
     packed: bool = True,
+    fused: bool = False,
     block_scan_elems: int = BLOCK_SCAN_ELEMS,
 ):
     """One compressed-consensus round over all leaves of a stacked pytree.
 
     Returns (theta_new, state_new).  theta_half leaves are [m, ...].
+
+    ``fused=True`` dispatches to the compressor's single-pass Pallas fast
+    path (kernels/choco_fused.py) when the compressor advertises
+    ``supports_fused_round`` and the topology is circulant; other
+    (compressor, topology) combinations silently fall back to the
+    packed/unpacked reference paths, which serve as cross-check oracles.
     """
     leaves, treedef = jax.tree_util.tree_flatten(theta_half)
     hat_leaves = treedef.flatten_up_to(state.theta_hat)
@@ -171,6 +185,11 @@ def choco_round(
     keys = jax.random.split(key, len(leaves))
 
     use_packed = packed and topology.shifts is not None and not isinstance(compressor, Identity)
+    use_fused = (
+        fused
+        and topology.shifts is not None
+        and getattr(compressor, "supports_fused_round", False)
+    )
 
     new_theta, new_hat, new_s = [], [], []
     for leaf, hat, s, k in zip(leaves, hat_leaves, s_leaves, keys):
@@ -193,7 +212,8 @@ def choco_round(
                 i, kb = xs
                 take = lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=axis, keepdims=False)
                 return None, _round_leaf(
-                    take(lc), take(hc), take(sc), kb, topology, gamma, compressor, use_packed
+                    take(lc), take(hc), take(sc), kb, topology, gamma, compressor,
+                    use_packed, use_fused
                 )
 
             _, (tn, hn, sn) = jax.lax.scan(body, None, (jnp.arange(chunks), bk))
@@ -206,7 +226,7 @@ def choco_round(
             theta_new, hat_new, s_new = unshape(tn), unshape(hn), unshape(sn)
         else:
             theta_new, hat_new, s_new = _round_leaf(
-                leaf, hat, s, k, topology, gamma, compressor, use_packed
+                leaf, hat, s, k, topology, gamma, compressor, use_packed, use_fused
             )
         new_theta.append(theta_new)
         new_hat.append(hat_new)

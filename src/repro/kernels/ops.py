@@ -54,6 +54,18 @@ def dequantize(payload, shape, dtype, bits: int = 4, interpret: bool | None = No
     return out.reshape(-1)[:d].reshape(shape).astype(dtype)
 
 
+def fused_choco_round_leaf(leaf, hat, s, key, topology, gamma, bits: int,
+                           interpret: bool | None = None):
+    """One fused-kernel CHOCO round for a stacked leaf [m, ...] — see
+    kernels/choco_fused.py.  Returns (theta_new, hat_new, s_new)."""
+    from repro.kernels.choco_fused import fused_round_leaf
+
+    if interpret is None:
+        interpret = _interpret_default()
+    return fused_round_leaf(leaf, hat, s, key, topology.shifts, gamma, bits,
+                            interpret=interpret)
+
+
 def block_topk(x: jax.Array, fraction: float = 0.25, block: int = 1024, interpret: bool | None = None):
     """Dense blockwise top-k sparsification of a tensor (any shape)."""
     if interpret is None:
@@ -74,10 +86,23 @@ class KernelQuantization(Compressor):
 
     The payload that crosses the gossip collective is the *packed* uint8
     levels + uint8 sign bitmask: (bits + 1)/8 bytes per element instead of 4.
+
+    Supports the single-pass fused gossip round (``fused_round``): the whole
+    CHOCO averaging + encode + multi-shift dequant-accumulate runs in two
+    Pallas kernels instead of ~8+deg full-tensor HBM passes.
     """
 
     bits: int = 4
     interpret: bool | None = None
+
+    # capability flag checked by gossip.choco_round's fused dispatch
+    supports_fused_round = True
+
+    def fused_round(self, leaf, hat, s, key, topology, gamma):
+        """Fused-kernel round for one stacked leaf; see choco_fused.py."""
+        return fused_choco_round_leaf(
+            leaf, hat, s, key, topology, gamma, self.bits, self.interpret
+        )
 
     @property
     def delta(self):

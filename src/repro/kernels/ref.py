@@ -84,6 +84,50 @@ def dequantize_ref(packed_lvl: jax.Array, packed_sign: jax.Array, scale: jax.Arr
     return jnp.where(sign == 1, -mag, mag)
 
 
+# ---------------------------------------------------- fused CHOCO round oracles
+def fused_encode_ref(theta_new, hat, xi, scales, bits: int):
+    """Oracle for choco_fused.fused_encode_pallas.
+
+    theta_new/hat: [m, rows, 128], xi: [m, rows, 128] f32, scales: [m, 2]
+    (encode scale 2^b/||resid||, dequant scale ||resid||/(2^b tau)).
+    Returns (packed_lvl [m, rows/pack, 128] u8, packed_sign [m, rows/8, 128]
+    u8, hat_new [m, rows, 128]).
+    """
+    resid = (theta_new - hat).astype(jnp.float32)
+    q = jnp.floor(jnp.abs(resid) * scales[:, 0, None, None] + xi)
+    lvlf = jnp.clip(q, 0, (1 << bits) - 1)
+    neg = resid < 0
+
+    def pack_nodes(vals, per_byte, width):
+        m, rows, _ = vals.shape
+        v = vals.reshape(m, rows // per_byte, per_byte, LANES).astype(jnp.uint32)
+        sh = (jnp.arange(per_byte, dtype=jnp.uint32) * width).reshape(1, 1, per_byte, 1)
+        return (v << sh).sum(axis=2).astype(jnp.uint8)
+
+    packed_lvl = pack_nodes(lvlf.astype(jnp.uint32), 8 // bits, bits)
+    packed_sign = pack_nodes(neg.astype(jnp.uint32), 8, 1)
+    mag = lvlf * scales[:, 1, None, None]
+    hat_new = (hat.astype(jnp.float32) + jnp.where(neg, -mag, mag)).astype(hat.dtype)
+    return packed_lvl, packed_sign, hat_new
+
+
+def fused_mix_ref(rolled_lvl, rolled_sign, s, wscale, bits: int):
+    """Oracle for choco_fused.fused_mix_pallas.
+
+    rolled_lvl: [K, m, rows/pack, 128] u8, rolled_sign: [K, m, rows/8, 128]
+    u8, s: [m, rows, 128], wscale: [K, m] f32.  Returns s_new [m, rows, 128]:
+    s + sum_k deq(payload_k) * wscale[k].
+    """
+    K, m = rolled_lvl.shape[:2]
+    acc = jnp.zeros(s.shape, jnp.float32)
+    for k in range(K):
+        lvl = jax.vmap(lambda pl_, ps_: dequantize_ref(pl_, ps_, 1.0, bits))(
+            rolled_lvl[k], rolled_sign[k]
+        )
+        acc = acc + lvl * wscale[k, :, None, None]
+    return (s.astype(jnp.float32) + acc).astype(s.dtype)
+
+
 # ---------------------------------------------------------------- block top-k
 def block_topk_ref(x: jax.Array, k: int, iters: int = BISECT_ITERS) -> jax.Array:
     """Per-row top-k masking via threshold bisection; x: [nb, block] f32.
