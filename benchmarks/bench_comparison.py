@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import MODELS, make_adgda, make_loss, train_trainer, worst_avg
-from repro.core import DRDSGD, DRDSGDConfig, DRFA, DRFAConfig
+from repro.core import DRDSGDConfig, DRFAConfig, drdsgd_trainer, drfa_trainer
 from repro.data import (
     contrast_shift_classification,
     instrument_shift_classification,
@@ -28,7 +28,7 @@ SETUPS = {
 
 def _train_drdsgd(data, steps, seed):
     init_fn, apply_fn = MODELS["logistic"]
-    tr = DRDSGD(
+    tr = drdsgd_trainer(
         DRDSGDConfig(num_nodes=data.num_nodes, topology="torus", alpha=6.0,
                      eta_theta=0.3, lr_decay=0.99),
         make_loss(apply_fn),
@@ -46,7 +46,7 @@ def _train_drdsgd(data, steps, seed):
 
 def _train_drfa(data, steps, seed, local_steps=10):
     init_fn, apply_fn = MODELS["logistic"]
-    tr = DRFA(
+    tr = drfa_trainer(
         DRFAConfig(num_nodes=data.num_nodes, participation=0.5, local_steps=local_steps,
                    eta_theta=0.3, eta_lambda=0.1, lr_decay=0.99),
         make_loss(apply_fn),
@@ -54,7 +54,9 @@ def _train_drfa(data, steps, seed, local_steps=10):
     state = tr.init(init_fn(data.dim, data.num_classes), jax.random.PRNGKey(seed))
     gen = data.batches(50 * local_steps, seed=seed)
     rounds = max(1, steps // local_steps)
-    bits = float(tr.bits_per_round(state))
+    # per-iteration bits put DRFA's K-local-step rounds on the same x-axis as
+    # the per-iteration algorithms (one DRFA round = K gradient iterations)
+    bits_iter = float(tr.bits_per_round(state, per_iteration=True))
     curve = []
     m = data.num_nodes
     for t in range(rounds):
@@ -62,8 +64,11 @@ def _train_drfa(data, steps, seed, local_steps=10):
         xb = xb.reshape(m, local_steps, -1, data.dim)
         yb = yb.reshape(m, local_steps, -1)
         state, aux = tr.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
-        curve.append((t * local_steps, float(aux["worst_loss"]), (t + 1) * bits))
-    return tr.network_mean(state), {"total_bits": bits * rounds, "curve": curve}, apply_fn
+        iters = (t + 1) * local_steps
+        curve.append((t * local_steps, float(aux["worst_loss"]), iters * bits_iter))
+    return tr.network_mean(state), {
+        "total_bits": bits_iter * local_steps * rounds, "curve": curve,
+    }, apply_fn
 
 
 def run(quick: bool = True, seeds=(0, 1)) -> list[dict]:

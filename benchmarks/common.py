@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ADGDA, ADGDAConfig, choco_sgd
+from repro.core import ADGDAConfig, adgda_trainer, choco_sgd
 from repro.data import HeterogeneousDataset
 
 
@@ -112,7 +112,7 @@ def make_adgda(model: str, m: int, *, robust=True, alpha=0.05, topology="ring",
         regularizer=regularizer, robust=robust, **kw,
     )
     loss = make_loss(apply_fn)
-    trainer = ADGDA(cfg, loss) if robust else choco_sgd(cfg, loss)
+    trainer = adgda_trainer(cfg, loss) if robust else choco_sgd(cfg, loss)
     return trainer, init_fn, apply_fn
 
 

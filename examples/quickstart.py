@@ -5,14 +5,34 @@ We train the same logistic model twice — with standard decentralized learning
 (CHOCO-SGD) and with the paper's AD-GDA — using identical 4-bit-quantized
 ring gossip, and compare the worst-distribution accuracy.
 
-  PYTHONPATH=src python examples/quickstart.py
+Both trainers are compositions of the same ``DecentralizedTrainer``: an
+``ADGDAConfig`` picks the oracle (microbatches / local steps), the
+``repro.optim`` optimizer + schedule (sgd/adam, const/exp/cosine + warmup),
+the dual (projected ascent vs. frozen prior) and the CHOCO consensus
+(compressor, packed/fused dispatch):
+
+    trainer = adgda_trainer(ADGDAConfig(num_nodes=10, compressor="q4b",
+                                        optimizer="sgd", momentum=0.9), loss_fn)
+    state = trainer.init(params, key)
+    state, aux = trainer.step(state, batch)
+
+``choco_sgd(config, loss_fn)`` is the same composition with the dual frozen
+at the prior — the comparison below isolates exactly the robustness delta.
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 600]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ADGDA, ADGDAConfig, choco_sgd
+from repro.core import ADGDAConfig, adgda_trainer, choco_sgd
 from repro.data import rotated_minority_classification
+
+args = argparse.ArgumentParser()
+args.add_argument("--steps", type=int, default=600, help="training rounds per trainer")
+args = args.parse_args()
 
 # --- heterogeneous data: nodes 0-1 are the "minority" sub-population -------
 data = rotated_minority_classification(num_nodes=10, minority_nodes=2, seed=1)
@@ -26,7 +46,7 @@ def loss_fn(params, batch, rng):
     return (logz - gold).mean()
 
 
-def train(trainer, steps=600):
+def train(trainer, steps):
     params = {"w": jnp.zeros((data.dim, data.num_classes)), "b": jnp.zeros((data.num_classes,))}
     state = trainer.init(params, jax.random.PRNGKey(0))
     gen = data.batches(50, seed=0)
@@ -49,8 +69,8 @@ config = ADGDAConfig(
     alpha=0.05, eta_theta=0.3, eta_lambda=0.2, lr_decay=0.99,
 )
 
-robust, bits = train(ADGDA(config, loss_fn))
-standard, _ = train(choco_sgd(config, loss_fn))
+robust, bits = train(adgda_trainer(config, loss_fn), args.steps)
+standard, _ = train(choco_sgd(config, loss_fn), args.steps)
 
 print(f"transmitted per node: {bits / 8e6:.1f} MB (4-bit compressed ring gossip)")
 print(f"{'':12s} {'majority':>9s} {'minority':>9s} {'worst':>9s}")

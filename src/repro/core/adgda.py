@@ -19,33 +19,41 @@ Notes kept faithful to the paper:
 * the dual gossip is uncompressed (m ≪ d);
 * output solution is the running average of the network mean (Theorem 4.1);
   we track it with an O(1)-memory running mean.
+
+Since the composable-trainer refactor this module is a *factory*:
+:func:`adgda_trainer` assembles a :class:`repro.core.trainer.DecentralizedTrainer`
+from an :class:`ADGDAConfig` (oracle × ``repro.optim`` optimizer × projected-
+ascent dual × CHOCO consensus).  The :class:`ADGDA` class is a deprecated
+shim with the pre-refactor signature; its trajectories are pinned to the
+seed implementation bit-for-bit (tests/test_trainer_parity.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple
+import warnings
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import dro
 from repro.core.compression import Compressor, make_compressor
-from repro.core.gossip import (
-    BLOCK_SCAN_ELEMS,
-    CHOCOState,
-    _scan_plan,
-    choco_init,
-    choco_round,
-    mix_stacked,
-    payload_bits,
-)
 from repro.core.topology import Topology, make_topology
+from repro.core.trainer import (
+    ChocoConsensus,
+    DecentralizedTrainer,
+    FrozenPrior,
+    LocalUpdate,
+    LossFn,
+    ProjectedAscent,
+    TrainerState,
+)
+from repro.optim import adam, make_schedule, sgd
 
-__all__ = ["ADGDAConfig", "ADGDAState", "ADGDA"]
+__all__ = ["ADGDAConfig", "ADGDAState", "ADGDA", "adgda_trainer"]
 
-LossFn = Callable[[Any, Any, jax.Array], jax.Array]
+# Deprecated alias: the composed trainer's state replaces the monolithic
+# ADGDAState (the hand-rolled ``momentum`` field became the optimizer's
+# ``opt: OptState``; ``choco`` became the generic ``consensus`` slot).
+ADGDAState = TrainerState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,315 +80,101 @@ class ADGDAConfig:
     # microbatches so only one microbatch's activations are live at a time
     # (same stochastic gradient, Algorithm 1 unchanged; see EXPERIMENTS §Perf)
     grad_accum_dtype: str = "float32"  # accumulator dtype ("bfloat16" halves it)
-    local_steps: int = 1  # K local SGD steps between gossip rounds — the
+    local_steps: int = 1  # K local optimizer steps between gossip rounds — the
     # paper's §6 "natural extension" (event-triggered communication): the
     # collective term drops ~K x at the cost of extra consensus drift.
-    # Batch leaves must carry K x the per-node samples; mutually exclusive
-    # with microbatches > 1.
+    # Batch leaves must carry K x the per-node samples.  Composes with any
+    # optimizer/momentum (the optimizer state is carried in the trainer
+    # state); still mutually exclusive with microbatches > 1.
     spmd_axis_name: tuple | str | None = None  # mesh axes the node vmap maps
     # to — lets sharding constraints inside the model (context-parallel
     # attention) apply under the per-node vmap
+    optimizer: str = "sgd"  # "sgd" (momentum/nesterov) or "adam"
+    schedule: str = "exp"  # "const" | "exp" (lr_decay^t, the paper's) | "cosine"
+    warmup: int = 0  # linear LR warmup steps (0 = off)
+    total_steps: int = 1000  # horizon for the cosine schedule
+    nesterov: bool = False  # Nesterov momentum (sgd only)
 
     def build(self) -> tuple[Topology, Compressor]:
         return make_topology(self.topology, self.num_nodes), make_compressor(self.compressor)
 
+    def make_optimizer(self):
+        """(optimizer, schedule) from the config — the primal update rule."""
+        sched = make_schedule(
+            self.schedule, self.eta_theta, decay=self.lr_decay,
+            total_steps=self.total_steps, warmup=self.warmup,
+        )
+        if self.optimizer == "sgd":
+            return sgd(sched, momentum=self.momentum, nesterov=self.nesterov), sched
+        if self.optimizer == "adam":
+            if self.momentum != 0.0 or self.nesterov:
+                raise ValueError(
+                    "momentum/nesterov only apply to optimizer='sgd'; adam's "
+                    "first moment is its b1 decay (fixed at the adam() default)"
+                )
+            return adam(sched), sched
+        raise ValueError(f"unknown optimizer {self.optimizer!r}; choose sgd or adam")
 
-class ADGDAState(NamedTuple):
-    step: jax.Array
-    theta: Any  # stacked pytree [m, ...]
-    lam: jax.Array  # [m, m] — each node's copy of the dual variable
-    choco: CHOCOState
-    momentum: Any  # stacked pytree [m, ...] (zeros when momentum == 0)
-    theta_avg: Any  # running mean over time of the network mean (theta_o)
-    rng: jax.Array
+
+def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None) -> DecentralizedTrainer:
+    """Compose AD-GDA (paper Algorithm 1) as a :class:`DecentralizedTrainer`.
+
+    ``robust=False`` yields CHOCO-SGD (dual frozen at the prior) — same wire,
+    same oracle, so the comparison isolates exactly the robustness delta.
+    """
+    m = config.num_nodes
+    topology, compressor = config.build()
+    prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
+    optimizer, schedule = config.make_optimizer()
+
+    local = LocalUpdate(
+        optimizer=optimizer,
+        schedule=schedule,
+        microbatches=config.microbatches,
+        local_steps=config.local_steps,
+        grad_accum_dtype=config.grad_accum_dtype,
+        spmd_axis_name=config.spmd_axis_name,
+    )
+    if config.robust:
+        dual = ProjectedAscent(
+            prior=prior,
+            alpha=config.alpha,
+            eta_lambda=config.eta_lambda,
+            regularizer=dro.make_regularizer(config.regularizer),
+            topology=topology,
+        )
+    else:
+        dual = FrozenPrior(prior=prior)
+    consensus = ChocoConsensus(
+        topology, compressor, config.gamma,
+        packed=config.packed_gossip, fused=config.fused_gossip,
+    )
+    return DecentralizedTrainer(
+        loss_fn,
+        num_nodes=m,
+        local=local,
+        dual=dual,
+        consensus=consensus,
+        prior=prior,
+        track_average=config.track_average,
+        config=config,
+    )
 
 
-class ADGDA:
-    """Functional trainer: ``state = trainer.init(...)``; ``state, aux = trainer.step(...)``."""
+class ADGDA(DecentralizedTrainer):
+    """Deprecated shim: the pre-refactor monolithic trainer's signature.
 
-    def __init__(self, config: ADGDAConfig, loss_fn: LossFn, prior: jax.Array | None = None):
-        self.config = config
-        self.loss_fn = loss_fn
-        self.topology, self.compressor = config.build()
-        m = config.num_nodes
-        self.prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
+    ``ADGDA(config, loss_fn, prior)`` now composes a
+    :class:`DecentralizedTrainer` (see :func:`adgda_trainer`); ``init`` /
+    ``step`` / ``network_mean`` / ``bits_per_round`` behave identically.
+    """
+
+    def __init__(self, config: ADGDAConfig, loss_fn: LossFn, prior=None):
+        warnings.warn(
+            "repro.core.ADGDA is deprecated; compose a trainer with "
+            "repro.core.adgda.adgda_trainer(config, loss_fn) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        self._init_as(adgda_trainer(config, loss_fn, prior))
         self.regularizer = dro.make_regularizer(config.regularizer)
-        # provisional gamma until init()/step_impl() see the real leaf sizes
-        self.gamma = self._resolve_gamma(4096)
-
-    @staticmethod
-    def _encode_dim(theta) -> int:
-        """Largest per-node encode size the gossip layer will actually run on
-        a *stacked* pytree — the dimension the compressor's contraction
-        factor delta depends on.  Mirrors ``gossip._scan_plan``'s chunking
-        exactly (a chunk can exceed BLOCK_SCAN_ELEMS when the leaf has no
-        suitable divisor, or the whole leaf is encoded when no plan exists)."""
-        best = 1
-        for leaf in jax.tree_util.tree_leaves(theta):
-            inner = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
-            plan = _scan_plan(leaf.shape, inner, BLOCK_SCAN_ELEMS)
-            best = max(best, inner if plan is None else inner // plan[1])
-        return best
-
-    def _resolve_gamma(self, d: int) -> float:
-        """Consensus step size gamma for a model with d parameters.
-
-        Gamma trades consensus speed against compression-noise injection; the
-        right value scales with the compressor's contraction factor delta,
-        which for quantization depends on the dimension d being compressed
-        (delta = 1/tau, tau = 1 + min(d/2^2b, sqrt(d)/2^b) — paper eq. (2)).
-        Resolution order:
-
-        * ``config.gamma == "theory"`` — the Theorem 4.1 value
-          rho^2 delta / (16 rho + rho^2 + 4 beta^2 + 2 rho beta^2 - 8 rho delta):
-          provably convergent but very conservative in practice;
-        * ``config.gamma`` a number — used verbatim (the paper grid-searches
-          gamma per compression level, §5.1.1);
-        * ``config.gamma is None`` — 0.5 * delta(d), a robust default across
-          our experiments.
-
-        Called with a 4096-element placeholder at construction, then from
-        ``init()`` and again at every ``step_impl()`` trace with the size of
-        the largest per-leaf encode of the actual pytree.  The compressor contracts *leaf-wise* (and
-        the gossip layer chunks leaves above BLOCK_SCAN_ELEMS), so the
-        dimension that matters is the largest single encode — the smallest
-        delta any leaf sees — not the total parameter count.
-        """
-        delta = getattr(self.compressor, "delta", 1.0)
-        if hasattr(self.compressor, "delta_for"):
-            delta = self.compressor.delta_for(max(int(d), 1))
-        if self.config.gamma == "theory":
-            return self.topology.consensus_step_size(max(delta, 1e-3))
-        if self.config.gamma is not None:
-            return float(self.config.gamma)
-        return 0.5 * max(delta, 1e-3)
-
-    # ------------------------------------------------------------------ init
-    def init(self, params: Any, rng: jax.Array) -> ADGDAState:
-        m = self.config.num_nodes
-        stacked = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape).copy(), params)
-        # re-resolve gamma from the actual params pytree (the construction-
-        # time value used a placeholder d).  step_impl() recomputes this from
-        # the state's own leaf shapes at trace time, so a step() traced
-        # without init() still gets the right value; this assignment just
-        # keeps ``trainer.gamma`` introspectable.
-        self.gamma = self._resolve_gamma(self._encode_dim(stacked))
-        lam = jnp.broadcast_to(self.prior[None], (m, m)).copy()
-        return ADGDAState(
-            step=jnp.zeros((), jnp.int32),
-            theta=stacked,
-            lam=lam,
-            choco=choco_init(stacked),
-            momentum=jax.tree.map(jnp.zeros_like, stacked) if self.config.momentum > 0 else (),
-            theta_avg=(
-                jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params)
-                if self.config.track_average
-                else ()
-            ),
-            # defensive copy: step() donates its input state, which would
-            # otherwise delete the caller's key buffer
-            rng=jnp.array(rng, copy=True),
-        )
-
-    # ------------------------------------------------------------------ step
-    @partial(jax.jit, static_argnums=0, donate_argnums=1)
-    def step(self, state: ADGDAState, batch: Any) -> tuple[ADGDAState, dict]:
-        return self.step_impl(state, batch)
-
-    def step_impl(self, state: ADGDAState, batch: Any) -> tuple[ADGDAState, dict]:
-        """Unjitted Algorithm-1 step — lower/compile with custom shardings via
-        ``jax.jit(trainer.step_impl, in_shardings=...)`` (see launch/dryrun.py)."""
-        cfg = self.config
-        m = cfg.num_nodes
-        rng, gossip_key, *node_keys = jax.random.split(state.rng, m + 2)
-        node_keys = jnp.stack(node_keys)
-
-        t = state.step.astype(jnp.float32)
-        eta_th = cfg.eta_theta * jnp.power(cfg.lr_decay, t)
-
-        # node i weights its gradient by its own dual coordinate lam_i[i],
-        # normalized by the prior so that lam == prior recovers plain SGD
-        # (paper §5.2.2).  CHOCO-SGD (robust=False) keeps scale 1.
-        if cfg.robust:
-            scale = (jnp.diagonal(state.lam) / self.prior).astype(jnp.float32)
-        else:
-            scale = jnp.ones((m,), jnp.float32)
-
-        # --- K local steps between gossip rounds (paper §6 extension) ------
-        if cfg.local_steps > 1:
-            assert cfg.microbatches == 1 and cfg.momentum == 0.0, (
-                "local_steps composes with neither microbatches nor momentum"
-            )
-            K = cfg.local_steps
-
-            def to_k(leaf):  # [m, K*b, ...] -> [K, m, b, ...]
-                assert leaf.shape[1] % K == 0, (
-                    f"per-node batch {leaf.shape[1]} not divisible by local_steps {K}"
-                )
-                return leaf.reshape((m, K, leaf.shape[1] // K) + leaf.shape[2:]).swapaxes(0, 1)
-
-            kb = jax.tree.map(to_k, batch)
-
-            def local_body(theta, mbatch):
-                l, g = jax.vmap(
-                    jax.value_and_grad(self.loss_fn), spmd_axis_name=cfg.spmd_axis_name
-                )(theta, mbatch, node_keys)
-                theta = jax.tree.map(
-                    lambda p, gg: (
-                        p.astype(jnp.float32)
-                        - eta_th
-                        * gg.astype(jnp.float32)
-                        * scale.reshape((m,) + (1,) * (gg.ndim - 1))
-                    ).astype(p.dtype),
-                    theta,
-                    g,
-                )
-                return theta, l
-
-            theta_half, losses_k = jax.lax.scan(local_body, state.theta, kb)
-            losses = losses_k.mean(0)
-            return self._finish_round(
-                state, theta_half, losses, (), rng, gossip_key, eta_th
-            )
-
-        # --- local oracle: per-node loss and gradient ---------------------
-        if cfg.microbatches > 1:
-            k = cfg.microbatches
-            acc_dt = jnp.dtype(cfg.grad_accum_dtype)
-
-            def to_mb(leaf):  # [m, b, ...] -> [k, m, b/k, ...]
-                assert leaf.shape[1] % k == 0, (
-                    f"per-node batch {leaf.shape[1]} not divisible by microbatches {k}"
-                )
-                return leaf.reshape((m, k, leaf.shape[1] // k) + leaf.shape[2:]).swapaxes(0, 1)
-
-            mb = jax.tree.map(to_mb, batch)
-
-            def mb_body(carry, mbatch):
-                acc_l, acc_g = carry
-                l, g = jax.vmap(
-                    jax.value_and_grad(self.loss_fn), spmd_axis_name=cfg.spmd_axis_name
-                )(state.theta, mbatch, node_keys)
-                acc_g = jax.tree.map(
-                    lambda a, gg: a + (gg.astype(acc_dt) / k), acc_g, g
-                )
-                return (acc_l + l / k, acc_g), None
-
-            zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), state.theta)
-            (losses, grads), _ = jax.lax.scan(
-                mb_body, (jnp.zeros((m,), jnp.float32), zeros_g), mb
-            )
-        else:
-            losses, grads = jax.vmap(
-                jax.value_and_grad(self.loss_fn), spmd_axis_name=cfg.spmd_axis_name
-            )(state.theta, batch, node_keys)
-
-        # --- primal descent half-step --------------------------------------
-        def sgd(g, mom):
-            g = g.astype(jnp.float32) * scale.reshape((m,) + (1,) * (g.ndim - 1))
-            if cfg.momentum > 0:
-                mom = cfg.momentum * mom + g
-                g = mom
-            return g, mom
-
-        flat_g, tdef = jax.tree_util.tree_flatten(grads)
-        if cfg.momentum > 0:
-            flat_m = tdef.flatten_up_to(state.momentum)
-            stepped = [sgd(g, mo) for g, mo in zip(flat_g, flat_m)]
-            update = jax.tree_util.tree_unflatten(tdef, [s[0] for s in stepped])
-            momentum = jax.tree_util.tree_unflatten(tdef, [s[1] for s in stepped])
-        else:
-            stepped = [sgd(g, None) for g in flat_g]
-            update = jax.tree_util.tree_unflatten(tdef, [s[0] for s in stepped])
-            momentum = ()
-        theta_half = jax.tree.map(
-            lambda p, u: (p.astype(jnp.float32) - eta_th * u).astype(p.dtype),
-            state.theta,
-            update,
-        )
-        return self._finish_round(state, theta_half, losses, momentum, rng, gossip_key, eta_th)
-
-    def _finish_round(self, state, theta_half, losses, momentum, rng, gossip_key, eta_th):
-        """Dual ascent + compressed consensus + bookkeeping (shared by the
-        single-step, microbatched and local-steps oracles)."""
-        cfg = self.config
-        m = cfg.num_nodes
-        eta_la = cfg.eta_lambda
-
-        # --- dual projected ascent half-step --------------------------------
-        if cfg.robust:
-            node_ids = jnp.arange(m)
-            dual_grads = jax.vmap(
-                lambda f, i, l: dro.dual_gradient(
-                    f, i, l, self.prior, cfg.alpha, self.regularizer
-                )
-            )(losses, node_ids, state.lam)
-            lam_half = jax.vmap(dro.project_simplex)(state.lam + eta_la * dual_grads)
-            lam_new = mix_stacked(lam_half, self.topology)  # uncompressed gossip
-        else:
-            lam_new = state.lam
-
-        # --- compressed consensus on theta ----------------------------------
-        # gamma is re-resolved from the traced state's own (static) leaf
-        # shapes, so it is correct even if step() was traced without init()
-        gamma = self._resolve_gamma(self._encode_dim(theta_half))
-        theta_new, choco_new = choco_round(
-            theta_half,
-            state.choco,
-            self.topology,
-            gamma,
-            self.compressor,
-            gossip_key,
-            packed=cfg.packed_gossip,
-            fused=cfg.fused_gossip,
-        )
-
-        # --- running average of the network mean (output theta_o) -----------
-        if cfg.track_average:
-            tt = state.step.astype(jnp.float32)
-            theta_avg = jax.tree.map(
-                lambda avg, th: (avg * tt + th.astype(jnp.float32).mean(0)) / (tt + 1.0),
-                state.theta_avg,
-                theta_new,
-            )
-        else:
-            theta_avg = ()
-
-        aux = {
-            "losses": losses,
-            "worst_loss": losses.max(),
-            "mean_loss": losses.mean(),
-            "lambda_mean": lam_new.mean(0),
-            "consensus_err": _consensus_error(theta_new),
-            "eta_theta": eta_th,
-        }
-        new_state = ADGDAState(
-            step=state.step + 1,
-            theta=theta_new,
-            lam=lam_new,
-            choco=choco_new,
-            momentum=momentum,
-            theta_avg=theta_avg,
-            rng=rng,
-        )
-        return new_state, aux
-
-    # ------------------------------------------------------------- utilities
-    def network_mean(self, state: ADGDAState):
-        return jax.tree.map(lambda x: x.astype(jnp.float32).mean(0), state.theta)
-
-    def bits_per_round(self, state: ADGDAState) -> float:
-        """Bits transmitted per round by the busiest node (theta + lambda)."""
-        theta_bits = payload_bits(self.compressor, state.theta, self.topology)
-        lam_bits = 32.0 * self.config.num_nodes * self.topology.max_degree
-        return theta_bits + lam_bits
-
-
-def _consensus_error(theta_stacked) -> jax.Array:
-    """Xi_theta = sum_i ||theta_i - theta_bar||^2 over all leaves."""
-    err = 0.0
-    for leaf in jax.tree_util.tree_leaves(theta_stacked):
-        leaf = leaf.astype(jnp.float32)
-        mean = leaf.mean(0, keepdims=True)
-        err = err + jnp.sum((leaf - mean) ** 2)
-    return err

@@ -1,9 +1,9 @@
 """Baselines the paper compares against (Table 1, §5.2).
 
 * CHOCO-SGD (Koloskova et al. 2019) — standard (non-robust) decentralized SGD
-  with compressed gossip.  Obtained from :class:`repro.core.adgda.ADGDA` with
-  ``robust=False`` (fixed lambda = prior); no separate code path so the
-  comparison isolates exactly the distributional-robustness delta.
+  with compressed gossip.  Obtained from :func:`repro.core.adgda.adgda_trainer`
+  with ``robust=False`` (dual frozen at the prior); no separate code path so
+  the comparison isolates exactly the distributional-robustness delta.
 
 * DR-DSGD (Issaid et al. 2022) — decentralized distributionally robust SGD
   restricted to the KL regularizer, for which the inner max has the closed
@@ -18,33 +18,54 @@
   models and periodically updates lambda by projected ascent on the observed
   losses.
 
-All trainers share the ADGDA interface: ``init(params, rng)``,
-``step(state, batch) -> (state, aux)``, ``network_mean(state)``,
-``bits_per_round(state)`` — so the communication-efficiency benchmark
-(paper Fig. 5) treats them uniformly.
+All three are factory compositions of
+:class:`repro.core.trainer.DecentralizedTrainer` — pick a
+:class:`LocalUpdate` oracle, a dual, a consensus — and therefore share the
+uniform interface ``init(params, rng)``, ``step(state, batch) -> (state,
+aux)``, ``network_mean(state)``, ``bits_per_round(state, per_iteration=...)``
+that the communication-efficiency benchmark (paper Fig. 5) relies on.  The
+``DRDSGD`` / ``DRFA`` classes are deprecated shims over the factories.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, NamedTuple
+import warnings
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import dro
-from repro.core.adgda import ADGDA, ADGDAConfig, LossFn
-from repro.core.gossip import mix_stacked, payload_bits
-from repro.core.compression import Identity
+from repro.core.adgda import ADGDAConfig, LossFn, adgda_trainer
 from repro.core.topology import make_topology
+from repro.core.trainer import (
+    DecentralizedTrainer,
+    ExactConsensus,
+    FedAvg,
+    KLClosedForm,
+    LocalUpdate,
+    SampledAscent,
+    TrainerState,
+)
+from repro.optim import make_schedule, sgd
 
-__all__ = ["choco_sgd", "DRDSGD", "DRDSGDConfig", "DRFA", "DRFAConfig"]
+__all__ = [
+    "choco_sgd",
+    "DRDSGD",
+    "DRDSGDConfig",
+    "DRDSGDState",
+    "drdsgd_trainer",
+    "DRFA",
+    "DRFAConfig",
+    "DRFAState",
+    "drfa_trainer",
+]
+
+# Deprecated aliases: both baselines now run on the shared composed state.
+DRDSGDState = TrainerState
+DRFAState = TrainerState
 
 
-def choco_sgd(config: ADGDAConfig, loss_fn: LossFn, prior=None) -> ADGDA:
+def choco_sgd(config: ADGDAConfig, loss_fn: LossFn, prior=None) -> DecentralizedTrainer:
     """CHOCO-SGD = AD-GDA with the dual frozen at the prior."""
-    return ADGDA(dataclasses.replace(config, robust=False), loss_fn, prior)
+    return adgda_trainer(dataclasses.replace(config, robust=False), loss_fn, prior)
 
 
 # --------------------------------------------------------------------- DR-DSGD
@@ -58,77 +79,34 @@ class DRDSGDConfig:
     momentum: float = 0.0
 
 
-class DRDSGDState(NamedTuple):
-    step: jax.Array
-    theta: Any
-    momentum: Any
-    theta_avg: Any
-    rng: jax.Array
+def drdsgd_trainer(config: DRDSGDConfig, loss_fn: LossFn, prior=None) -> DecentralizedTrainer:
+    """Compose DR-DSGD: closed-form KL dual × exact (uncompressed) gossip."""
+    m = config.num_nodes
+    topology = make_topology(config.topology, config.num_nodes)
+    prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
+    sched = make_schedule("exp", config.eta_theta, decay=config.lr_decay)
+    return DecentralizedTrainer(
+        loss_fn,
+        num_nodes=m,
+        local=LocalUpdate(optimizer=sgd(sched, momentum=config.momentum), schedule=sched),
+        dual=KLClosedForm(prior=prior, alpha=config.alpha),
+        consensus=ExactConsensus(topology),
+        prior=prior,
+        config=config,
+    )
 
 
-class DRDSGD:
+class DRDSGD(DecentralizedTrainer):
+    """Deprecated shim over :func:`drdsgd_trainer` (pre-refactor signature)."""
+
     def __init__(self, config: DRDSGDConfig, loss_fn: LossFn, prior=None):
-        self.config = config
-        self.loss_fn = loss_fn
-        self.topology = make_topology(config.topology, config.num_nodes)
-        m = config.num_nodes
-        self.prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
-
-    def init(self, params: Any, rng: jax.Array) -> DRDSGDState:
-        m = self.config.num_nodes
-        stacked = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape).copy(), params)
-        return DRDSGDState(
-            step=jnp.zeros((), jnp.int32),
-            theta=stacked,
-            momentum=jax.tree.map(jnp.zeros_like, stacked),
-            theta_avg=jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params),
-            rng=jnp.array(rng, copy=True),
+        warnings.warn(
+            "repro.core.DRDSGD is deprecated; use "
+            "repro.core.baselines.drdsgd_trainer(config, loss_fn) instead",
+            DeprecationWarning,
+            stacklevel=2,
         )
-
-    @partial(jax.jit, static_argnums=0, donate_argnums=1)
-    def step(self, state: DRDSGDState, batch: Any):
-        cfg = self.config
-        m = cfg.num_nodes
-        rng, *node_keys = jax.random.split(state.rng, m + 1)
-        node_keys = jnp.stack(node_keys)
-
-        losses, grads = jax.vmap(jax.value_and_grad(self.loss_fn))(state.theta, batch, node_keys)
-
-        # closed-form KL dual weights (normalized over the network)
-        lam = dro.kl_closed_form_weights(losses, self.prior, cfg.alpha)
-        scale = (lam / self.prior).astype(jnp.float32)  # = m * lam for uniform prior
-
-        t = state.step.astype(jnp.float32)
-        eta = cfg.eta_theta * jnp.power(cfg.lr_decay, t)
-
-        def upd(p, g, mo):
-            g = g.astype(jnp.float32) * scale.reshape((m,) + (1,) * (g.ndim - 1))
-            mo = cfg.momentum * mo + g
-            return (p.astype(jnp.float32) - eta * mo).astype(p.dtype), mo
-
-        flat_p, tdef = jax.tree_util.tree_flatten(state.theta)
-        flat_g = tdef.flatten_up_to(grads)
-        flat_m = tdef.flatten_up_to(state.momentum)
-        stepped = [upd(p, g, mo) for p, g, mo in zip(flat_p, flat_g, flat_m)]
-        theta_half = jax.tree_util.tree_unflatten(tdef, [s[0] for s in stepped])
-        momentum = jax.tree_util.tree_unflatten(tdef, [s[1] for s in stepped])
-
-        theta_new = mix_stacked(theta_half, self.topology)  # uncompressed gossip
-
-        tt = state.step.astype(jnp.float32)
-        theta_avg = jax.tree.map(
-            lambda avg, th: (avg * tt + th.astype(jnp.float32).mean(0)) / (tt + 1.0),
-            state.theta_avg,
-            theta_new,
-        )
-        aux = {"losses": losses, "worst_loss": losses.max(), "mean_loss": losses.mean(), "lambda_mean": lam}
-        return DRDSGDState(state.step + 1, theta_new, momentum, theta_avg, rng), aux
-
-    def network_mean(self, state):
-        return jax.tree.map(lambda x: x.astype(jnp.float32).mean(0), state.theta)
-
-    def bits_per_round(self, state) -> float:
-        return payload_bits(Identity(), state.theta, self.topology)
+        self._init_as(drdsgd_trainer(config, loss_fn, prior))
 
 
 # ------------------------------------------------------------------------ DRFA
@@ -143,109 +121,54 @@ class DRFAConfig:
     momentum: float = 0.0
 
 
-class DRFAState(NamedTuple):
-    step: jax.Array
-    theta: Any  # server model (no node axis)
-    lam: jax.Array  # [m] server dual
-    theta_avg: Any
-    rng: jax.Array
+def drfa_trainer(config: DRFAConfig, loss_fn: LossFn, prior=None) -> DecentralizedTrainer:
+    """Compose DRFA: K-local-step oracle × sampled dual ascent × server averaging.
+
+    ``batch`` is stacked [m, K, ...]: K local micro-batches per client.  All
+    clients run the K local steps (static step shape); only the sampled ones
+    contribute to the server average and the dual ascent, matching partial
+    participation.
+
+    Behavior change vs. the seed ``DRFA`` class: ``config.momentum`` is now
+    honored (the seed declared but silently ignored it, always running plain
+    local SGD).  The per-client momentum buffer persists across rounds even
+    though theta resets to the server broadcast.  The default (0.0)
+    reproduces the seed trajectories bit-for-bit.
+    """
+    m = config.num_nodes
+    prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
+    num_sampled = max(1, int(round(config.participation * m)))
+    sched = make_schedule("exp", config.eta_theta, decay=config.lr_decay)
+    return DecentralizedTrainer(
+        loss_fn,
+        num_nodes=m,
+        local=LocalUpdate(
+            optimizer=sgd(sched, momentum=config.momentum),
+            schedule=sched,
+            local_steps=config.local_steps,
+            batch_layout="stacked",
+        ),
+        dual=SampledAscent(
+            prior=prior,
+            eta_lambda=config.eta_lambda,
+            local_steps=config.local_steps,
+            num_sampled=num_sampled,
+        ),
+        consensus=FedAvg(num_sampled),
+        prior=prior,
+        config=config,
+    )
 
 
-class DRFA:
-    """Distributionally Robust Federated Averaging (client-server)."""
+class DRFA(DecentralizedTrainer):
+    """Deprecated shim over :func:`drfa_trainer` (pre-refactor signature)."""
 
     def __init__(self, config: DRFAConfig, loss_fn: LossFn, prior=None):
-        self.config = config
-        self.loss_fn = loss_fn
-        m = config.num_nodes
-        self.prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
-        self.num_sampled = max(1, int(round(config.participation * m)))
-
-    def init(self, params: Any, rng: jax.Array) -> DRFAState:
-        return DRFAState(
-            step=jnp.zeros((), jnp.int32),
-            theta=jax.tree.map(lambda x: jnp.array(x, copy=True), params),
-            lam=self.prior,
-            theta_avg=jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params),
-            rng=jnp.array(rng, copy=True),
+        warnings.warn(
+            "repro.core.DRFA is deprecated; use "
+            "repro.core.baselines.drfa_trainer(config, loss_fn) instead",
+            DeprecationWarning,
+            stacklevel=2,
         )
-
-    @partial(jax.jit, static_argnums=0, donate_argnums=1)
-    def step(self, state: DRFAState, batch: Any):
-        """One communication round.
-
-        ``batch`` is stacked [m, K, ...]: K local micro-batches per client.
-        """
-        cfg = self.config
-        m = cfg.num_nodes
-        k = self.num_sampled
-        rng, sample_key, *node_keys = jax.random.split(state.rng, m + 2)
-        node_keys = jnp.stack(node_keys)
-
-        # --- sample |U| clients according to lambda (Gumbel top-k, no repl.)
-        gumbel = -jnp.log(-jnp.log(jax.random.uniform(sample_key, (m,)) + 1e-20) + 1e-20)
-        scores = jnp.log(state.lam + 1e-20) + gumbel
-        _, sampled = jax.lax.top_k(scores, k)
-        mask = jnp.zeros((m,), jnp.float32).at[sampled].set(1.0)
-
-        t = state.step.astype(jnp.float32)
-        eta = cfg.eta_theta * jnp.power(cfg.lr_decay, t)
-
-        # --- K local SGD steps at EVERY client (masked average afterwards):
-        # running all clients keeps the step shape static; only sampled ones
-        # contribute, matching partial participation.
-        def local_train(theta0, client_batch, key):
-            def body(theta, mb):
-                loss, g = jax.value_and_grad(self.loss_fn)(theta, mb, key)
-                theta = jax.tree.map(
-                    lambda p, gg: (p.astype(jnp.float32) - eta * gg.astype(jnp.float32)).astype(p.dtype),
-                    theta,
-                    g,
-                )
-                return theta, loss
-
-            theta_k, losses = jax.lax.scan(body, theta0, client_batch)
-            return theta_k, losses.mean()
-
-        theta_rep = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape), state.theta)
-        theta_locals, local_losses = jax.vmap(local_train)(theta_rep, batch, node_keys)
-
-        # --- server: average sampled client models
-        wsum = mask.sum()
-        theta_new = jax.tree.map(
-            lambda x: (
-                (x.astype(jnp.float32) * mask.reshape((m,) + (1,) * (x.ndim - 1))).sum(0) / wsum
-            ).astype(x.dtype),
-            theta_locals,
-        )
-
-        # --- dual update: projected ascent on observed losses (sampled only,
-        # importance-corrected as in Deng et al.)
-        loss_vec = local_losses * mask * (m / jnp.maximum(wsum, 1.0))
-        lam_new = dro.project_simplex(state.lam + cfg.eta_lambda * cfg.local_steps * loss_vec)
-
-        tt = state.step.astype(jnp.float32)
-        theta_avg = jax.tree.map(
-            lambda avg, th: (avg * tt + th.astype(jnp.float32)) / (tt + 1.0),
-            state.theta_avg,
-            theta_new,
-        )
-        aux = {
-            "losses": local_losses,
-            "worst_loss": local_losses.max(),
-            "mean_loss": local_losses.mean(),
-            "lambda_mean": lam_new,
-        }
-        return DRFAState(state.step + 1, theta_new, lam_new, theta_avg, rng), aux
-
-    def network_mean(self, state):
-        return jax.tree.map(lambda x: x.astype(jnp.float32), state.theta)
-
-    def bits_per_round(self, state) -> float:
-        """Busiest node = the server: |U| models down + |U| models up, f32.
-
-        One DRFA round covers K local iterations; callers comparing against
-        per-iteration algorithms should divide by ``config.local_steps``.
-        """
-        d = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(state.theta))
-        return 2.0 * self.num_sampled * d * 32.0
+        self._init_as(drfa_trainer(config, loss_fn, prior))
+        self.num_sampled = self.consensus.num_sampled

@@ -1,0 +1,714 @@
+"""Composable decentralized-DRO trainer (paper Algorithms 1-2 as one loop).
+
+AD-GDA, CHOCO-SGD, DR-DSGD (Issaid et al. 2022) and DRFA (Deng et al. 2021)
+are all the same round — local update, dual update, communication — differing
+only in which instance fills each slot.  This module factors the training
+layer into three small protocols and one driver:
+
+* :class:`LocalUpdate` — the stochastic oracle (single-step, microbatched
+  gradient accumulation, or K local steps between communication rounds) with
+  parameter updates routed through :class:`repro.optim.Optimizer` and a
+  :data:`repro.optim.Schedule` (SGD/momentum/Nesterov/Adam, const/exp/cosine
+  + warmup — no hand-rolled SGD in the algorithms anymore);
+* :class:`DualUpdate` — how the mixture weights lambda evolve: projected
+  ascent with gossip (AD-GDA), the KL closed form (DR-DSGD), frozen at the
+  prior (CHOCO-SGD), or sampled ascent on observed losses (DRFA);
+* :class:`Consensus` — how models travel the wire: the CHOCO compressed
+  round (with the ``packed``/``fused`` Pallas dispatch), exact mixing, or
+  federated server averaging.
+
+:class:`DecentralizedTrainer` composes the three and owns the round
+skeleton: RNG bookkeeping, the running average of the network mean
+(theta_o, Thm 4.1), aux metrics and bits accounting.  The paper's named
+algorithms are one-line factories over it — see ``repro.core.adgda`` and
+``repro.core.baselines`` — and new combinations (Adam-based AD-GDA, local
+steps with momentum, robust federated averaging over a ring, ...) are
+compositions, not new classes.
+
+All decentralized state is *stacked*: every pytree leaf carries a leading
+node axis of size m, which the production mesh shards over ``data`` (x
+``pod``) so the vmapped oracle is plain data parallelism and the consensus
+becomes collective-permutes (see ``repro/launch``).  Federated consensus
+(:class:`FedAvg`) instead keeps a single server model in the state and
+broadcasts it to the node axis at the start of each round.
+
+Numerics are pinned to the pre-refactor monolithic trainers bit-for-bit on
+the single-step and microbatched paths (tests/test_trainer_parity.py); the
+local-steps path applies the dual weighting before the learning rate (the
+seed multiplied in the opposite order) and is pinned to ~ULP instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dro
+from repro.core.compression import Compressor, Identity
+from repro.core.gossip import (
+    BLOCK_SCAN_ELEMS,
+    CHOCOState,
+    _scan_plan,
+    choco_init,
+    choco_round,
+    mix_stacked,
+    payload_bits,
+)
+from repro.core.topology import Topology
+from repro.optim import Optimizer, OptState, Schedule
+
+__all__ = [
+    "LossFn",
+    "TrainerState",
+    "LocalUpdate",
+    "DualUpdate",
+    "ProjectedAscent",
+    "FrozenPrior",
+    "KLClosedForm",
+    "SampledAscent",
+    "Consensus",
+    "ChocoConsensus",
+    "ExactConsensus",
+    "FedAvg",
+    "DecentralizedTrainer",
+]
+
+LossFn = Callable[[Any, Any, jax.Array], jax.Array]
+
+
+class TrainerState(NamedTuple):
+    step: jax.Array  # round counter
+    theta: Any  # stacked pytree [m, ...] (federated: server pytree, no node axis)
+    lam: jax.Array  # dual variable: [m, m] decentralized copies or [m] server-side
+    opt: OptState  # optimizer moments + its own step counter
+    consensus: Any  # CHOCOState or () — whatever Consensus.init returned
+    theta_avg: Any  # running mean over time of the network mean (theta_o)
+    rng: jax.Array
+
+
+def _apply_updates(params, updates):
+    """p <- p + u in f32, cast back to the parameter dtype."""
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+    )
+
+
+def _scale_grads(grads, scale: jax.Array, m: int):
+    """Per-node dual weighting: g_i <- lam-weight_i * g_i (in f32)."""
+    return jax.tree.map(
+        lambda g: g.astype(jnp.float32) * scale.reshape((m,) + (1,) * (g.ndim - 1)),
+        grads,
+    )
+
+
+# ============================================================== local update
+@dataclasses.dataclass(frozen=True)
+class LocalUpdate:
+    """Stochastic oracle + optimizer step on the stacked model.
+
+    One of three shapes, all sharing the dual weighting and the optimizer:
+
+    * ``microbatches == local_steps == 1`` — one vmapped value-and-grad and
+      one optimizer update per round;
+    * ``microbatches = k > 1`` — gradient accumulation: scan the oracle over
+      k microbatches so only one microbatch's activations are live at a
+      time, then one optimizer update (same stochastic gradient);
+    * ``local_steps = K > 1`` — K full optimizer updates between
+      communication rounds (paper §6's event-triggered extension).  The
+      optimizer state (momentum, Adam moments) carries across the inner
+      steps AND across rounds; the schedule and Adam bias correction are
+      evaluated once per *round* (the optimizer's step counter advances by
+      one per round regardless of K), matching the seed trainers' per-round
+      learning-rate decay.
+
+    ``batch_layout`` fixes how K local batches arrive: ``"flat"`` packs them
+    along the per-node batch axis (leaves ``[m, K*b, ...]``, AD-GDA style),
+    ``"stacked"`` gives them a dedicated axis (leaves ``[m, K, ...]``, DRFA
+    style).
+    """
+
+    optimizer: Optimizer
+    schedule: Schedule
+    microbatches: int = 1
+    local_steps: int = 1
+    grad_accum_dtype: str = "float32"
+    spmd_axis_name: Any = None  # mesh axes the node vmap maps to
+    batch_layout: str = "flat"
+
+    def __post_init__(self):
+        if self.local_steps > 1 and self.microbatches > 1:
+            raise ValueError("local_steps and microbatches do not compose")
+        if self.batch_layout not in ("flat", "stacked"):
+            raise ValueError(f"unknown batch_layout {self.batch_layout!r}")
+
+    def init(self, theta_stacked) -> OptState:
+        return self.optimizer.init(theta_stacked)
+
+    def lr(self, opt_state: OptState) -> jax.Array:
+        return self.schedule(opt_state.step)
+
+    def _oracle(self, loss_fn, theta, batch, node_keys):
+        return jax.vmap(
+            jax.value_and_grad(loss_fn), spmd_axis_name=self.spmd_axis_name
+        )(theta, batch, node_keys)
+
+    def step(self, loss_fn: LossFn, theta, opt_state: OptState, batch, node_keys,
+             weights_fn: Callable[[jax.Array], jax.Array]):
+        """Run the oracle + optimizer; returns (theta_half, opt_state, losses).
+
+        ``weights_fn(losses) -> [m]`` supplies the dual gradient weighting
+        (called after every loss evaluation, so closed-form duals see the
+        freshest losses).
+        """
+        m = node_keys.shape[0]
+
+        if self.local_steps > 1:
+            return self._local_steps(loss_fn, theta, opt_state, batch, node_keys,
+                                     weights_fn, m)
+        if self.microbatches > 1:
+            losses, grads = self._microbatched(loss_fn, theta, batch, node_keys, m)
+        else:
+            losses, grads = self._oracle(loss_fn, theta, batch, node_keys)
+
+        scale = weights_fn(losses)
+        updates, opt_state = self.optimizer.update(
+            _scale_grads(grads, scale, m), opt_state, theta
+        )
+        return _apply_updates(theta, updates), opt_state, losses
+
+    # -------------------------------------------------- gradient accumulation
+    def _microbatched(self, loss_fn, theta, batch, node_keys, m):
+        k = self.microbatches
+        acc_dt = jnp.dtype(self.grad_accum_dtype)
+
+        def to_mb(leaf):  # [m, b, ...] -> [k, m, b/k, ...]
+            assert leaf.shape[1] % k == 0, (
+                f"per-node batch {leaf.shape[1]} not divisible by microbatches {k}"
+            )
+            return leaf.reshape((m, k, leaf.shape[1] // k) + leaf.shape[2:]).swapaxes(0, 1)
+
+        mb = jax.tree.map(to_mb, batch)
+
+        def body(carry, mbatch):
+            acc_l, acc_g = carry
+            l, g = self._oracle(loss_fn, theta, mbatch, node_keys)
+            acc_g = jax.tree.map(lambda a, gg: a + (gg.astype(acc_dt) / k), acc_g, g)
+            return (acc_l + l / k, acc_g), None
+
+        zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), theta)
+        (losses, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((m,), jnp.float32), zeros_g), mb
+        )
+        return losses, grads
+
+    # ------------------------------------------------------- K local steps
+    def _local_steps(self, loss_fn, theta, opt_state, batch, node_keys, weights_fn, m):
+        K = self.local_steps
+        if self.batch_layout == "stacked":  # [m, K, ...] -> [K, m, ...]
+            kb = jax.tree.map(lambda x: x.swapaxes(0, 1), batch)
+        else:
+
+            def to_k(leaf):  # [m, K*b, ...] -> [K, m, b, ...]
+                assert leaf.shape[1] % K == 0, (
+                    f"per-node batch {leaf.shape[1]} not divisible by local_steps {K}"
+                )
+                return leaf.reshape((m, K, leaf.shape[1] // K) + leaf.shape[2:]).swapaxes(0, 1)
+
+            kb = jax.tree.map(to_k, batch)
+
+        round_step = opt_state.step
+
+        def body(carry, mbatch):
+            theta, ostate = carry
+            l, g = self._oracle(loss_fn, theta, mbatch, node_keys)
+            scale = weights_fn(l)
+            updates, ostate = self.optimizer.update(_scale_grads(g, scale, m), ostate, theta)
+            # schedule / Adam bias correction are per-round: every inner step
+            # sees the round's step count, bumped once after the scan
+            ostate = ostate._replace(step=round_step)
+            return (_apply_updates(theta, updates), ostate), l
+
+        (theta, opt_state), losses_k = jax.lax.scan(body, (theta, opt_state), kb)
+        return theta, opt_state._replace(step=round_step + 1), losses_k.mean(0)
+
+
+# ================================================================ dual update
+class DualUpdate:
+    """How the mixture weights lambda evolve across rounds.
+
+    ``grad_weights`` is the per-node scaling the oracle applies to gradients
+    (lambda_i / pi_i so that lambda == prior recovers plain SGD, paper
+    §5.2.2); ``update`` advances lambda after the oracle using the observed
+    per-node losses.  ``begin`` lets a dual draw per-round randomness
+    (DRFA's client sampling) and share it with the consensus via ``ctx``.
+    """
+
+    needs_key: bool = False
+
+    def init(self, m: int) -> jax.Array:
+        raise NotImplementedError
+
+    def begin(self, lam: jax.Array, key: jax.Array | None):
+        return None
+
+    def grad_weights(self, lam: jax.Array, losses: jax.Array) -> jax.Array:
+        m = losses.shape[0]
+        return jnp.ones((m,), jnp.float32)
+
+    def update(self, lam: jax.Array, losses: jax.Array, ctx) -> jax.Array:
+        raise NotImplementedError
+
+    def bits_per_round(self) -> float:
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectedAscent(DualUpdate):
+    """AD-GDA's dual: projected gradient ascent + uncompressed lambda gossip.
+
+    Every node keeps its own copy of lambda (state [m, m]); the round is
+
+        lam_i <- sum_j w_ij P_simplex(lam_j + eta_lam (f_j e_j + alpha grad r))
+
+    The lambda gossip is uncompressed — m floats per neighbor, negligible
+    next to the model payload but accounted in :meth:`bits_per_round`.
+    """
+
+    prior: jax.Array
+    alpha: float
+    eta_lambda: float
+    regularizer: dro.Regularizer
+    topology: Topology
+
+    def init(self, m: int) -> jax.Array:
+        return jnp.broadcast_to(self.prior[None], (m, m)).copy()
+
+    def grad_weights(self, lam, losses):
+        return (jnp.diagonal(lam) / self.prior).astype(jnp.float32)
+
+    def update(self, lam, losses, ctx):
+        m = lam.shape[0]
+        node_ids = jnp.arange(m)
+        dual_grads = jax.vmap(
+            lambda f, i, l: dro.dual_gradient(
+                f, i, l, self.prior, self.alpha, self.regularizer
+            )
+        )(losses, node_ids, lam)
+        lam_half = jax.vmap(dro.project_simplex)(lam + self.eta_lambda * dual_grads)
+        return mix_stacked(lam_half, self.topology)
+
+    def bits_per_round(self) -> float:
+        return 32.0 * int(self.prior.shape[0]) * self.topology.max_degree
+
+
+@dataclasses.dataclass(frozen=True)
+class FrozenPrior(DualUpdate):
+    """Non-robust baseline (CHOCO-SGD): lambda frozen at the prior."""
+
+    prior: jax.Array
+
+    def init(self, m: int) -> jax.Array:
+        return jnp.broadcast_to(self.prior[None], (m, m)).copy()
+
+    def update(self, lam, losses, ctx):
+        return lam
+
+
+@dataclasses.dataclass(frozen=True)
+class KLClosedForm(DualUpdate):
+    """DR-DSGD's dual: the KL inner max in closed form, lambda_i ∝ pi_i e^{f_i/alpha}.
+
+    No ascent state to carry — lambda is recomputed from the current losses
+    every round (state [m], kept for logging).  The normalizer is one scalar
+    all-reduce per round (32 bits; accounting difference vs. gossiping it is
+    nil, see baselines module docstring).
+    """
+
+    prior: jax.Array
+    alpha: float
+
+    def init(self, m: int) -> jax.Array:
+        return jnp.asarray(self.prior)
+
+    def grad_weights(self, lam, losses):
+        w = dro.kl_closed_form_weights(losses, self.prior, self.alpha)
+        return (w / self.prior).astype(jnp.float32)
+
+    def update(self, lam, losses, ctx):
+        return dro.kl_closed_form_weights(losses, self.prior, self.alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledAscent(DualUpdate):
+    """DRFA's dual: sample |U| clients ~ lambda (Gumbel top-k, no replacement),
+    run the round on them, then projected ascent on the importance-corrected
+    observed losses.  The sampling mask is shared with :class:`FedAvg`
+    through the round ``ctx``."""
+
+    prior: jax.Array
+    eta_lambda: float
+    local_steps: int
+    num_sampled: int
+
+    needs_key = True
+
+    def init(self, m: int) -> jax.Array:
+        return jnp.asarray(self.prior)
+
+    def begin(self, lam, key):
+        m = lam.shape[0]
+        gumbel = -jnp.log(-jnp.log(jax.random.uniform(key, (m,)) + 1e-20) + 1e-20)
+        scores = jnp.log(lam + 1e-20) + gumbel
+        _, sampled = jax.lax.top_k(scores, self.num_sampled)
+        return jnp.zeros((m,), jnp.float32).at[sampled].set(1.0)
+
+    def update(self, lam, losses, mask):
+        m = lam.shape[0]
+        wsum = mask.sum()
+        loss_vec = losses * mask * (m / jnp.maximum(wsum, 1.0))
+        return dro.project_simplex(lam + self.eta_lambda * self.local_steps * loss_vec)
+
+
+# ================================================================== consensus
+class Consensus:
+    """How the half-step models travel the wire."""
+
+    needs_key: bool = False
+    federated: bool = False  # True -> state.theta has no node axis
+
+    def init(self, theta_stacked):
+        return ()
+
+    def mix(self, theta_half, state, key: jax.Array | None, ctx):
+        raise NotImplementedError
+
+    def bits_per_round(self, theta_template) -> float:
+        raise NotImplementedError
+
+
+class ChocoConsensus(Consensus):
+    """CHOCO-GOSSIP compressed round (Koloskova et al. 2019) with the
+    ``packed`` (mix encoded payload) / ``fused`` (single-pass Pallas,
+    kernels/choco_fused.py) dispatch preserved from ``gossip.choco_round``."""
+
+    needs_key = True
+
+    def __init__(self, topology: Topology, compressor: Compressor,
+                 gamma: float | str | None = None, *, packed: bool = True,
+                 fused: bool = False):
+        self.topology = topology
+        self.compressor = compressor
+        self.gamma_spec = gamma
+        self.packed = packed
+        self.fused = fused
+        # provisional gamma until init()/mix() see the real leaf sizes
+        self.gamma = self._resolve_gamma(4096)
+
+    @staticmethod
+    def _encode_dim(theta) -> int:
+        """Largest per-node encode size the gossip layer will actually run on
+        a *stacked* pytree — the dimension the compressor's contraction
+        factor delta depends on.  Mirrors ``gossip._scan_plan``'s chunking
+        exactly (a chunk can exceed BLOCK_SCAN_ELEMS when the leaf has no
+        suitable divisor, or the whole leaf is encoded when no plan exists)."""
+        best = 1
+        for leaf in jax.tree_util.tree_leaves(theta):
+            inner = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+            plan = _scan_plan(leaf.shape, inner, BLOCK_SCAN_ELEMS)
+            best = max(best, inner if plan is None else inner // plan[1])
+        return best
+
+    def _resolve_gamma(self, d: int) -> float:
+        """Consensus step size gamma for the largest single encode of size d.
+
+        Gamma trades consensus speed against compression-noise injection; the
+        right value scales with the compressor's contraction factor delta,
+        which for quantization depends on the dimension d being compressed
+        (delta = 1/tau, tau = 1 + min(d/2^2b, sqrt(d)/2^b) — paper eq. (2)).
+        Resolution order:
+
+        * ``gamma == "theory"`` — the Theorem 4.1 value: provably convergent
+          but very conservative in practice;
+        * a number — used verbatim (the paper grid-searches gamma per
+          compression level, §5.1.1);
+        * ``None`` — 0.5 * delta(d), a robust default across our experiments.
+
+        Called with a 4096-element placeholder at construction, then from
+        ``init()`` and again at every ``mix()`` trace with the actual pytree's
+        leaf shapes — the compressor contracts *leaf-wise* (and the gossip
+        layer chunks leaves above BLOCK_SCAN_ELEMS), so the dimension that
+        matters is the largest single encode, not the total parameter count.
+        """
+        delta = getattr(self.compressor, "delta", 1.0)
+        if hasattr(self.compressor, "delta_for"):
+            delta = self.compressor.delta_for(max(int(d), 1))
+        if self.gamma_spec == "theory":
+            return self.topology.consensus_step_size(max(delta, 1e-3))
+        if self.gamma_spec is not None:
+            return float(self.gamma_spec)
+        return 0.5 * max(delta, 1e-3)
+
+    def init(self, theta_stacked) -> CHOCOState:
+        # keep ``.gamma`` introspectable for the actual model; mix() re-resolves
+        # at trace time so a step traced without init() still gets the right value
+        self.gamma = self._resolve_gamma(self._encode_dim(theta_stacked))
+        return choco_init(theta_stacked)
+
+    def mix(self, theta_half, state, key, ctx):
+        gamma = self._resolve_gamma(self._encode_dim(theta_half))
+        return choco_round(
+            theta_half, state, self.topology, gamma, self.compressor, key,
+            packed=self.packed, fused=self.fused,
+        )
+
+    def bits_per_round(self, theta_template) -> float:
+        return payload_bits(self.compressor, theta_template, self.topology)
+
+
+class ExactConsensus(Consensus):
+    """Uncompressed gossip: theta_i <- sum_j w_ij theta_j (DR-DSGD's wire)."""
+
+    def __init__(self, topology: Topology):
+        self.topology = topology
+
+    def mix(self, theta_half, state, key, ctx):
+        return mix_stacked(theta_half, self.topology), state
+
+    def bits_per_round(self, theta_template) -> float:
+        return payload_bits(Identity(), theta_template, self.topology)
+
+
+class FedAvg(Consensus):
+    """Federated server averaging over the sampled clients (DRFA's wire).
+
+    Input is the stacked local models [m, ...]; output is the single server
+    model (no node axis) — the trainer re-broadcasts it next round.  With no
+    sampling ctx every client is averaged (plain FedAvg).
+    """
+
+    federated = True
+
+    def __init__(self, num_sampled: int):
+        self.num_sampled = num_sampled
+
+    def mix(self, theta_locals, state, key, mask):
+        m = jax.tree_util.tree_leaves(theta_locals)[0].shape[0]
+        if mask is None:
+            mask = jnp.ones((m,), jnp.float32)
+        wsum = mask.sum()
+        theta_new = jax.tree.map(
+            lambda x: (
+                (x.astype(jnp.float32) * mask.reshape((m,) + (1,) * (x.ndim - 1))).sum(0)
+                / wsum
+            ).astype(x.dtype),
+            theta_locals,
+        )
+        return theta_new, state
+
+    def bits_per_round(self, theta_template) -> float:
+        """Busiest node = the server: |U| models down + |U| models up, f32."""
+        d = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(theta_template))
+        return 2.0 * self.num_sampled * d * 32.0
+
+
+# ==================================================================== trainer
+class DecentralizedTrainer:
+    """oracle x optimizer x dual x consensus, one round per ``step``.
+
+    Functional interface shared by every algorithm in the repo::
+
+        trainer = DecentralizedTrainer(loss_fn, num_nodes=m, local=..., dual=..., consensus=...)
+        state = trainer.init(params, rng)
+        state, aux = trainer.step(state, batch)     # jitted, donates state
+
+    ``batch`` leaves are stacked [m, per-node-batch, ...].  See
+    ``repro.core.adgda.adgda_trainer`` / ``repro.core.baselines`` for the
+    paper's named compositions and ``examples/quickstart.py`` for an
+    end-to-end run.
+    """
+
+    def __init__(
+        self,
+        loss_fn: LossFn,
+        *,
+        num_nodes: int,
+        local: LocalUpdate,
+        dual: DualUpdate,
+        consensus: Consensus,
+        prior: jax.Array | None = None,
+        track_average: bool = True,
+        config: Any = None,
+    ):
+        self.loss_fn = loss_fn
+        self.num_nodes = num_nodes
+        self.local = local
+        self.dual = dual
+        self.consensus = consensus
+        self.prior = (
+            jnp.full((num_nodes,), 1.0 / num_nodes) if prior is None else jnp.asarray(prior)
+        )
+        self.track_average = track_average
+        self.config = config  # the factory's config, kept for introspection
+        self.federated = consensus.federated
+
+    def _init_as(self, composed: "DecentralizedTrainer") -> None:
+        """Deprecated-shim helper: adopt a factory-built trainer's composition
+        wholesale, so the shims cannot drift from the factories field-by-field."""
+        DecentralizedTrainer.__init__(
+            self,
+            composed.loss_fn,
+            num_nodes=composed.num_nodes,
+            local=composed.local,
+            dual=composed.dual,
+            consensus=composed.consensus,
+            prior=composed.prior,
+            track_average=composed.track_average,
+            config=composed.config,
+        )
+
+    # convenience introspection (shim/test surface)
+    @property
+    def topology(self) -> Topology | None:
+        return getattr(self.consensus, "topology", None)
+
+    @property
+    def compressor(self) -> Compressor | None:
+        return getattr(self.consensus, "compressor", None)
+
+    @property
+    def gamma(self) -> float | None:
+        return getattr(self.consensus, "gamma", None)
+
+    def _stacked(self, params):
+        m = self.num_nodes
+        return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape), params)
+
+    # ------------------------------------------------------------------ init
+    def init(self, params: Any, rng: jax.Array) -> TrainerState:
+        stacked = self._stacked(params)
+        if self.federated:
+            theta0 = jax.tree.map(lambda x: jnp.array(x, copy=True), params)
+        else:
+            theta0 = jax.tree.map(lambda x: x.copy(), stacked)
+        return TrainerState(
+            step=jnp.zeros((), jnp.int32),
+            theta=theta0,
+            lam=self.dual.init(self.num_nodes),
+            opt=self.local.init(stacked),
+            consensus=self.consensus.init(stacked),
+            theta_avg=(
+                jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params)
+                if self.track_average
+                else ()
+            ),
+            # defensive copy: step() donates its input state, which would
+            # otherwise delete the caller's key buffer
+            rng=jnp.array(rng, copy=True),
+        )
+
+    # ------------------------------------------------------------------ step
+    @partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def step(self, state: TrainerState, batch: Any) -> tuple[TrainerState, dict]:
+        return self.step_impl(state, batch)
+
+    def step_impl(self, state: TrainerState, batch: Any) -> tuple[TrainerState, dict]:
+        """Unjitted round — lower/compile with custom shardings via
+        ``jax.jit(trainer.step_impl, in_shardings=...)`` (see launch/dryrun.py)."""
+        m = self.num_nodes
+
+        # --- RNG: one split per round; extra keys only for the parts that
+        # consume randomness, so compositions without them (e.g. DR-DSGD)
+        # reproduce the seed trainers' key streams exactly
+        n_extra = int(self.consensus.needs_key) + int(self.dual.needs_key)
+        keys = jax.random.split(state.rng, m + 1 + n_extra)
+        rng, idx = keys[0], 1
+        gossip_key = None
+        if self.consensus.needs_key:
+            gossip_key, idx = keys[idx], idx + 1
+        dual_key = None
+        if self.dual.needs_key:
+            dual_key, idx = keys[idx], idx + 1
+        node_keys = keys[idx:]
+
+        ctx = self.dual.begin(state.lam, dual_key)
+
+        # --- local oracle + optimizer (dual-weighted gradients) -------------
+        theta = self._stacked(state.theta) if self.federated else state.theta
+        weights_fn = lambda losses: self.dual.grad_weights(state.lam, losses)
+        theta_half, opt_new, losses = self.local.step(
+            self.loss_fn, theta, state.opt, batch, node_keys, weights_fn
+        )
+
+        # --- dual update ----------------------------------------------------
+        lam_new = self.dual.update(state.lam, losses, ctx)
+
+        # --- consensus ------------------------------------------------------
+        theta_new, cons_new = self.consensus.mix(theta_half, state.consensus, gossip_key, ctx)
+
+        # --- running average of the network mean (output theta_o) -----------
+        if self.track_average:
+            tt = state.step.astype(jnp.float32)
+            mean = (lambda th: th.astype(jnp.float32)) if self.federated else (
+                lambda th: th.astype(jnp.float32).mean(0)
+            )
+            theta_avg = jax.tree.map(
+                lambda avg, th: (avg * tt + mean(th)) / (tt + 1.0),
+                state.theta_avg,
+                theta_new,
+            )
+        else:
+            theta_avg = ()
+
+        aux = {
+            "losses": losses,
+            "worst_loss": losses.max(),
+            "mean_loss": losses.mean(),
+            "lambda_mean": lam_new.mean(0) if lam_new.ndim == 2 else lam_new,
+            "eta_theta": self.local.lr(state.opt),
+        }
+        if not self.federated:
+            aux["consensus_err"] = _consensus_error(theta_new)
+
+        new_state = TrainerState(
+            step=state.step + 1,
+            theta=theta_new,
+            lam=lam_new,
+            opt=opt_new,
+            consensus=cons_new,
+            theta_avg=theta_avg,
+            rng=rng,
+        )
+        return new_state, aux
+
+    # ------------------------------------------------------------- utilities
+    def network_mean(self, state: TrainerState):
+        if self.federated:
+            return jax.tree.map(lambda x: x.astype(jnp.float32), state.theta)
+        return jax.tree.map(lambda x: x.astype(jnp.float32).mean(0), state.theta)
+
+    def bits_per_round(self, state: TrainerState, per_iteration: bool = False) -> float:
+        """Bits transmitted per communication round by the busiest node
+        (model payload + dual traffic).
+
+        One round covers ``local_steps`` gradient iterations;
+        ``per_iteration=True`` divides by that, putting algorithms with
+        different communication intervals (DRFA, AD-GDA-K) on equal footing.
+        """
+        bits = self.consensus.bits_per_round(state.theta) + self.dual.bits_per_round()
+        if per_iteration:
+            bits /= self.local.local_steps
+        return bits
+
+
+def _consensus_error(theta_stacked) -> jax.Array:
+    """Xi_theta = sum_i ||theta_i - theta_bar||^2 over all leaves."""
+    err = 0.0
+    for leaf in jax.tree_util.tree_leaves(theta_stacked):
+        leaf = leaf.astype(jnp.float32)
+        mean = leaf.mean(0, keepdims=True)
+        err = err + jnp.sum((leaf - mean) ** 2)
+    return err

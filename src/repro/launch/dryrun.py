@@ -69,9 +69,9 @@ def lower_pair(arch: str, shape_name: str, multi_pod: bool, *, compressor: str =
             trainer = st.make_trainer(cfg, m, compressor=compressor, track_average=False,
                                       microbatches=microbatches, grad_accum_dtype=grad_accum_dtype,
                                       spmd_axis_name=(lead if seq_shard_attn else None))
-            state_abs = st.abstract_adgda_state(trainer, cfg)
+            state_abs = st.abstract_trainer_state(trainer, cfg)
             pspec = sh.param_pspecs(state_abs.theta, mesh, node_axes=lead)
-            state_spec = sh.adgda_state_pspecs(state_abs, pspec, mesh, lead)
+            state_spec = sh.trainer_state_pspecs(state_abs, pspec, mesh, lead)
             batch_abs = input_specs(cfg, shape_name, num_nodes=m)
             batch_spec = sh.batch_pspecs(batch_abs, mesh, lead_axes=lead)
             jitted = jax.jit(

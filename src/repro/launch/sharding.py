@@ -20,7 +20,8 @@ __all__ = [
     "param_pspecs",
     "batch_pspecs",
     "cache_pspecs",
-    "adgda_state_pspecs",
+    "trainer_state_pspecs",
+    "adgda_state_pspecs",  # deprecated alias
     "shardings",
 ]
 
@@ -167,23 +168,37 @@ def cache_pspecs(cache: Any, mesh: Mesh, batch: int, *, lead_axes: tuple[str, ..
     return jax.tree_util.tree_map_with_path(spec_for, cache)
 
 
-def adgda_state_pspecs(state: Any, params_spec: Any, mesh: Mesh, node_axes: tuple[str, ...]):
-    """Spec tree for an ADGDAState: theta/hat/s/momentum like params (with
-    node axis), lam [m, m] sharded on the node dim, scalars replicated."""
-    from repro.core.adgda import ADGDAState
+def trainer_state_pspecs(state: Any, params_spec: Any, mesh: Mesh, node_axes: tuple[str, ...]):
+    """Spec tree for a TrainerState: theta/hat/s and the optimizer moments
+    like params (with node axis), lam [m, m] sharded on the node dim,
+    scalars replicated."""
     from repro.core.gossip import CHOCOState
+    from repro.core.trainer import TrainerState
+    from repro.optim import OptState
 
-    return ADGDAState(
+    return TrainerState(
         step=P(),
         theta=params_spec,
         lam=P(node_axes, None),
-        choco=CHOCOState(theta_hat=params_spec, s=params_spec),
-        momentum=params_spec if state.momentum != () else (),
+        opt=OptState(
+            step=P(),
+            mu=params_spec if state.opt.mu != () else (),
+            nu=params_spec if state.opt.nu != () else (),
+        ),
+        consensus=(
+            CHOCOState(theta_hat=params_spec, s=params_spec)
+            if state.consensus != ()
+            else ()
+        ),
         theta_avg=(
             param_pspecs(state.theta_avg, mesh) if state.theta_avg != () else ()
         ),  # no node axis
         rng=P(),
     )
+
+
+# deprecated alias (pre-refactor name)
+adgda_state_pspecs = trainer_state_pspecs
 
 
 def shardings(mesh: Mesh, spec_tree: Any) -> Any:

@@ -1,23 +1,28 @@
-"""Step-function builders: the glue between the model zoo and AD-GDA.
+"""Step-function builders: the glue between the model zoo and the trainers.
 
 ``make_trainer(cfg, num_nodes, ...)`` wires an architecture's ``lm_loss``
-into the AD-GDA trainer (paper Algorithm 1).  ``make_prefill_step`` /
-``make_decode_step`` build the serving entry points on the *consensus*
-model (no node axis).
+into a composed AD-GDA :class:`~repro.core.trainer.DecentralizedTrainer`
+(paper Algorithm 1) — optimizer, schedule and gossip dispatch are all
+selectable here, which is what the ``repro.launch.train`` CLI exposes.
+``make_prefill_step`` / ``make_decode_step`` build the serving entry points
+on the *consensus* model (no node axis).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.adgda import ADGDA, ADGDAConfig
+from repro.core.adgda import ADGDAConfig, adgda_trainer
+from repro.core.trainer import DecentralizedTrainer
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
-__all__ = ["make_trainer", "make_prefill_step", "make_decode_step", "abstract_params"]
+__all__ = [
+    "make_trainer",
+    "make_prefill_step",
+    "make_decode_step",
+    "abstract_params",
+    "abstract_trainer_state",
+]
 
 
 def make_trainer(
@@ -31,11 +36,20 @@ def make_trainer(
     eta_lambda: float = 0.01,
     track_average: bool = False,
     packed_gossip: bool = True,
+    fused_gossip: bool = False,
     robust: bool = True,
     microbatches: int = 1,
     grad_accum_dtype: str = "float32",
+    local_steps: int = 1,
+    optimizer: str = "sgd",
+    schedule: str = "exp",
+    lr_decay: float = 1.0,
+    warmup: int = 0,
+    total_steps: int = 1000,
+    momentum: float = 0.0,
+    nesterov: bool = False,
     spmd_axis_name=None,
-) -> ADGDA:
+) -> DecentralizedTrainer:
     def loss_fn(params, batch, rng):
         return T.lm_loss(params, batch, cfg, rng)
 
@@ -48,12 +62,21 @@ def make_trainer(
         eta_lambda=eta_lambda,
         track_average=track_average,
         packed_gossip=packed_gossip,
+        fused_gossip=fused_gossip,
         robust=robust,
         microbatches=microbatches,
         grad_accum_dtype=grad_accum_dtype,
+        local_steps=local_steps,
+        optimizer=optimizer,
+        schedule=schedule,
+        lr_decay=lr_decay,
+        warmup=warmup,
+        total_steps=total_steps,
+        momentum=momentum,
+        nesterov=nesterov,
         spmd_axis_name=spmd_axis_name,
     )
-    return ADGDA(adgda_cfg, loss_fn)
+    return adgda_trainer(adgda_cfg, loss_fn)
 
 
 def make_prefill_step(cfg: ModelConfig, cache_len: int):
@@ -79,6 +102,10 @@ def abstract_cache(cfg: ModelConfig, batch: int, length: int):
     return jax.eval_shape(lambda: T.init_cache(cfg, batch, length))
 
 
-def abstract_adgda_state(trainer: ADGDA, cfg: ModelConfig):
+def abstract_trainer_state(trainer: DecentralizedTrainer, cfg: ModelConfig):
     params = abstract_params(cfg)
     return jax.eval_shape(trainer.init, params, jax.random.PRNGKey(0))
+
+
+# deprecated alias (pre-refactor name)
+abstract_adgda_state = abstract_trainer_state

@@ -38,6 +38,19 @@ def main() -> None:
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--eta-theta", type=float, default=0.05)
     ap.add_argument("--eta-lambda", type=float, default=0.01)
+    ap.add_argument("--optimizer", choices=("sgd", "adam"), default="sgd",
+                    help="primal update rule (repro.optim)")
+    ap.add_argument("--schedule", choices=("const", "exp", "cosine"), default="exp",
+                    help="LR schedule; exp decays by --lr-decay per round")
+    ap.add_argument("--lr-decay", type=float, default=1.0,
+                    help="per-round decay factor for --schedule exp")
+    ap.add_argument("--warmup", type=int, default=0, help="linear LR warmup rounds")
+    ap.add_argument("--momentum", type=float, default=0.0, help="SGD momentum")
+    ap.add_argument("--nesterov", action="store_true", help="Nesterov momentum (sgd)")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="K local optimizer steps between gossip rounds (needs K x batch)")
+    ap.add_argument("--fused-gossip", action="store_true",
+                    help="single-pass Pallas gossip (requires a kq* compressor)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None, help="path prefix for npz checkpoints")
     ap.add_argument("--seed", type=int, default=0)
@@ -59,6 +72,15 @@ def main() -> None:
         alpha=args.alpha,
         eta_theta=args.eta_theta,
         eta_lambda=args.eta_lambda,
+        optimizer=args.optimizer,
+        schedule=args.schedule,
+        lr_decay=args.lr_decay,
+        warmup=args.warmup,
+        total_steps=args.steps,
+        momentum=args.momentum,
+        nesterov=args.nesterov,
+        local_steps=args.local_steps,
+        fused_gossip=args.fused_gossip,
         track_average=False,
     )
 
@@ -69,17 +91,19 @@ def main() -> None:
           f"compressor={args.compressor} topology={args.topology}")
 
     state = trainer.init(params, jax.random.PRNGKey(args.seed + 1))
-    stream = node_token_stream(args.nodes, args.batch_per_node, seq, cfg.vocab_size, seed=args.seed)
+    # one round consumes local_steps x the per-node batch (K local updates)
+    round_batch = args.batch_per_node * args.local_steps
+    stream = node_token_stream(args.nodes, round_batch, seq, cfg.vocab_size, seed=args.seed)
 
     def make_batch(tokens):
         batch = {"tokens": jnp.asarray(tokens)}
         if cfg.is_encdec:
             batch["frames"] = jnp.zeros(
-                (args.nodes, args.batch_per_node, cfg.encoder_context, cfg.d_model), jnp.float32
+                (args.nodes, round_batch, cfg.encoder_context, cfg.d_model), jnp.float32
             )
         if cfg.num_patches > 0:
             batch["patches"] = jnp.zeros(
-                (args.nodes, args.batch_per_node, cfg.num_patches, cfg.d_model), jnp.float32
+                (args.nodes, round_batch, cfg.num_patches, cfg.d_model), jnp.float32
             )
         return batch
 

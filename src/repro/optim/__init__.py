@@ -1,8 +1,10 @@
 from repro.optim.sgd import (
+    Optimizer,
     OptState,
+    Schedule,
     adam,
     make_schedule,
     sgd,
 )
 
-__all__ = ["OptState", "adam", "make_schedule", "sgd"]
+__all__ = ["Optimizer", "OptState", "Schedule", "adam", "make_schedule", "sgd"]

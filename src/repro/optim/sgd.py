@@ -53,17 +53,22 @@ def sgd(lr: float | Schedule, momentum: float = 0.0, nesterov: bool = False) -> 
     sched = lr if callable(lr) else (lambda _: jnp.float32(lr))
 
     def init(params):
+        if momentum == 0:  # no momentum buffer to carry
+            return OptState(jnp.zeros((), jnp.int32), (), ())
         zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
         return OptState(jnp.zeros((), jnp.int32), zeros, ())
 
     def update(grads, state, params=None):
         lr_t = sched(state.step)
 
+        if momentum == 0:
+            updates = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+            return updates, OptState(state.step + 1, (), ())
+
         def upd(g, m):
             g = g.astype(jnp.float32)
-            if momentum > 0:
-                m = momentum * m + g
-                g = momentum * m + g if nesterov else m
+            m = momentum * m + g
+            g = momentum * m + g if nesterov else m
             return -lr_t * g, m
 
         flat_g, tdef = jax.tree_util.tree_flatten(grads)

@@ -6,7 +6,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ADGDA, ADGDAConfig, DRDSGD, DRDSGDConfig, DRFA, DRFAConfig, choco_sgd
+from repro.core import (
+    ADGDAConfig,
+    DRDSGDConfig,
+    DRFAConfig,
+    adgda_trainer,
+    choco_sgd,
+    drdsgd_trainer,
+    drfa_trainer,
+)
 
 M = 6  # nodes
 
@@ -43,7 +51,7 @@ def test_adgda_converges_to_robust_solution():
         num_nodes=M, topology="ring", compressor="q8b", alpha=0.05,
         eta_theta=0.05, eta_lambda=0.05, lr_decay=0.995,
     )
-    trainer = ADGDA(cfg, loss_fn)
+    trainer = adgda_trainer(cfg, loss_fn)
     params = {"w": jnp.zeros((1,))}
     state, aux = _run(trainer, params, batch, steps=600)
 
@@ -62,7 +70,7 @@ def test_adgda_beats_choco_sgd_on_worst_node():
     loss_fn, batch, _ = _quadratic_loss(offsets)
     cfg = ADGDAConfig(num_nodes=M, topology="ring", compressor="q8b",
                       alpha=0.05, eta_theta=0.05, eta_lambda=0.05)
-    robust_state, robust_aux = _run(ADGDA(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 500)
+    robust_state, robust_aux = _run(adgda_trainer(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 500)
     sgd_state, sgd_aux = _run(choco_sgd(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 500)
     # symmetric problem: same consensus mean, but check worst-loss tracking
     assert float(robust_aux["worst_loss"]) <= float(sgd_aux["worst_loss"]) + 1e-3
@@ -75,7 +83,7 @@ def test_adgda_beats_choco_sgd_asymmetric():
     loss_fn, batch, _ = _quadratic_loss(offsets)
     cfg = ADGDAConfig(num_nodes=M, topology="ring", compressor="q4b",
                       alpha=0.01, eta_theta=0.05, eta_lambda=0.1)
-    _, robust_aux = _run(ADGDA(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 800)
+    _, robust_aux = _run(adgda_trainer(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 800)
     _, sgd_aux = _run(choco_sgd(cfg, loss_fn), {"w": jnp.zeros((1,))}, batch, 800)
     assert float(robust_aux["worst_loss"]) < 0.7 * float(sgd_aux["worst_loss"])
 
@@ -84,7 +92,7 @@ def test_lambda_stays_on_simplex():
     offsets = [[float(i)] for i in range(M)]
     loss_fn, batch, _ = _quadratic_loss(offsets)
     cfg = ADGDAConfig(num_nodes=M, alpha=0.1, eta_lambda=0.5)  # aggressive dual lr
-    trainer = ADGDA(cfg, loss_fn)
+    trainer = adgda_trainer(cfg, loss_fn)
     state = trainer.init({"w": jnp.zeros((1,))}, jax.random.PRNGKey(0))
     for _ in range(50):
         state, _ = trainer.step(state, batch)
@@ -111,7 +119,7 @@ def test_choco_sgd_matches_uncompressed_sgd_direction():
 def test_theory_gamma_accepted():
     loss_fn, batch, _ = _quadratic_loss([[0.0]] * M)
     cfg = ADGDAConfig(num_nodes=M, compressor="q4b", gamma="theory")
-    trainer = ADGDA(cfg, loss_fn)
+    trainer = adgda_trainer(cfg, loss_fn)
     assert 0 < trainer.gamma < 0.1
 
 
@@ -120,7 +128,7 @@ def test_drdsgd_converges_and_weights_worst():
     offsets = [[0.0]] * 5 + [[4.0]]
     loss_fn, batch, _ = _quadratic_loss(offsets)
     cfg = DRDSGDConfig(num_nodes=M, topology="ring", alpha=1.0, eta_theta=0.05)
-    trainer = DRDSGD(cfg, loss_fn)
+    trainer = drdsgd_trainer(cfg, loss_fn)
     state, aux = _run(trainer, {"w": jnp.zeros((1,))}, batch, 500)
     lam = np.asarray(aux["lambda_mean"])
     assert lam[-1] == lam.max()  # worst node gets the largest weight
@@ -134,7 +142,7 @@ def test_drfa_runs_and_improves_worst_node():
     offsets = [[0.0]] * 5 + [[4.0]]
     loss_fn, _, mus = _quadratic_loss(offsets)
     cfg = DRFAConfig(num_nodes=M, local_steps=4, eta_theta=0.05, eta_lambda=0.05)
-    trainer = DRFA(cfg, loss_fn)
+    trainer = drfa_trainer(cfg, loss_fn)
     # batch: [m, K, ...]
     batch = {"mu": jnp.broadcast_to(mus[:, None, :], (M, 4, 1))}
     state, aux = _run(trainer, {"w": jnp.zeros((1,))}, batch, 300)
@@ -148,7 +156,7 @@ def test_bits_per_round_ordering():
     params = {"w": jnp.zeros((1000,))}
     cfg_q4 = ADGDAConfig(num_nodes=M, topology="ring", compressor="q4b")
     cfg_id = ADGDAConfig(num_nodes=M, topology="ring", compressor="none")
-    t_q4, t_id = ADGDA(cfg_q4, loss_fn), ADGDA(cfg_id, loss_fn)
+    t_q4, t_id = adgda_trainer(cfg_q4, loss_fn), adgda_trainer(cfg_id, loss_fn)
     s_q4 = t_q4.init(params, jax.random.PRNGKey(0))
     s_id = t_id.init(params, jax.random.PRNGKey(0))
     assert t_q4.bits_per_round(s_q4) < 0.3 * t_id.bits_per_round(s_id)

@@ -120,9 +120,10 @@ def test_fused_round_bf16_multi_batch_matches_oracle():
 
 def test_step_without_init_resolves_gamma_from_state():
     """A step() traced without init() must not bake the placeholder gamma:
-    step_impl re-resolves it from the state's own leaf shapes."""
-    from repro.core import ADGDA, ADGDAConfig
+    the consensus re-resolves it from the state's own leaf shapes."""
+    from repro.core import ADGDAConfig, TrainerState, adgda_trainer
     from repro.core.gossip import choco_init
+    from repro.core.trainer import ChocoConsensus
 
     m, d = 4, 1 << 16
     cfg = ADGDAConfig(num_nodes=m, topology="ring", compressor="q8b",
@@ -131,23 +132,21 @@ def test_step_without_init_resolves_gamma_from_state():
     def loss_fn(params, batch, rng):
         return jnp.mean((params["w"] - batch) ** 2)
 
-    trainer = ADGDA(cfg, loss_fn)
+    trainer = adgda_trainer(cfg, loss_fn)
     placeholder_gamma = trainer.gamma  # resolved with the 4096-element stub
     # hand-rolled state, bypassing init() entirely (a checkpoint restore)
-    from repro.core.adgda import ADGDAState
-
     theta = {"w": jnp.zeros((m, d))}
-    state = ADGDAState(
+    state = TrainerState(
         step=jnp.zeros((), jnp.int32),
         theta=theta,
         lam=jnp.full((m, m), 1.0 / m),
-        choco=choco_init(theta),
-        momentum=(),
+        opt=trainer.local.init(theta),
+        consensus=choco_init(theta),
         theta_avg={"w": jnp.zeros((d,), jnp.float32)},
         rng=jax.random.PRNGKey(0),
     )
-    assert trainer._resolve_gamma(d) < placeholder_gamma  # larger d, smaller delta
-    assert trainer._encode_dim(theta) == d
+    assert trainer.consensus._resolve_gamma(d) < placeholder_gamma  # larger d, smaller delta
+    assert ChocoConsensus._encode_dim(theta) == d
     state2, aux = trainer.step(state, jnp.zeros((m, d)))
     assert np.isfinite(float(aux["mean_loss"]))
 
@@ -211,7 +210,7 @@ def test_fused_flag_falls_back_for_unsupported_compressor():
 
 def test_adgda_trainer_with_fused_gossip():
     """End-to-end: ADGDAConfig(fused_gossip=True, compressor='kq8b') trains."""
-    from repro.core import ADGDA, ADGDAConfig
+    from repro.core import ADGDAConfig, adgda_trainer
 
     m = 4
     cfg = ADGDAConfig(
@@ -222,7 +221,7 @@ def test_adgda_trainer_with_fused_gossip():
     def loss_fn(params, batch, rng):
         return jnp.mean((params["w"] - batch) ** 2)
 
-    trainer = ADGDA(cfg, loss_fn)
+    trainer = adgda_trainer(cfg, loss_fn)
     batch = jnp.arange(m, dtype=jnp.float32).reshape(m, 1)
     state = trainer.init({"w": jnp.zeros((1,))}, jax.random.PRNGKey(0))
     for _ in range(3):

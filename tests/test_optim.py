@@ -1,0 +1,149 @@
+"""repro/optim: optimizers (sgd/momentum/nesterov, adam) and LR schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import OptState, adam, make_schedule, sgd
+
+
+def _tree(v):
+    return {"w": jnp.asarray(v, jnp.float32)}
+
+
+def _apply(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+# ---------------------------------------------------------------------- sgd
+def test_sgd_plain_step():
+    opt = sgd(0.1)
+    params = _tree([1.0, 2.0])
+    state = opt.init(params)
+    assert state.mu == () and state.nu == ()  # no momentum buffer carried
+    updates, state = opt.update(_tree([0.5, -1.0]), state, params)
+    np.testing.assert_allclose(np.asarray(updates["w"]), [-0.05, 0.1], rtol=1e-6)
+    assert int(state.step) == 1
+
+
+def test_sgd_momentum_accumulates():
+    opt = sgd(1.0, momentum=0.5)
+    params = _tree([0.0])
+    state = opt.init(params)
+    g = _tree([1.0])
+    u1, state = opt.update(g, state, params)
+    u2, state = opt.update(g, state, params)
+    # mu_1 = 1, mu_2 = 0.5*1 + 1 = 1.5
+    np.testing.assert_allclose(np.asarray(u1["w"]), [-1.0])
+    np.testing.assert_allclose(np.asarray(u2["w"]), [-1.5])
+    np.testing.assert_allclose(np.asarray(state.mu["w"]), [1.5])
+
+
+def test_sgd_nesterov_lookahead():
+    """Nesterov update is -lr*(momentum*mu_new + g), plain is -lr*mu_new."""
+    g = _tree([1.0])
+    params = _tree([0.0])
+    plain = sgd(1.0, momentum=0.9)
+    nest = sgd(1.0, momentum=0.9, nesterov=True)
+    sp, sn = plain.init(params), nest.init(params)
+    up, sp = plain.update(g, sp, params)
+    un, sn = nest.update(g, sn, params)
+    np.testing.assert_allclose(np.asarray(up["w"]), [-1.0])  # mu = 1
+    np.testing.assert_allclose(np.asarray(un["w"]), [-(0.9 * 1.0 + 1.0)], rtol=1e-6)
+    # second step: mu = 0.9 + 1 = 1.9; nesterov -(0.9*1.9 + 1)
+    up, _ = plain.update(g, sp, params)
+    un, _ = nest.update(g, sn, params)
+    np.testing.assert_allclose(np.asarray(up["w"]), [-1.9], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(un["w"]), [-(0.9 * 1.9 + 1.0)], rtol=1e-6)
+
+
+# --------------------------------------------------------------------- adam
+def test_adam_bias_correction_first_step():
+    """At t=1 the bias-corrected moments make the step ~lr*sign(g) regardless
+    of the gradient magnitude: m_hat = g, v_hat = g^2."""
+    for gval in (0.001, 1.0, 250.0):
+        opt = adam(0.1, b1=0.9, b2=0.999, eps=1e-8)
+        params = _tree([0.0])
+        state = opt.init(params)
+        updates, state = opt.update(_tree([gval]), state, params)
+        expected = -0.1 * gval / (abs(gval) + 1e-8)
+        np.testing.assert_allclose(np.asarray(updates["w"]), [expected], rtol=1e-5)
+
+
+def test_adam_bias_correction_trajectory():
+    """Against a hand-rolled reference over several steps."""
+    b1, b2, eps, lr = 0.9, 0.95, 1e-8, 0.05
+    opt = adam(lr, b1=b1, b2=b2, eps=eps)
+    params = _tree([0.3, -0.7])
+    state = opt.init(params)
+    m = np.zeros(2)
+    v = np.zeros(2)
+    rng = np.random.default_rng(0)
+    for t in range(1, 6):
+        g = rng.normal(size=2).astype(np.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        ref = -lr * (m / (1 - b1**t)) / (np.sqrt(v / (1 - b2**t)) + eps)
+        updates, state = opt.update(_tree(g), state, params)
+        np.testing.assert_allclose(np.asarray(updates["w"]), ref, rtol=1e-5)
+        params = _apply(params, updates)
+
+
+def test_adam_weight_decay_pulls_to_zero():
+    opt = adam(0.1, weight_decay=0.1)
+    params = _tree([10.0])
+    state = opt.init(params)
+    updates, _ = opt.update(_tree([0.0]), state, params)
+    assert float(updates["w"][0]) < 0  # decay term alone pushes down
+
+
+# ----------------------------------------------------------------- schedules
+def test_schedule_const_and_exp():
+    c = make_schedule("const", 0.3)
+    e = make_schedule("exp", 0.3, decay=0.9)
+    for t in (0, 3, 10):
+        assert float(c(jnp.int32(t))) == pytest.approx(0.3)
+        assert float(e(jnp.int32(t))) == pytest.approx(0.3 * 0.9**t, rel=1e-6)
+
+
+def test_schedule_cosine_endpoints():
+    s = make_schedule("cosine", 1.0, total_steps=100)
+    assert float(s(jnp.int32(0))) == pytest.approx(1.0)
+    assert float(s(jnp.int32(50))) == pytest.approx(0.5, abs=1e-6)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    assert float(s(jnp.int32(500))) == pytest.approx(0.0, abs=1e-6)  # clamps
+
+
+def test_schedule_warmup_ramps_linearly():
+    s = make_schedule("const", 0.8, warmup=10)
+    assert float(s(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(s(jnp.int32(5))) == pytest.approx(0.4, rel=1e-6)
+    assert float(s(jnp.int32(10))) == pytest.approx(0.8, rel=1e-6)
+    assert float(s(jnp.int32(50))) == pytest.approx(0.8, rel=1e-6)
+
+
+def test_schedule_unknown_kind_raises():
+    with pytest.raises(ValueError, match="unknown schedule"):
+        make_schedule("linear", 0.1)(jnp.int32(0))
+
+
+def test_optimizers_jit_and_carry_state():
+    """OptState threads through jit/scan (the trainer's usage pattern)."""
+    sched = make_schedule("exp", 0.1, decay=0.99)
+    for opt in (sgd(sched, momentum=0.9), adam(sched)):
+        params = _tree(np.linspace(-1, 1, 8))
+        state = opt.init(params)
+
+        @jax.jit
+        def run(params, state):
+            def body(carry, _):
+                p, s = carry
+                g = jax.tree.map(lambda x: 2 * x, p)  # grad of sum(x^2)
+                u, s = opt.update(g, s, p)
+                return (_apply(p, u), s), None
+
+            return jax.lax.scan(body, (params, state), None, length=20)[0]
+
+        params2, state2 = run(params, state)
+        assert int(state2.step) == 20
+        assert float(jnp.abs(params2["w"]).sum()) < float(jnp.abs(params["w"]).sum())

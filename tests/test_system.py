@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ADGDA, ADGDAConfig, choco_sgd
+from repro.core import ADGDAConfig, adgda_trainer, choco_sgd
 from repro.data import (
     class_shard_classification,
     instrument_shift_classification,
@@ -61,7 +61,7 @@ def test_adgda_beats_choco_sgd_worst_node():
     m = 10
     data = rotated_minority_classification(num_nodes=m, seed=1)
     common = dict(num_nodes=m, topology="ring", compressor="q4b", eta_theta=0.3, lr_decay=0.99)
-    robust = ADGDA(ADGDAConfig(alpha=0.05, eta_lambda=0.2, **common), _logistic_loss)
+    robust = adgda_trainer(ADGDAConfig(alpha=0.05, eta_lambda=0.2, **common), _logistic_loss)
     standard = choco_sgd(ADGDAConfig(**common), _logistic_loss)
     p_r, _ = _train(robust, data, steps=600, batch=50)
     p_s, _ = _train(standard, data, steps=600, batch=50)
@@ -74,7 +74,7 @@ def test_adgda_closes_instrument_gap():
     under AD-GDA (paper Fig. 2 / Table 4b)."""
     data = instrument_shift_classification(num_nodes=10, minority_nodes=2, seed=1)
     common = dict(num_nodes=10, topology="torus", compressor="q8b", eta_theta=0.5)
-    robust = ADGDA(ADGDAConfig(alpha=0.01, eta_lambda=0.05, **common), _logistic_loss)
+    robust = adgda_trainer(ADGDAConfig(alpha=0.01, eta_lambda=0.05, **common), _logistic_loss)
     standard = choco_sgd(ADGDAConfig(**common), _logistic_loss)
     p_r, _ = _train(robust, data, steps=200)
     p_s, _ = _train(standard, data, steps=200)
@@ -94,7 +94,7 @@ def test_smaller_alpha_more_robust():
     data = rotated_minority_classification(num_nodes=m, seed=2)
     worst = {}
     for alpha in (100.0, 0.05):
-        tr = ADGDA(
+        tr = adgda_trainer(
             ADGDAConfig(num_nodes=m, topology="ring", compressor="none",
                         alpha=alpha, eta_theta=0.3, eta_lambda=0.2, lr_decay=0.99),
             _logistic_loss,
@@ -108,7 +108,7 @@ def test_consensus_error_decreases():
     """CHOCO consensus: with a decaying step the node models converge."""
     m = 6
     data = class_shard_classification(num_nodes=m, dim=16, seed=0)
-    tr = ADGDA(
+    tr = adgda_trainer(
         ADGDAConfig(num_nodes=m, topology="ring", compressor="q8b",
                     alpha=0.1, eta_theta=0.3, eta_lambda=0.02, lr_decay=0.97),
         _logistic_loss,
@@ -135,7 +135,7 @@ def test_dual_variable_upweights_worst_node():
         else rng.integers(0, 2, 256).astype(np.int32)  # node 3: pure noise
         for i in range(m)
     ])
-    tr = ADGDA(
+    tr = adgda_trainer(
         ADGDAConfig(num_nodes=m, topology="mesh", compressor="none",
                     alpha=0.05, eta_theta=0.3, eta_lambda=0.1),
         _logistic_loss,
@@ -206,7 +206,7 @@ def test_local_steps_trade_compute_for_communication():
         cfg = ADGDAConfig(num_nodes=m, topology="ring", compressor="q4b",
                           alpha=0.05, eta_theta=eta, eta_lambda=0.2,
                           lr_decay=0.99, local_steps=local_steps)
-        tr = ADGDA(cfg, _logistic_loss)
+        tr = adgda_trainer(cfg, _logistic_loss)
         state = tr.init(_logistic_init(data.dim, data.num_classes), jax.random.PRNGKey(0))
         gen = data.batches(50 * local_steps, seed=0)
         for _ in range(rounds):

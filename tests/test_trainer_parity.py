@@ -1,0 +1,548 @@
+"""Bit-for-bit parity: composed trainers vs. the pre-refactor monoliths.
+
+The composable `DecentralizedTrainer` (repro/core/trainer.py) replaced the
+monolithic ADGDA / DRDSGD / DRFA classes.  These tests pin the composed
+factories to the *seed* implementations' trajectories exactly: the reference
+steppers below are line-for-line copies of the seed trainers' math (git
+d343f53, src/repro/core/{adgda,baselines}.py), built on the same
+gossip/dro/topology primitives.
+
+Exact (assert_array_equal) paths: single-step (momentum on/off, robust on/
+off), microbatched, packed/unpacked/fused gossip, identity+mesh mixing,
+DR-DSGD, DRFA.  Bit-for-bit equality is asserted under ``jax.disable_jit()``
+(canonical op-by-op IEEE rounding): XLA's FMA contraction depends on the
+fusion context, so two *different jitted programs* around the identical op
+sequence can each legally deviate from canonical rounding by 1 ULP (verified:
+the seed program itself differs from its own eager execution).  The jitted
+paths are additionally pinned to ULP-level agreement with a tight allclose.
+
+The local-steps oracle applies the dual weighting before the learning rate
+(the seed multiplied (eta*g)*scale, the optimizer route is eta*(g*scale)) and
+is pinned to ~ULP in both modes instead.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dro
+from repro.core.adgda import ADGDAConfig, adgda_trainer
+from repro.core.baselines import (
+    DRDSGDConfig,
+    DRFAConfig,
+    choco_sgd,
+    drdsgd_trainer,
+    drfa_trainer,
+)
+from repro.core.gossip import choco_init, choco_round, mix_stacked
+from repro.core.trainer import ChocoConsensus
+
+M = 4
+KEY = jax.random.PRNGKey(7)
+
+
+# ===================================================================== seed refs
+class SeedADGDA:
+    """The seed ADGDA trainer's math, verbatim (single-step + microbatched)."""
+
+    def __init__(self, config: ADGDAConfig, loss_fn, prior=None):
+        self.config = config
+        self.loss_fn = loss_fn
+        self.topology, self.compressor = config.build()
+        m = config.num_nodes
+        self.prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
+        self.regularizer = dro.make_regularizer(config.regularizer)
+
+    def _resolve_gamma(self, d: int) -> float:
+        delta = getattr(self.compressor, "delta", 1.0)
+        if hasattr(self.compressor, "delta_for"):
+            delta = self.compressor.delta_for(max(int(d), 1))
+        if self.config.gamma == "theory":
+            return self.topology.consensus_step_size(max(delta, 1e-3))
+        if self.config.gamma is not None:
+            return float(self.config.gamma)
+        return 0.5 * max(delta, 1e-3)
+
+    def init(self, params, rng):
+        m = self.config.num_nodes
+        stacked = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape).copy(), params)
+        lam = jnp.broadcast_to(self.prior[None], (m, m)).copy()
+        return dict(
+            step=jnp.zeros((), jnp.int32),
+            theta=stacked,
+            lam=lam,
+            choco=choco_init(stacked),
+            momentum=jax.tree.map(jnp.zeros_like, stacked) if self.config.momentum > 0 else (),
+            rng=jnp.array(rng, copy=True),
+        )
+
+    def step(self, state, batch):
+        cfg = self.config
+        m = cfg.num_nodes
+        rng, gossip_key, *node_keys = jax.random.split(state["rng"], m + 2)
+        node_keys = jnp.stack(node_keys)
+
+        t = state["step"].astype(jnp.float32)
+        eta_th = cfg.eta_theta * jnp.power(cfg.lr_decay, t)
+
+        if cfg.robust:
+            scale = (jnp.diagonal(state["lam"]) / self.prior).astype(jnp.float32)
+        else:
+            scale = jnp.ones((m,), jnp.float32)
+
+        if cfg.microbatches > 1:
+            k = cfg.microbatches
+            acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+            def to_mb(leaf):
+                return leaf.reshape((m, k, leaf.shape[1] // k) + leaf.shape[2:]).swapaxes(0, 1)
+
+            mb = jax.tree.map(to_mb, batch)
+
+            def mb_body(carry, mbatch):
+                acc_l, acc_g = carry
+                l, g = jax.vmap(jax.value_and_grad(self.loss_fn))(state["theta"], mbatch, node_keys)
+                acc_g = jax.tree.map(lambda a, gg: a + (gg.astype(acc_dt) / k), acc_g, g)
+                return (acc_l + l / k, acc_g), None
+
+            zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), state["theta"])
+            (losses, grads), _ = jax.lax.scan(
+                mb_body, (jnp.zeros((m,), jnp.float32), zeros_g), mb
+            )
+        else:
+            losses, grads = jax.vmap(jax.value_and_grad(self.loss_fn))(
+                state["theta"], batch, node_keys
+            )
+
+        def sgd(g, mom):
+            g = g.astype(jnp.float32) * scale.reshape((m,) + (1,) * (g.ndim - 1))
+            if cfg.momentum > 0:
+                mom = cfg.momentum * mom + g
+                g = mom
+            return g, mom
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        if cfg.momentum > 0:
+            flat_m = tdef.flatten_up_to(state["momentum"])
+            stepped = [sgd(g, mo) for g, mo in zip(flat_g, flat_m)]
+            momentum = jax.tree_util.tree_unflatten(tdef, [s[1] for s in stepped])
+        else:
+            stepped = [sgd(g, None) for g in flat_g]
+            momentum = ()
+        update = jax.tree_util.tree_unflatten(tdef, [s[0] for s in stepped])
+        theta_half = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - eta_th * u).astype(p.dtype),
+            state["theta"],
+            update,
+        )
+
+        eta_la = cfg.eta_lambda
+        if cfg.robust:
+            node_ids = jnp.arange(m)
+            dual_grads = jax.vmap(
+                lambda f, i, l: dro.dual_gradient(
+                    f, i, l, self.prior, cfg.alpha, self.regularizer
+                )
+            )(losses, node_ids, state["lam"])
+            lam_half = jax.vmap(dro.project_simplex)(state["lam"] + eta_la * dual_grads)
+            lam_new = mix_stacked(lam_half, self.topology)
+        else:
+            lam_new = state["lam"]
+
+        gamma = self._resolve_gamma(ChocoConsensus._encode_dim(theta_half))
+        theta_new, choco_new = choco_round(
+            theta_half, state["choco"], self.topology, gamma, self.compressor,
+            gossip_key, packed=cfg.packed_gossip, fused=cfg.fused_gossip,
+        )
+        return dict(
+            step=state["step"] + 1, theta=theta_new, lam=lam_new,
+            choco=choco_new, momentum=momentum, rng=rng,
+        ), losses
+
+
+class SeedDRDSGD:
+    """The seed DRDSGD trainer's math, verbatim."""
+
+    def __init__(self, config: DRDSGDConfig, loss_fn, prior=None):
+        from repro.core.topology import make_topology
+
+        self.config = config
+        self.loss_fn = loss_fn
+        self.topology = make_topology(config.topology, config.num_nodes)
+        m = config.num_nodes
+        self.prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
+
+    def init(self, params, rng):
+        m = self.config.num_nodes
+        stacked = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape).copy(), params)
+        return dict(
+            step=jnp.zeros((), jnp.int32),
+            theta=stacked,
+            momentum=jax.tree.map(jnp.zeros_like, stacked),
+            rng=jnp.array(rng, copy=True),
+        )
+
+    def step(self, state, batch):
+        cfg = self.config
+        m = cfg.num_nodes
+        rng, *node_keys = jax.random.split(state["rng"], m + 1)
+        node_keys = jnp.stack(node_keys)
+
+        losses, grads = jax.vmap(jax.value_and_grad(self.loss_fn))(state["theta"], batch, node_keys)
+        lam = dro.kl_closed_form_weights(losses, self.prior, cfg.alpha)
+        scale = (lam / self.prior).astype(jnp.float32)
+
+        t = state["step"].astype(jnp.float32)
+        eta = cfg.eta_theta * jnp.power(cfg.lr_decay, t)
+
+        def upd(p, g, mo):
+            g = g.astype(jnp.float32) * scale.reshape((m,) + (1,) * (g.ndim - 1))
+            mo = cfg.momentum * mo + g
+            return (p.astype(jnp.float32) - eta * mo).astype(p.dtype), mo
+
+        flat_p, tdef = jax.tree_util.tree_flatten(state["theta"])
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["momentum"])
+        stepped = [upd(p, g, mo) for p, g, mo in zip(flat_p, flat_g, flat_m)]
+        theta_half = jax.tree_util.tree_unflatten(tdef, [s[0] for s in stepped])
+        momentum = jax.tree_util.tree_unflatten(tdef, [s[1] for s in stepped])
+
+        theta_new = mix_stacked(theta_half, self.topology)
+        return dict(step=state["step"] + 1, theta=theta_new, momentum=momentum, rng=rng), lam
+
+
+class SeedDRFA:
+    """The seed DRFA trainer's math, verbatim."""
+
+    def __init__(self, config: DRFAConfig, loss_fn, prior=None):
+        self.config = config
+        self.loss_fn = loss_fn
+        m = config.num_nodes
+        self.prior = jnp.full((m,), 1.0 / m) if prior is None else jnp.asarray(prior)
+        self.num_sampled = max(1, int(round(config.participation * m)))
+
+    def init(self, params, rng):
+        return dict(
+            step=jnp.zeros((), jnp.int32),
+            theta=jax.tree.map(lambda x: jnp.array(x, copy=True), params),
+            lam=self.prior,
+            rng=jnp.array(rng, copy=True),
+        )
+
+    def step(self, state, batch):
+        cfg = self.config
+        m = cfg.num_nodes
+        k = self.num_sampled
+        rng, sample_key, *node_keys = jax.random.split(state["rng"], m + 2)
+        node_keys = jnp.stack(node_keys)
+
+        gumbel = -jnp.log(-jnp.log(jax.random.uniform(sample_key, (m,)) + 1e-20) + 1e-20)
+        scores = jnp.log(state["lam"] + 1e-20) + gumbel
+        _, sampled = jax.lax.top_k(scores, k)
+        mask = jnp.zeros((m,), jnp.float32).at[sampled].set(1.0)
+
+        t = state["step"].astype(jnp.float32)
+        eta = cfg.eta_theta * jnp.power(cfg.lr_decay, t)
+
+        def local_train(theta0, client_batch, key):
+            def body(theta, mb):
+                loss, g = jax.value_and_grad(self.loss_fn)(theta, mb, key)
+                theta = jax.tree.map(
+                    lambda p, gg: (p.astype(jnp.float32) - eta * gg.astype(jnp.float32)).astype(p.dtype),
+                    theta,
+                    g,
+                )
+                return theta, loss
+
+            theta_k, losses = jax.lax.scan(body, theta0, client_batch)
+            return theta_k, losses.mean()
+
+        theta_rep = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m,) + p.shape), state["theta"])
+        theta_locals, local_losses = jax.vmap(local_train)(theta_rep, batch, node_keys)
+
+        wsum = mask.sum()
+        theta_new = jax.tree.map(
+            lambda x: (
+                (x.astype(jnp.float32) * mask.reshape((m,) + (1,) * (x.ndim - 1))).sum(0) / wsum
+            ).astype(x.dtype),
+            theta_locals,
+        )
+
+        loss_vec = local_losses * mask * (m / jnp.maximum(wsum, 1.0))
+        lam_new = dro.project_simplex(state["lam"] + cfg.eta_lambda * cfg.local_steps * loss_vec)
+        return dict(step=state["step"] + 1, theta=theta_new, lam=lam_new, rng=rng), local_losses
+
+
+# ===================================================================== helpers
+def _data(d=6, b=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(M, b, d)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(M, b)).astype(np.float32) + np.arange(M)[:, None])
+    return {"x": x, "y": y}
+
+
+def _loss(params, batch, rng):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def _params(d=6):
+    rng = np.random.default_rng(3)
+    return {
+        "w": jnp.asarray(rng.normal(size=(d,)).astype(np.float32) * 0.1),
+        "b": jnp.zeros(()),
+    }
+
+
+def _assert_tree_equal(a, b, err=""):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, z in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z), err_msg=err)
+
+
+def _assert_tree_close(a, b, err="", rtol=3e-6, atol=1e-7):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, z in zip(la, lb):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(z, np.float32),
+            rtol=rtol, atol=atol, err_msg=err,
+        )
+
+
+def _run_pair(cfg: ADGDAConfig, steps=6, factory=adgda_trainer):
+    batch = _data()
+    params = _params()
+    seed = SeedADGDA(cfg, _loss)
+    new = factory(cfg, _loss)
+
+    # bit-for-bit under canonical op-by-op rounding
+    with jax.disable_jit():
+        s_old = seed.init(params, KEY)
+        s_new = new.init(params, KEY)
+        for t in range(steps):
+            s_old, losses_old = seed.step(s_old, batch)
+            s_new, aux = new.step_impl(s_new, batch)
+            _assert_tree_equal(s_old["theta"], s_new.theta, f"theta diverged at round {t}")
+            _assert_tree_equal(s_old["lam"], s_new.lam, f"lambda diverged at round {t}")
+            _assert_tree_equal(s_old["choco"].theta_hat, s_new.consensus.theta_hat, f"hat at {t}")
+            _assert_tree_equal(s_old["choco"].s, s_new.consensus.s, f"s at {t}")
+            np.testing.assert_array_equal(np.asarray(losses_old), np.asarray(aux["losses"]))
+            np.testing.assert_array_equal(np.asarray(s_old["rng"]), np.asarray(s_new.rng))
+
+    # jitted: ULP-level (XLA FMA contraction varies with fusion context)
+    s_old = seed.init(params, KEY)
+    s_new = new.init(params, KEY)
+    seed_step = jax.jit(seed.step)
+    for t in range(steps):
+        s_old, _ = seed_step(s_old, batch)
+        s_new, _ = new.step(s_new, batch)
+    _assert_tree_close(s_old["theta"], s_new.theta, "jitted theta diverged")
+    _assert_tree_close(s_old["lam"], s_new.lam, "jitted lambda diverged")
+    np.testing.assert_array_equal(np.asarray(s_old["rng"]), np.asarray(s_new.rng))
+
+
+# ======================================================================= tests
+def test_adgda_parity_packed_momentum():
+    _run_pair(ADGDAConfig(num_nodes=M, topology="ring", compressor="q8b", alpha=0.05,
+                          eta_theta=0.05, eta_lambda=0.05, lr_decay=0.995, momentum=0.9,
+                          track_average=False))
+
+
+def test_adgda_parity_unpacked():
+    _run_pair(ADGDAConfig(num_nodes=M, topology="ring", compressor="q4b", alpha=0.05,
+                          eta_theta=0.05, eta_lambda=0.05, packed_gossip=False,
+                          track_average=False))
+
+
+def test_adgda_parity_fused_gossip():
+    """The fused path dispatches to the single-pass Pallas kernels, which
+    cannot run op-by-op (interpret mode requires tracing), so this parity is
+    jitted-vs-jitted: the round's numerics live inside the Pallas kernel
+    (identical program in both trainers), asserted bit-for-bit; the
+    surrounding oracle/dual ops to ULP."""
+    cfg = ADGDAConfig(num_nodes=M, topology="ring", compressor="kq8b", alpha=0.05,
+                      eta_theta=0.05, eta_lambda=0.05, fused_gossip=True,
+                      track_average=False)
+    batch, params = _data(), _params()
+    seed = SeedADGDA(cfg, _loss)
+    new = adgda_trainer(cfg, _loss)
+    s_old = seed.init(params, KEY)
+    s_new = new.init(params, KEY)
+    jstep = jax.jit(seed.step)
+    for t in range(6):
+        s_old, _ = jstep(s_old, batch)
+        s_new, _ = new.step(s_new, batch)
+        _assert_tree_close(s_old["theta"], s_new.theta, f"fused theta at {t}",
+                           rtol=1e-6, atol=1e-7)
+        _assert_tree_close(s_old["choco"].s, s_new.consensus.s, f"fused s at {t}",
+                           rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(s_old["rng"]), np.asarray(s_new.rng))
+
+
+def test_adgda_parity_identity_mesh():
+    _run_pair(ADGDAConfig(num_nodes=M, topology="mesh", compressor="none", alpha=0.05,
+                          eta_theta=0.05, eta_lambda=0.05, track_average=False))
+
+
+def test_adgda_parity_microbatched():
+    _run_pair(ADGDAConfig(num_nodes=M, topology="ring", compressor="q8b", alpha=0.05,
+                          eta_theta=0.05, eta_lambda=0.05, microbatches=2, momentum=0.8,
+                          track_average=False))
+
+
+def test_choco_sgd_parity():
+    cfg = ADGDAConfig(num_nodes=M, topology="ring", compressor="q4b",
+                      eta_theta=0.1, lr_decay=0.99, robust=False, track_average=False)
+    _run_pair(cfg, factory=lambda c, l: choco_sgd(c, l))
+
+
+def test_adgda_local_steps_close():
+    """The local-steps oracle reorders the (eta, grad, lam-weight) product —
+    seed computed (eta*g)*scale, the optimizer route computes eta*(g*scale) —
+    so this path is pinned to ~ULP-level agreement, not bit equality."""
+    K = 3
+    cfg = ADGDAConfig(num_nodes=M, topology="ring", compressor="q8b", alpha=0.05,
+                      eta_theta=0.05, eta_lambda=0.05, local_steps=K, track_average=False)
+    batch = _data(b=K * 4)
+    params = _params()
+
+    # seed local-steps reference (git d343f53): inline SGD, shared eta per round
+    seed = SeedADGDA(cfg, _loss)
+    new = adgda_trainer(cfg, _loss)
+
+    def seed_step(state, batch):
+        m = cfg.num_nodes
+        rng, gossip_key, *node_keys = jax.random.split(state["rng"], m + 2)
+        node_keys = jnp.stack(node_keys)
+        t = state["step"].astype(jnp.float32)
+        eta_th = cfg.eta_theta * jnp.power(cfg.lr_decay, t)
+        scale = (jnp.diagonal(state["lam"]) / seed.prior).astype(jnp.float32)
+
+        def to_k(leaf):
+            return leaf.reshape((m, K, leaf.shape[1] // K) + leaf.shape[2:]).swapaxes(0, 1)
+
+        kb = jax.tree.map(to_k, batch)
+
+        def local_body(theta, mbatch):
+            l, g = jax.vmap(jax.value_and_grad(_loss))(theta, mbatch, node_keys)
+            theta = jax.tree.map(
+                lambda p, gg: (
+                    p.astype(jnp.float32)
+                    - eta_th * gg.astype(jnp.float32) * scale.reshape((m,) + (1,) * (gg.ndim - 1))
+                ).astype(p.dtype),
+                theta,
+                g,
+            )
+            return theta, l
+
+        theta_half, losses_k = jax.lax.scan(local_body, state["theta"], kb)
+        losses = losses_k.mean(0)
+
+        node_ids = jnp.arange(m)
+        dual_grads = jax.vmap(
+            lambda f, i, l: dro.dual_gradient(f, i, l, seed.prior, cfg.alpha, seed.regularizer)
+        )(losses, node_ids, state["lam"])
+        lam_half = jax.vmap(dro.project_simplex)(state["lam"] + cfg.eta_lambda * dual_grads)
+        lam_new = mix_stacked(lam_half, seed.topology)
+
+        gamma = seed._resolve_gamma(ChocoConsensus._encode_dim(theta_half))
+        theta_new, choco_new = choco_round(
+            theta_half, state["choco"], seed.topology, gamma, seed.compressor,
+            gossip_key, packed=cfg.packed_gossip,
+        )
+        return dict(step=state["step"] + 1, theta=theta_new, lam=lam_new,
+                    choco=choco_new, momentum=(), rng=rng)
+
+    s_old = seed.init(params, KEY)
+    s_new = new.init(params, KEY)
+    jstep = jax.jit(seed_step)
+    for _ in range(12):
+        s_old = jstep(s_old, batch)
+        s_new, _ = new.step(s_new, batch)
+    _assert_tree_close(s_old["theta"], s_new.theta, "local-steps theta diverged",
+                       rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s_old["rng"]), np.asarray(s_new.rng))
+
+
+def test_drdsgd_parity():
+    cfg = DRDSGDConfig(num_nodes=M, topology="ring", alpha=2.0, eta_theta=0.05,
+                       lr_decay=0.99, momentum=0.9)
+    batch = _data()
+    params = _params()
+    seed = SeedDRDSGD(cfg, _loss)
+    new = drdsgd_trainer(cfg, _loss)
+    with jax.disable_jit():
+        s_old = seed.init(params, KEY)
+        s_new = new.init(params, KEY)
+        for t in range(6):
+            s_old, lam_old = seed.step(s_old, batch)
+            s_new, aux = new.step_impl(s_new, batch)
+            _assert_tree_equal(s_old["theta"], s_new.theta, f"theta diverged at round {t}")
+            np.testing.assert_array_equal(np.asarray(lam_old), np.asarray(aux["lambda_mean"]))
+            np.testing.assert_array_equal(np.asarray(s_old["rng"]), np.asarray(s_new.rng))
+    s_old = seed.init(params, KEY)
+    s_new = new.init(params, KEY)
+    jstep = jax.jit(seed.step)
+    for t in range(6):
+        s_old, _ = jstep(s_old, batch)
+        s_new, _ = new.step(s_new, batch)
+    _assert_tree_close(s_old["theta"], s_new.theta, "jitted theta diverged")
+
+
+def test_drfa_parity():
+    cfg = DRFAConfig(num_nodes=M, participation=0.5, local_steps=3,
+                     eta_theta=0.05, eta_lambda=0.05, lr_decay=0.99)
+    rng = np.random.default_rng(5)
+    d = 6
+    batch = {
+        "x": jnp.asarray(rng.normal(size=(M, 3, 4, d)).astype(np.float32)),
+        "y": jnp.asarray(rng.normal(size=(M, 3, 4)).astype(np.float32)),
+    }
+    params = _params(d)
+    seed = SeedDRFA(cfg, _loss)
+    new = drfa_trainer(cfg, _loss)
+    with jax.disable_jit():
+        s_old = seed.init(params, KEY)
+        s_new = new.init(params, KEY)
+        for t in range(6):
+            s_old, losses_old = seed.step(s_old, batch)
+            s_new, aux = new.step_impl(s_new, batch)
+            _assert_tree_equal(s_old["theta"], s_new.theta, f"theta diverged at round {t}")
+            np.testing.assert_array_equal(np.asarray(s_old["lam"]), np.asarray(s_new.lam))
+            np.testing.assert_array_equal(np.asarray(losses_old), np.asarray(aux["losses"]))
+            np.testing.assert_array_equal(np.asarray(s_old["rng"]), np.asarray(s_new.rng))
+    s_old = seed.init(params, KEY)
+    s_new = new.init(params, KEY)
+    jstep = jax.jit(seed.step)
+    for t in range(6):
+        s_old, _ = jstep(s_old, batch)
+        s_new, _ = new.step(s_new, batch)
+    _assert_tree_close(s_old["theta"], s_new.theta, "jitted theta diverged")
+    np.testing.assert_array_equal(np.asarray(s_old["lam"]), np.asarray(s_new.lam))
+
+
+def test_bf16_leaf_parity():
+    """Mixed-precision model: bf16 leaf exercises the cast-to-f32/back path."""
+    cfg = ADGDAConfig(num_nodes=M, topology="ring", compressor="q8b", alpha=0.05,
+                      eta_theta=0.05, eta_lambda=0.05, momentum=0.9, track_average=False)
+    batch = _data()
+    params = _params()
+    params["w"] = params["w"].astype(jnp.bfloat16)
+
+    def loss(p, b, r):
+        pred = b["x"] @ p["w"].astype(jnp.float32) + p["b"]
+        return jnp.mean((pred - b["y"]) ** 2)
+
+    seed = SeedADGDA(cfg, loss)
+    new = adgda_trainer(cfg, loss)
+    with jax.disable_jit():
+        s_old = seed.init(params, KEY)
+        s_new = new.init(params, KEY)
+        for t in range(6):
+            s_old, _ = seed.step(s_old, batch)
+            s_new, _ = new.step_impl(s_new, batch)
+            _assert_tree_equal(s_old["theta"], s_new.theta, f"theta diverged at round {t}")
