@@ -10,6 +10,7 @@ Paper-artifact map:
   F3  bench_convergence    Figs. 3/4 (worst-loss curves)
   K   bench_kernels        Pallas kernels vs refs
   G   bench_gossip         fused vs packed vs unpacked CHOCO round
+  FT  bench_faults         dropout / time-varying topology fault tolerance
 Roofline/dry-run artifacts live in launch/dryrun.py (§Dry-run, §Roofline).
 
 Each suite's rows are persisted to BENCH_<suite>.json next to this package's
@@ -26,6 +27,7 @@ from benchmarks import (
     bench_comparison,
     bench_compression,
     bench_convergence,
+    bench_faults,
     bench_gossip,
     bench_kernels,
     bench_regularization,
@@ -41,6 +43,7 @@ SUITES = {
     "F3": bench_convergence,
     "K": bench_kernels,
     "G": bench_gossip,
+    "FT": bench_faults,
 }
 
 REPO_ROOT = Path(__file__).resolve().parent.parent

@@ -1,3 +1,3 @@
-from repro.checkpoint.npz import latest_step, restore, save
+from repro.checkpoint.npz import latest_step, restore, save, step_path
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["latest_step", "restore", "save", "step_path"]

@@ -1,9 +1,16 @@
 """Sharding-agnostic pytree checkpointing to .npz.
 
 Leaves are addressed by their tree path ("layer/0/mixer/wq"), so save/restore
-round-trips any nested dict/list/tuple/NamedTuple of arrays.  Arrays are
-pulled to host (fully addressable) before writing — on a real multi-pod run
-wrap with ``jax.experimental.multihost_utils.process_allgather`` first.
+round-trips any nested dict/list/tuple/NamedTuple of arrays — including a
+full ``TrainerState`` (theta, lam, optimizer moments, CHOCO trackers, rng,
+step), which is what ``launch/train.py --resume`` relies on for bit-identical
+kill-and-resume.  Arrays are pulled to host (fully addressable) before
+writing — on a real multi-pod run wrap with
+``jax.experimental.multihost_utils.process_allgather`` first.
+
+Writes are atomic: the payload lands in ``<file>.tmp`` and is ``os.replace``d
+into place, so a run killed mid-save never leaves a truncated checkpoint
+where ``latest_step`` would find it.
 """
 from __future__ import annotations
 
@@ -13,7 +20,7 @@ import re
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "step_path"]
 
 _SEP = "|"
 
@@ -32,21 +39,51 @@ def _path_str(path) -> str:
     return _SEP.join(parts)
 
 
+def _strip_npz(path: str) -> str:
+    return path[: -len(".npz")] if path.endswith(".npz") else path
+
+
+def step_path(path: str, step: int) -> str:
+    """The filename :func:`save` writes for (path, step) — the single source
+    of truth for the step-tagged naming scheme (consumed by ``--resume``)."""
+    return f"{_strip_npz(path)}_{step:08d}.npz"
+
+
 def save(path: str, tree, step: int | None = None) -> str:
-    """Write `tree` to `<path>[_<step>].npz`. Returns the file written."""
+    """Write `tree` to `<path>[_<step>].npz`. Returns the file written.
+
+    With ``step``, a ``.npz`` suffix on ``path`` is stripped first so
+    ``save("ckpt.npz", t, step=100)`` writes ``ckpt_00000100.npz`` (not the
+    doubled ``ckpt.npz_00000100.npz``), matching what :func:`latest_step`
+    discovers.
+    """
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     payload = {_path_str(p): np.asarray(v) for p, v in flat}
-    fname = f"{path}_{step:08d}.npz" if step is not None else (path if path.endswith(".npz") else path + ".npz")
+    if step is not None:
+        fname = step_path(path, step)
+    else:
+        fname = path if path.endswith(".npz") else path + ".npz"
     os.makedirs(os.path.dirname(fname) or ".", exist_ok=True)
     tmp = fname + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez(f, **payload)
-    os.replace(tmp, fname)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, fname)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
     return fname
 
 
 def restore(fname: str, tree_like):
-    """Load into the structure of `tree_like` (dtypes/shapes validated)."""
+    """Load into the structure of `tree_like` (dtypes/shapes validated).
+
+    ``tree_like`` may hold concrete arrays or ``jax.ShapeDtypeStruct``s (e.g.
+    from ``jax.eval_shape(trainer.init, ...)``) — only shape/dtype are read.
+    Shape mismatches raise; dtypes are cast to the reference leaf's dtype
+    (checkpoints written by this module already match, so the cast is the
+    identity on round-trips).
+    """
     with np.load(fname) as data:
         flat, tdef = jax.tree_util.tree_flatten_with_path(tree_like)
         leaves = []
@@ -62,7 +99,12 @@ def restore(fname: str, tree_like):
 
 
 def latest_step(path: str) -> int | None:
-    """Largest step among `<path>_<step>.npz` files, or None."""
+    """Largest step among `<path>_<step>.npz` files, or None.
+
+    Accepts the same ``path`` spelling as :func:`save` (a trailing ``.npz``
+    is ignored) and skips in-flight ``.tmp`` files from interrupted saves.
+    """
+    path = _strip_npz(path)
     d = os.path.dirname(path) or "."
     base = os.path.basename(path)
     pat = re.compile(re.escape(base) + r"_(\d{8})\.npz$")

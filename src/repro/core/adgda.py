@@ -36,7 +36,12 @@ import jax.numpy as jnp
 
 from repro.core import dro
 from repro.core.compression import Compressor, make_compressor
-from repro.core.topology import Topology, make_topology
+from repro.core.topology import (
+    Topology,
+    TopologySchedule,
+    make_topology,
+    make_topology_schedule,
+)
 from repro.core.trainer import (
     ChocoConsensus,
     DecentralizedTrainer,
@@ -60,6 +65,16 @@ ADGDAState = TrainerState
 class ADGDAConfig:
     num_nodes: int = 8
     topology: str = "ring"
+    topology_schedule: str | None = None  # time-varying wire: a
+    # make_topology_schedule spec ("roundrobin:ring,torus", "matching[:P]",
+    # or any static topology name).  None -> the static ``topology``.
+    dropout: float = 0.0  # per-round Bernoulli node-dropout probability; > 0
+    # wraps the topology (or schedule) in BernoulliDropout — dropped nodes
+    # skip their local update and gossip contribution but keep their CHOCO
+    # trackers consistent, and Metropolis weights are rescaled per round so
+    # W(t) stays doubly stochastic on the surviving subgraph
+    topology_p: float | None = None  # edge probability for erdos_renyi
+    topology_seed: int = 0  # graph-sampling seed (erdos_renyi, matchings)
     compressor: str = "q8b"
     regularizer: str = "chi2"
     alpha: float = 0.01
@@ -95,8 +110,28 @@ class ADGDAConfig:
     total_steps: int = 1000  # horizon for the cosine schedule
     nesterov: bool = False  # Nesterov momentum (sgd only)
 
-    def build(self) -> tuple[Topology, Compressor]:
-        return make_topology(self.topology, self.num_nodes), make_compressor(self.compressor)
+    def build(self) -> tuple[Topology | TopologySchedule, Compressor]:
+        """(topology-or-schedule, compressor) for the consensus layer.
+
+        Returns a plain static :class:`Topology` unless ``topology_schedule``
+        or ``dropout`` asks for time variation — so the default configuration
+        keeps the circulant/packed/fused fast paths and stays bit-identical
+        to the pre-schedule trainer.
+        """
+        comp = make_compressor(self.compressor)
+        spec = self.topology_schedule or self.topology
+        kw = {}
+        if spec == "erdos_renyi" and self.topology_p is not None:
+            kw["p"] = self.topology_p
+        if self.topology_schedule is not None or self.dropout > 0.0:
+            sched = make_topology_schedule(
+                spec, self.num_nodes, dropout=self.dropout,
+                seed=self.topology_seed, **kw,
+            )
+            return sched, comp
+        if self.topology == "erdos_renyi":
+            kw.setdefault("seed", self.topology_seed)
+        return make_topology(self.topology, self.num_nodes, **kw), comp
 
     def make_optimizer(self):
         """(optimizer, schedule) from the config — the primal update rule."""
@@ -135,13 +170,22 @@ def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None) -> Decentral
         grad_accum_dtype=config.grad_accum_dtype,
         spmd_axis_name=config.spmd_axis_name,
     )
+    # the dual's own gossip: a static schedule unwraps to its phase topology
+    # (plain mix_stacked fast path); a time-varying one is kept whole — the
+    # trainer threads the per-round dense W(t) into dual.update so the lambda
+    # gossip travels the same wire as the model
+    dual_topology = (
+        topology.topology_at(0)
+        if isinstance(topology, TopologySchedule) and topology.is_static
+        else topology
+    )
     if config.robust:
         dual = ProjectedAscent(
             prior=prior,
             alpha=config.alpha,
             eta_lambda=config.eta_lambda,
             regularizer=dro.make_regularizer(config.regularizer),
-            topology=topology,
+            topology=dual_topology,
         )
     else:
         dual = FrozenPrior(prior=prior)

@@ -27,7 +27,6 @@ the wire (packed ints + scales for quantization; values+indices for top-k);
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -132,16 +131,6 @@ class RandomQuantization(Compressor):
         return self.bits + 1 + 32.0 / max(d, 1)
 
 
-def _topk_mask(flat: jax.Array, k: int) -> jax.Array:
-    """0/1 mask keeping the k largest-magnitude entries."""
-    mag = jnp.abs(flat)
-    thresh = jax.lax.top_k(mag, k)[0][-1]
-    mask = mag >= thresh
-    # break ties so exactly <= k survive is not necessary for contraction;
-    # keep simple >= threshold mask (standard practice).
-    return mask
-
-
 @dataclasses.dataclass(frozen=True)
 class TopK(Compressor):
     """Global top-K magnitude sparsification (Stich et al. 2018); delta = K/d."""
@@ -170,8 +159,10 @@ class TopK(Compressor):
         return out.reshape(shape).astype(dtype)
 
     def bits_per_element(self, d):
-        # (32-bit value + 32-bit index) per kept element
-        return 64.0 * self.fraction
+        # (32-bit value + 32-bit index) per *actually kept* element: encode
+        # transmits k_for(d) pairs, which rounding (and the k >= 1 floor)
+        # makes different from fraction*d at small d
+        return 64.0 * self.k_for(d) / max(d, 1)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -33,9 +33,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import Compressor, Identity
-from repro.core.topology import Topology
+from repro.core.topology import Topology, masked_metropolis
 
-__all__ = ["CHOCOState", "choco_init", "choco_round", "mix_stacked", "payload_bits"]
+__all__ = [
+    "CHOCOState",
+    "choco_init",
+    "choco_round",
+    "mix_stacked",
+    "mix_stacked_with",
+    "payload_bits",
+]
 
 
 class CHOCOState(NamedTuple):
@@ -64,6 +71,12 @@ def _mix_leaf(x: jax.Array, topology: Topology) -> jax.Array:
 def mix_stacked(tree, topology: Topology):
     """Gossip-average a stacked pytree: leaf[i] <- sum_j w_ij leaf[j]."""
     return jax.tree.map(lambda x: _mix_leaf(x, topology), tree)
+
+
+def mix_stacked_with(tree, w: jax.Array):
+    """Gossip-average a stacked pytree with an explicit (possibly traced,
+    e.g. per-round masked) dense [m, m] mixing matrix."""
+    return jax.tree.map(lambda x: _mix_leaf_dense(x, w), tree)
 
 
 def _roll_payload(payload, shift: int):
@@ -128,6 +141,63 @@ def _scan_plan(shape, inner_elems: int, block_scan_elems: int):
     return None
 
 
+def _mix_leaf_dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """sum_j w_ij x_j with an explicit (possibly traced) [m, m] matrix."""
+    flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    return (w.astype(jnp.float32) @ flat).reshape(x.shape).astype(x.dtype)
+
+
+def _round_leaf_masked(leaf, hat, s, key, mixing, gamma, compressor, mask):
+    """One fault-tolerant CHOCO round for a stacked leaf [m, ...].
+
+    ``mixing`` is the round's dense doubly-stochastic [m, m] matrix (time
+    varying and/or Metropolis-rescaled on the surviving subgraph); ``mask``
+    is the 0/1 participation vector (None == everyone alive).  Dropped nodes
+    skip the averaging step, contribute q_i = 0 to the wire and receive
+    nothing (their ``mixing`` row/column is the identity), so theta_hat_i
+    stays frozen and remains consistent with what their neighbors last saw —
+    a node can rejoin on any later round without resetting trackers.
+
+    Time-varying W forces the *memory-full* CHOCO form (Koloskova et al.
+    Algorithm 1): the averaging step uses sum_j w_ij(t) theta_hat_j computed
+    fresh from the current public copies instead of the accumulated tracker
+    ``s``.  The accumulation trick ``s += sum_j w_ij q_j`` is a pure memory
+    optimization that is only sound for a static W — one round under
+    different weights leaves a permanent inconsistency e = s - W theta_hat,
+    and the gossip then settles at a biased fixed point with consensus error
+    (I - W)^+ e (amplified by 1 / spectral-gap).  A physical deployment
+    realizes this form by storing neighbors' hat copies and re-syncing them
+    when a node rejoins or the graph changes; our stacked simulation gets
+    that re-sync for free.  ``s`` is still maintained (for alive nodes) as
+    the true tracker sum_j w_ij(t) theta_hat_j(t) so introspection and
+    checkpoints keep their meaning, but the masked path never reads it.
+
+    With a constant W and everyone alive this is numerically the unpacked
+    static path (s == W theta_hat inductively), though not bit-identical —
+    the dense matmul replaces the shift accumulation.
+    """
+    m = leaf.shape[0]
+    inner_shape, dtype = leaf.shape[1:], leaf.dtype
+    alive = jnp.ones((m,), jnp.float32) if mask is None else mask.astype(jnp.float32)
+    ab = alive.reshape((m,) + (1,) * (leaf.ndim - 1))
+    s_cur = _mix_leaf_dense(hat.astype(jnp.float32), mixing)  # sum_j w_ij(t) hat_j
+    theta_new = leaf + (ab * gamma).astype(dtype) * (s_cur - hat.astype(jnp.float32)).astype(dtype)
+    resid = ((theta_new - hat).astype(jnp.float32)) * ab
+    if isinstance(compressor, Identity):
+        q_self = resid
+    else:
+        node_keys = jax.random.split(key, m)
+        payload = jax.vmap(compressor.encode)(resid, node_keys)
+        # a zero residual encodes/decodes to exactly zero for every operator
+        # in this repo; the mask multiply makes "dropped nodes send nothing"
+        # robust to compressors without that property
+        q_self = _vdecode(compressor, payload, inner_shape, jnp.float32) * ab
+    hat_new = (hat.astype(jnp.float32) + q_self).astype(hat.dtype)
+    s_post = s_cur + _mix_leaf_dense(q_self, mixing)  # sum_j w_ij(t) hat_j(t)
+    s_new = (ab * s_post + (1.0 - ab) * s.astype(jnp.float32)).astype(s.dtype)
+    return theta_new, hat_new, s_new
+
+
 def _round_leaf(leaf, hat, s, key, topology, gamma, compressor, use_packed,
                 use_fused=False):
     """One CHOCO round for a single stacked leaf [m, ...]."""
@@ -168,6 +238,8 @@ def choco_round(
     packed: bool = True,
     fused: bool = False,
     block_scan_elems: int = BLOCK_SCAN_ELEMS,
+    mixing: jax.Array | None = None,
+    mask: jax.Array | None = None,
 ):
     """One compressed-consensus round over all leaves of a stacked pytree.
 
@@ -178,18 +250,39 @@ def choco_round(
     ``supports_fused_round`` and the topology is circulant; other
     (compressor, topology) combinations silently fall back to the
     packed/unpacked reference paths, which serve as cross-check oracles.
+
+    ``mixing``/``mask`` enter the time-varying fault-tolerant regime: the
+    round mixes with the explicit dense [m, m] matrix (e.g. a
+    ``TopologySchedule.mixing_at(t, mask)``) and nodes with ``mask == 0``
+    skip the averaging step, send q = 0 and receive nothing — their CHOCO
+    trackers stay frozen so they can rejoin later.  This path bypasses the
+    packed/fused dispatch (the wire pattern is round-dependent); with
+    ``mixing is None and mask is None`` the static fast paths are taken and
+    the round is bit-identical to pre-schedule behavior.
     """
     leaves, treedef = jax.tree_util.tree_flatten(theta_half)
     hat_leaves = treedef.flatten_up_to(state.theta_hat)
     s_leaves = treedef.flatten_up_to(state.s)
     keys = jax.random.split(key, len(leaves))
 
+    time_varying = mixing is not None or mask is not None
+    if time_varying and mixing is None:
+        # a mask without an explicit W(t) still must honor the dropped-node
+        # contract (identity row/column): rescale the static topology's
+        # Metropolis weights on the surviving subgraph
+        mixing = masked_metropolis(np.asarray(topology.adjacency), mask)
     use_packed = packed and topology.shifts is not None and not isinstance(compressor, Identity)
     use_fused = (
         fused
         and topology.shifts is not None
         and getattr(compressor, "supports_fused_round", False)
     )
+
+    def round_one(leaf, hat, s, k):
+        if time_varying:
+            return _round_leaf_masked(leaf, hat, s, k, mixing, gamma, compressor, mask)
+        return _round_leaf(leaf, hat, s, k, topology, gamma, compressor,
+                           use_packed, use_fused)
 
     new_theta, new_hat, new_s = [], [], []
     for leaf, hat, s, k in zip(leaves, hat_leaves, s_leaves, keys):
@@ -211,10 +304,7 @@ def choco_round(
             def body(_, xs, lc=lc, hc=hc, sc=sc, axis=axis):
                 i, kb = xs
                 take = lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=axis, keepdims=False)
-                return None, _round_leaf(
-                    take(lc), take(hc), take(sc), kb, topology, gamma, compressor,
-                    use_packed, use_fused
-                )
+                return None, round_one(take(lc), take(hc), take(sc), kb)
 
             _, (tn, hn, sn) = jax.lax.scan(body, None, (jnp.arange(chunks), bk))
 
@@ -225,9 +315,7 @@ def choco_round(
 
             theta_new, hat_new, s_new = unshape(tn), unshape(hn), unshape(sn)
         else:
-            theta_new, hat_new, s_new = _round_leaf(
-                leaf, hat, s, k, topology, gamma, compressor, use_packed, use_fused
-            )
+            theta_new, hat_new, s_new = round_one(leaf, hat, s, k)
         new_theta.append(theta_new)
         new_hat.append(hat_new)
         new_s.append(s_new)
@@ -236,10 +324,18 @@ def choco_round(
     return unf(new_theta), CHOCOState(theta_hat=unf(new_hat), s=unf(new_s))
 
 
-def payload_bits(compressor: Compressor, theta_template, topology: Topology) -> float:
-    """Bits transmitted per round by the busiest node (degree x payload)."""
+def payload_bits(compressor: Compressor, theta_template, topology) -> float:
+    """Bits transmitted per round by the busiest node (degree x payload).
+
+    ``theta_template`` leaves are *stacked* [m, ...]: the per-node payload of
+    a leaf is its inner size prod(shape[1:]).  A 1-D stacked leaf [m] is one
+    scalar per node (d = 1), not m elements — billing shape[0] there inflated
+    every scalar leaf's bit count by m x.  ``topology`` is anything with a
+    ``max_degree`` (a :class:`Topology` or a ``TopologySchedule``, for which
+    the busiest phase bounds the per-round bill).
+    """
     total = 0.0
     for leaf in jax.tree_util.tree_leaves(theta_template):
-        d = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else int(leaf.shape[0])
+        d = int(np.prod(leaf.shape[1:]))
         total += compressor.bits_per_element(d) * d
     return total * topology.max_degree

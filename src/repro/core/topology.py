@@ -11,6 +11,19 @@ circulant-symmetric graphs (ring, torus, mesh) the mixing
 ``sum_j w_ij x_j`` can be executed as a sum of ``jnp.roll`` operations along
 the node axis, which XLA lowers to ``collective-permute`` on TPU instead of an
 all-gather — this is what makes sparse gossip cheap on ICI/DCN.
+
+Real deployments are not static graphs where every node survives every
+round: links flap, nodes drop out and rejoin (the setting of Ghiasvand et
+al. 2025 and DRFA's sampled participation).  :class:`TopologySchedule`
+models that — a round-indexed family of topologies (static, round-robin
+over a graph family, random one-peer matchings) optionally decorated with
+Bernoulli node dropout.  The schedule side stays host/numpy for graph
+construction but exposes ``mixing_at(t, mask)`` which works on *traced*
+round indices and participation masks: the per-phase mixing matrices are
+stacked into a bank gathered with ``dynamic_index_in_dim``, and the dropout
+rescale recomputes Metropolis weights on the surviving subgraph in-graph,
+so W(t) stays symmetric doubly-stochastic every round (dead nodes get the
+identity row/column and simply hold their state).
 """
 from __future__ import annotations
 
@@ -22,14 +35,21 @@ import numpy as np
 
 __all__ = [
     "Topology",
+    "TopologySchedule",
+    "StaticSchedule",
+    "RoundRobinSchedule",
+    "MatchingSchedule",
+    "BernoulliDropout",
     "ring",
     "torus_2d",
     "mesh",
     "star",
     "erdos_renyi",
     "metropolis_weights",
+    "masked_metropolis",
     "spectral_gap",
     "make_topology",
+    "make_topology_schedule",
 ]
 
 
@@ -73,16 +93,20 @@ class Topology:
 
     def consensus_step_size(self, delta: float) -> float:
         """Theorem 4.1/4.3 consensus step size gamma for compression factor delta."""
-        rho, beta = self.spectral_gap, self.beta
-        return rho**2 * delta / (
-            16 * rho + rho**2 + 4 * beta**2 + 2 * rho * beta**2 - 8 * rho * delta
-        )
+        return _theorem_gamma(self.spectral_gap, self.beta, delta)
 
 
 def spectral_gap(w: np.ndarray) -> float:
     """rho = 1 - |lambda_2|: gap between the two largest eigenvalue moduli."""
     eig = np.sort(np.abs(np.linalg.eigvalsh(w)))[::-1]
     return float(1.0 - eig[1]) if eig.shape[0] > 1 else 1.0
+
+
+def _theorem_gamma(rho: float, beta: float, delta: float) -> float:
+    """Theorem 4.1/4.3 gamma from spectral gap rho and beta = ||I - W||."""
+    return rho**2 * delta / (
+        16 * rho + rho**2 + 4 * beta**2 + 2 * rho * beta**2 - 8 * rho * delta
+    )
 
 
 def _circulant_mixing(m: int, shifts: Sequence[tuple[int, float]]) -> np.ndarray:
@@ -189,11 +213,18 @@ def metropolis_weights(adj: np.ndarray) -> np.ndarray:
     return w
 
 
+def _erdos_renyi_factory(m: int, p: float = 0.3, seed: int = 0) -> Topology:
+    """`make_topology` adapter: defaults ``p`` so ``--topology erdos_renyi``
+    works without extra flags while still accepting ``p``/``seed`` kwargs."""
+    return erdos_renyi(m, p=p, seed=seed)
+
+
 _FACTORIES = {
     "ring": ring,
     "torus": torus_2d,
     "mesh": mesh,
     "star": star,
+    "erdos_renyi": _erdos_renyi_factory,
 }
 
 
@@ -201,3 +232,265 @@ def make_topology(name: str, m: int, **kwargs) -> Topology:
     if name not in _FACTORIES:
         raise ValueError(f"unknown topology {name!r}; choose from {sorted(_FACTORIES)}")
     return _FACTORIES[name](m, **kwargs)
+
+
+# =========================================================== time variation
+def masked_metropolis(adjacency, alive):
+    """Metropolis weights on the subgraph induced by ``alive`` (jnp, traceable).
+
+    ``adjacency`` is [m, m] (self-loops on the diagonal), ``alive`` a 0/1
+    float [m] participation mask.  Edges touching a dead node are removed and
+    degrees recomputed on the survivors, so the result is symmetric
+    doubly-stochastic for *every* mask: dead nodes degenerate to the identity
+    row/column (w_ii = 1 — they hold their state and contribute nothing).
+
+    Implemented with jnp ops only so it can run inside a jitted round on a
+    per-round Bernoulli mask.
+    """
+    import jax.numpy as jnp
+
+    adjacency = jnp.asarray(adjacency, jnp.float32)
+    alive = jnp.asarray(alive, jnp.float32)
+    m = adjacency.shape[0]
+    eye = jnp.eye(m, dtype=jnp.float32)
+    off = adjacency * (1.0 - eye) * alive[:, None] * alive[None, :]
+    deg = off.sum(axis=1)
+    w = off / (1.0 + jnp.maximum(deg[:, None], deg[None, :]))
+    return w + jnp.diag(1.0 - w.sum(axis=1))
+
+
+class TopologySchedule:
+    """A round-indexed sequence of topologies W(t) with period P.
+
+    Host-side analysis (spectral gaps, gamma resolution, bits accounting)
+    uses the numpy phase topologies; the jitted training step calls
+    :meth:`mixing_at` with a traced round index (and optional participation
+    mask) and gets the round's dense [m, m] mixing matrix.
+
+    ``dropout_rate == 0`` here; :class:`BernoulliDropout` decorates any
+    schedule with per-round node dropout.  A schedule with ``period == 1``
+    and no dropout is *static* — consumers can (and do) unwrap it to the
+    plain :class:`Topology` fast paths (circulant shifts, packed/fused
+    gossip), which keeps the static case bit-identical to the pre-schedule
+    code.
+    """
+
+    dropout_rate: float = 0.0
+
+    def __init__(self, topologies: Sequence[Topology], name: str | None = None):
+        topologies = tuple(topologies)
+        if not topologies:
+            raise ValueError("schedule needs at least one topology")
+        m = topologies[0].num_nodes
+        if any(t.num_nodes != m for t in topologies):
+            raise ValueError("all phases of a schedule must have the same num_nodes")
+        self.topologies = topologies
+        self.name = name or "+".join(t.name for t in topologies)
+        # [P, m, m] banks, gathered by t % P inside the jitted step
+        self.mixing_bank = np.stack([t.mixing for t in topologies])
+        self.adjacency_bank = np.stack([t.adjacency for t in topologies])
+
+    # ------------------------------------------------------------- host side
+    @property
+    def period(self) -> int:
+        return len(self.topologies)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.topologies[0].num_nodes
+
+    @property
+    def is_static(self) -> bool:
+        return self.period == 1 and self.dropout_rate == 0.0
+
+    def topology_at(self, t: int) -> Topology:
+        return self.topologies[int(t) % self.period]
+
+    @property
+    def spectral_gap(self) -> float:
+        """Worst phase — conservative for step-size theory."""
+        return min(t.spectral_gap for t in self.topologies)
+
+    @property
+    def beta(self) -> float:
+        return max(t.beta for t in self.topologies)
+
+    @property
+    def max_degree(self) -> int:
+        """Busiest node over all phases (bits accounting upper bound)."""
+        return max(t.max_degree for t in self.topologies)
+
+    def consensus_step_size(self, delta: float) -> float:
+        """Theorem 4.1 gamma, evaluated conservatively for the schedule.
+
+        Uses the worst (smallest-gap) phase when every phase is connected.
+        Schedules whose individual phases are disconnected (e.g. one-peer
+        matchings: each W(t) = I/2 + M/2 has |lambda_2| = 1) only mix *over
+        the period*, so the worst-phase formula would silently return
+        gamma = 0 and consensus would never move; fall back to the
+        period-mean mixing matrix W-bar = (1/P) sum_t W(t), whose gap is
+        positive whenever the union graph is connected.  Raise if even the
+        union never connects — gamma='theory' is meaningless there.
+        """
+        worst = min(self.topologies, key=lambda t: t.spectral_gap)
+        if worst.spectral_gap > 1e-9:
+            return worst.consensus_step_size(delta)
+        wbar = self.mixing_bank.mean(axis=0)
+        rho = spectral_gap(wbar)
+        if rho <= 1e-9:
+            raise ValueError(
+                f"schedule {self.name!r} never connects (union graph gap 0); "
+                "gamma='theory' is undefined — pass a numeric gamma instead"
+            )
+        beta = float(np.linalg.norm(np.eye(self.num_nodes) - wbar, ord=2))
+        return _theorem_gamma(rho, beta, delta)
+
+    # ----------------------------------------------------------- traced side
+    def _phase(self, t):
+        import jax.numpy as jnp
+
+        if self.period == 1:
+            return jnp.zeros((), jnp.int32)
+        return jnp.asarray(t, jnp.int32) % self.period
+
+    def mask_at(self, key, t):
+        """Participation mask for round ``t`` (None == everyone alive)."""
+        return None
+
+    def adjacency_at(self, t):
+        import jax
+        import jax.numpy as jnp
+
+        bank = jnp.asarray(self.adjacency_bank, jnp.float32)
+        if self.period == 1:
+            return bank[0]
+        return jax.lax.dynamic_index_in_dim(bank, self._phase(t), 0, keepdims=False)
+
+    def mixing_at(self, t, mask=None):
+        """Dense [m, m] mixing matrix for round ``t`` under ``mask``.
+
+        With a mask the phase's *adjacency* is re-weighted with Metropolis
+        weights on the surviving subgraph (doubly stochastic for every mask);
+        without one the phase's own mixing matrix is used verbatim.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        if mask is not None:
+            return masked_metropolis(self.adjacency_at(t), mask)
+        bank = jnp.asarray(self.mixing_bank, jnp.float32)
+        if self.period == 1:
+            return bank[0]
+        return jax.lax.dynamic_index_in_dim(bank, self._phase(t), 0, keepdims=False)
+
+
+class StaticSchedule(TopologySchedule):
+    """Trivial schedule: the same topology every round."""
+
+    def __init__(self, topology: Topology):
+        super().__init__((topology,), name=topology.name)
+
+
+class RoundRobinSchedule(TopologySchedule):
+    """Cycle deterministically over a family of graphs (e.g. ring -> torus)."""
+
+    def __init__(self, topologies: Sequence[Topology]):
+        super().__init__(topologies)
+
+
+class MatchingSchedule(TopologySchedule):
+    """Random one-peer matchings: each round every node gossips with (at
+    most) one partner, chosen from ``period`` pre-sampled perfect matchings.
+
+    The per-phase mixing is W = I/2 + M/2 for the matching's permutation
+    matrix M (odd node out keeps w_ii = 1) — symmetric doubly stochastic
+    with max degree 1, the cheapest possible round.
+    """
+
+    def __init__(self, m: int, period: int = 8, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        phases = []
+        for _ in range(max(1, period)):
+            perm = rng.permutation(m)
+            w = np.eye(m)
+            for a in range(0, m - 1, 2):
+                i, j = int(perm[a]), int(perm[a + 1])
+                w[i, i] = w[j, j] = 0.5
+                w[i, j] = w[j, i] = 0.5
+            adj = (w > 0).astype(np.float64)
+            phases.append(Topology("matching", adj, w, None))
+        super().__init__(phases, name="matching")
+
+
+class BernoulliDropout(TopologySchedule):
+    """Decorator: i.i.d. per-node Bernoulli dropout on top of any schedule.
+
+    Each round every node survives with probability ``1 - rate``; the
+    surviving subgraph's Metropolis weights keep W(t) doubly stochastic, and
+    dead nodes get the identity row (they hold their state until they
+    rejoin).  Note that for ``rate > 0`` even the all-alive mask routes
+    through the Metropolis rescale, so custom self-weights of the base graph
+    are replaced by Metropolis ones (identical for ring/torus/mesh).
+    """
+
+    def __init__(self, base: TopologySchedule | Topology, rate: float):
+        if isinstance(base, Topology):
+            base = StaticSchedule(base)
+        if not 0.0 <= rate < 1.0:
+            raise ValueError(f"dropout rate must be in [0, 1); got {rate}")
+        super().__init__(base.topologies, name=f"{base.name}+drop{rate:g}")
+        self.base = base
+        self.dropout_rate = float(rate)
+
+    def mask_at(self, key, t):
+        import jax
+        import jax.numpy as jnp
+
+        if self.dropout_rate == 0.0:
+            return None
+        keep = jax.random.bernoulli(
+            key, 1.0 - self.dropout_rate, (self.num_nodes,)
+        ).astype(jnp.float32)
+        return keep
+
+
+def make_topology_schedule(
+    spec: str,
+    m: int,
+    *,
+    dropout: float = 0.0,
+    period: int = 8,
+    seed: int = 0,
+    **topo_kwargs,
+) -> TopologySchedule:
+    """Parse a schedule spec into a :class:`TopologySchedule`.
+
+    Specs:
+      * any ``make_topology`` name (``"ring"``, ``"erdos_renyi"`` ...) — static;
+      * ``"roundrobin:ring,torus"`` — deterministic cycle over the family;
+      * ``"matching"`` / ``"matching:P"`` — P random one-peer matchings.
+
+    ``dropout > 0`` wraps the result in :class:`BernoulliDropout`.
+    ``topo_kwargs`` go to the single-topology (static) factory only (e.g.
+    ``p``/``seed`` for ``erdos_renyi``); roundrobin phases use factory
+    defaults and the explicit ``seed`` kwarg seeds matchings.
+    """
+    spec = spec.strip()
+    if spec.startswith("roundrobin:"):
+        names = [s for s in spec[len("roundrobin:"):].split(",") if s]
+        if not names:
+            raise ValueError(f"empty roundrobin schedule spec {spec!r}")
+        sched: TopologySchedule = RoundRobinSchedule(
+            [make_topology(n.strip(), m) for n in names]
+        )
+    elif spec == "matching" or spec.startswith("matching:"):
+        p = int(spec.split(":", 1)[1]) if ":" in spec else period
+        sched = MatchingSchedule(m, period=p, seed=seed)
+    else:
+        kw = dict(topo_kwargs)
+        if spec == "erdos_renyi":
+            kw.setdefault("seed", seed)
+        sched = StaticSchedule(make_topology(spec, m, **kw))
+    if dropout > 0.0:
+        sched = BernoulliDropout(sched, dropout)
+    return sched

@@ -56,9 +56,10 @@ from repro.core.gossip import (
     choco_init,
     choco_round,
     mix_stacked,
+    mix_stacked_with,
     payload_bits,
 )
-from repro.core.topology import Topology
+from repro.core.topology import Topology, TopologySchedule
 from repro.optim import Optimizer, OptState, Schedule
 
 __all__ = [
@@ -103,6 +104,19 @@ def _scale_grads(grads, scale: jax.Array, m: int):
         lambda g: g.astype(jnp.float32) * scale.reshape((m,) + (1,) * (g.ndim - 1)),
         grads,
     )
+
+
+def _select_nodes(mask: jax.Array, new_tree, old_tree, m: int):
+    """Per-node select: keep ``new`` where mask==1, revert to ``old`` where a
+    node sat the round out.  Applied leaf-wise to stacked trees; leaves
+    without a leading node axis (e.g. the optimizer's scalar step counter,
+    which is per-*round*, not per-node) keep the new value."""
+    alive = mask > 0
+    def sel(new, old):
+        if getattr(new, "ndim", 0) >= 1 and new.shape[0] == m:
+            return jnp.where(alive.reshape((m,) + (1,) * (new.ndim - 1)), new, old)
+        return new
+    return jax.tree.map(sel, new_tree, old_tree)
 
 
 # ============================================================== local update
@@ -259,7 +273,13 @@ class DualUpdate:
         m = losses.shape[0]
         return jnp.ones((m,), jnp.float32)
 
-    def update(self, lam: jax.Array, losses: jax.Array, ctx) -> jax.Array:
+    def update(self, lam: jax.Array, losses: jax.Array, ctx, *,
+               mixing: jax.Array | None = None,
+               mask: jax.Array | None = None) -> jax.Array:
+        """Advance lambda.  Under a time-varying/fault-tolerant consensus the
+        trainer passes the round's dense ``mixing`` matrix and participation
+        ``mask`` so dual gossip travels the same wire as the model; duals
+        that don't gossip ignore them."""
         raise NotImplementedError
 
     def bits_per_round(self) -> float:
@@ -290,7 +310,7 @@ class ProjectedAscent(DualUpdate):
     def grad_weights(self, lam, losses):
         return (jnp.diagonal(lam) / self.prior).astype(jnp.float32)
 
-    def update(self, lam, losses, ctx):
+    def update(self, lam, losses, ctx, *, mixing=None, mask=None):
         m = lam.shape[0]
         node_ids = jnp.arange(m)
         dual_grads = jax.vmap(
@@ -299,6 +319,10 @@ class ProjectedAscent(DualUpdate):
             )
         )(losses, node_ids, lam)
         lam_half = jax.vmap(dro.project_simplex)(lam + self.eta_lambda * dual_grads)
+        if mask is not None:  # dropped nodes skip their local ascent step too
+            lam_half = jnp.where((mask > 0).reshape((m, 1)), lam_half, lam)
+        if mixing is not None:
+            return mix_stacked_with(lam_half, mixing)
         return mix_stacked(lam_half, self.topology)
 
     def bits_per_round(self) -> float:
@@ -314,7 +338,7 @@ class FrozenPrior(DualUpdate):
     def init(self, m: int) -> jax.Array:
         return jnp.broadcast_to(self.prior[None], (m, m)).copy()
 
-    def update(self, lam, losses, ctx):
+    def update(self, lam, losses, ctx, **_):
         return lam
 
 
@@ -338,7 +362,7 @@ class KLClosedForm(DualUpdate):
         w = dro.kl_closed_form_weights(losses, self.prior, self.alpha)
         return (w / self.prior).astype(jnp.float32)
 
-    def update(self, lam, losses, ctx):
+    def update(self, lam, losses, ctx, **_):
         return dro.kl_closed_form_weights(losses, self.prior, self.alpha)
 
 
@@ -366,41 +390,72 @@ class SampledAscent(DualUpdate):
         _, sampled = jax.lax.top_k(scores, self.num_sampled)
         return jnp.zeros((m,), jnp.float32).at[sampled].set(1.0)
 
-    def update(self, lam, losses, mask):
+    def update(self, lam, losses, ctx, **_):
+        sampled = ctx  # the begin() sampling mask, shared with FedAvg
         m = lam.shape[0]
-        wsum = mask.sum()
-        loss_vec = losses * mask * (m / jnp.maximum(wsum, 1.0))
+        wsum = sampled.sum()
+        loss_vec = losses * sampled * (m / jnp.maximum(wsum, 1.0))
         return dro.project_simplex(lam + self.eta_lambda * self.local_steps * loss_vec)
 
 
 # ================================================================== consensus
 class Consensus:
-    """How the half-step models travel the wire."""
+    """How the half-step models travel the wire.
+
+    ``schedule`` is non-None when the wire is time-varying (a
+    :class:`~repro.core.topology.TopologySchedule` with period > 1 and/or
+    node dropout); the trainer then threads the round index, the
+    participation ``mask`` and the round's dense ``mixing`` matrix into
+    :meth:`mix`.  Static consensus implementations ignore them.
+    """
 
     needs_key: bool = False
     federated: bool = False  # True -> state.theta has no node axis
+    schedule: TopologySchedule | None = None
 
     def init(self, theta_stacked):
         return ()
 
-    def mix(self, theta_half, state, key: jax.Array | None, ctx):
+    def mix(self, theta_half, state, key: jax.Array | None, ctx, *,
+            step=None, mask=None, mixing=None):
         raise NotImplementedError
 
     def bits_per_round(self, theta_template) -> float:
         raise NotImplementedError
 
 
+def _split_schedule(topology):
+    """Normalize a Topology-or-Schedule ctor arg.
+
+    Returns (representative_topology, schedule_or_None, gamma_source): static
+    schedules unwrap to their phase topology so the circulant fast paths (and
+    bit-identical numerics) are preserved; time-varying ones keep phase 0 as
+    the representative for introspection and use the schedule's worst phase
+    for step-size theory.
+    """
+    if isinstance(topology, TopologySchedule):
+        sched = None if topology.is_static else topology
+        return topology.topology_at(0), sched, (sched or topology.topology_at(0))
+    return topology, None, topology
+
+
 class ChocoConsensus(Consensus):
     """CHOCO-GOSSIP compressed round (Koloskova et al. 2019) with the
     ``packed`` (mix encoded payload) / ``fused`` (single-pass Pallas,
-    kernels/choco_fused.py) dispatch preserved from ``gossip.choco_round``."""
+    kernels/choco_fused.py) dispatch preserved from ``gossip.choco_round``.
+
+    Constructed with a plain :class:`Topology` or a
+    :class:`TopologySchedule`; with a time-varying schedule the round mixes
+    with the schedule's dense W(t) (packed/fused dispatch does not apply —
+    the wire pattern changes every round) and honors the participation mask.
+    """
 
     needs_key = True
 
-    def __init__(self, topology: Topology, compressor: Compressor,
+    def __init__(self, topology: Topology | TopologySchedule, compressor: Compressor,
                  gamma: float | str | None = None, *, packed: bool = True,
                  fused: bool = False):
-        self.topology = topology
+        self.topology, self.schedule, self._gamma_topology = _split_schedule(topology)
         self.compressor = compressor
         self.gamma_spec = gamma
         self.packed = packed
@@ -447,7 +502,8 @@ class ChocoConsensus(Consensus):
         if hasattr(self.compressor, "delta_for"):
             delta = self.compressor.delta_for(max(int(d), 1))
         if self.gamma_spec == "theory":
-            return self.topology.consensus_step_size(max(delta, 1e-3))
+            # worst (smallest-gap) phase when the topology is a schedule
+            return self._gamma_topology.consensus_step_size(max(delta, 1e-3))
         if self.gamma_spec is not None:
             return float(self.gamma_spec)
         return 0.5 * max(delta, 1e-3)
@@ -458,28 +514,44 @@ class ChocoConsensus(Consensus):
         self.gamma = self._resolve_gamma(self._encode_dim(theta_stacked))
         return choco_init(theta_stacked)
 
-    def mix(self, theta_half, state, key, ctx):
+    def mix(self, theta_half, state, key, ctx, *, step=None, mask=None, mixing=None):
         gamma = self._resolve_gamma(self._encode_dim(theta_half))
+        if self.schedule is not None and mixing is None:
+            # standalone use (no trainer threading): resolve W(t) here
+            mixing = self.schedule.mixing_at(0 if step is None else step, mask)
         return choco_round(
             theta_half, state, self.topology, gamma, self.compressor, key,
-            packed=self.packed, fused=self.fused,
+            packed=self.packed, fused=self.fused, mixing=mixing, mask=mask,
         )
 
     def bits_per_round(self, theta_template) -> float:
-        return payload_bits(self.compressor, theta_template, self.topology)
+        return payload_bits(
+            self.compressor, theta_template, self.schedule or self.topology
+        )
 
 
 class ExactConsensus(Consensus):
-    """Uncompressed gossip: theta_i <- sum_j w_ij theta_j (DR-DSGD's wire)."""
+    """Uncompressed gossip: theta_i <- sum_j w_ij theta_j (DR-DSGD's wire).
 
-    def __init__(self, topology: Topology):
-        self.topology = topology
+    Accepts a :class:`TopologySchedule` too: the round then mixes with the
+    schedule's dense W(t) and dropped nodes (identity row/column) hold their
+    model until they rejoin.
+    """
 
-    def mix(self, theta_half, state, key, ctx):
+    def __init__(self, topology: Topology | TopologySchedule):
+        self.topology, self.schedule, _ = _split_schedule(topology)
+
+    def mix(self, theta_half, state, key, ctx, *, step=None, mask=None, mixing=None):
+        if self.schedule is not None and mixing is None:
+            mixing = self.schedule.mixing_at(0 if step is None else step, mask)
+        if mixing is not None:
+            return mix_stacked_with(theta_half, mixing), state
         return mix_stacked(theta_half, self.topology), state
 
     def bits_per_round(self, theta_template) -> float:
-        return payload_bits(Identity(), theta_template, self.topology)
+        return payload_bits(
+            Identity(), theta_template, self.schedule or self.topology
+        )
 
 
 class FedAvg(Consensus):
@@ -495,14 +567,15 @@ class FedAvg(Consensus):
     def __init__(self, num_sampled: int):
         self.num_sampled = num_sampled
 
-    def mix(self, theta_locals, state, key, mask):
+    def mix(self, theta_locals, state, key, ctx, *, step=None, mask=None, mixing=None):
         m = jax.tree_util.tree_leaves(theta_locals)[0].shape[0]
-        if mask is None:
-            mask = jnp.ones((m,), jnp.float32)
-        wsum = mask.sum()
+        sampled = ctx  # SampledAscent's per-round client mask (None = all)
+        if sampled is None:
+            sampled = jnp.ones((m,), jnp.float32)
+        wsum = sampled.sum()
         theta_new = jax.tree.map(
             lambda x: (
-                (x.astype(jnp.float32) * mask.reshape((m,) + (1,) * (x.ndim - 1))).sum(0)
+                (x.astype(jnp.float32) * sampled.reshape((m,) + (1,) * (x.ndim - 1))).sum(0)
                 / wsum
             ).astype(x.dtype),
             theta_locals,
@@ -576,6 +649,11 @@ class DecentralizedTrainer:
         return getattr(self.consensus, "topology", None)
 
     @property
+    def schedule(self) -> TopologySchedule | None:
+        """The time-varying topology schedule, or None when the wire is static."""
+        return getattr(self.consensus, "schedule", None)
+
+    @property
     def compressor(self) -> Compressor | None:
         return getattr(self.consensus, "compressor", None)
 
@@ -619,11 +697,14 @@ class DecentralizedTrainer:
         """Unjitted round — lower/compile with custom shardings via
         ``jax.jit(trainer.step_impl, in_shardings=...)`` (see launch/dryrun.py)."""
         m = self.num_nodes
+        schedule = self.schedule
+        needs_mask = schedule is not None and schedule.dropout_rate > 0
 
         # --- RNG: one split per round; extra keys only for the parts that
         # consume randomness, so compositions without them (e.g. DR-DSGD)
-        # reproduce the seed trainers' key streams exactly
-        n_extra = int(self.consensus.needs_key) + int(self.dual.needs_key)
+        # reproduce the seed trainers' key streams exactly — and a static
+        # no-dropout run reproduces the pre-schedule stream exactly
+        n_extra = int(self.consensus.needs_key) + int(self.dual.needs_key) + int(needs_mask)
         keys = jax.random.split(state.rng, m + 1 + n_extra)
         rng, idx = keys[0], 1
         gossip_key = None
@@ -632,7 +713,14 @@ class DecentralizedTrainer:
         dual_key = None
         if self.dual.needs_key:
             dual_key, idx = keys[idx], idx + 1
+        mask_key = None
+        if needs_mask:
+            mask_key, idx = keys[idx], idx + 1
         node_keys = keys[idx:]
+
+        # --- time-varying wire: participation mask + this round's W(t) ------
+        mask = schedule.mask_at(mask_key, state.step) if needs_mask else None
+        mixing = schedule.mixing_at(state.step, mask) if schedule is not None else None
 
         ctx = self.dual.begin(state.lam, dual_key)
 
@@ -642,12 +730,21 @@ class DecentralizedTrainer:
         theta_half, opt_new, losses = self.local.step(
             self.loss_fn, theta, state.opt, batch, node_keys, weights_fn
         )
+        if mask is not None:
+            # dropped nodes skip their local update: model and per-node
+            # optimizer moments revert, so a rejoining node resumes from
+            # exactly where it left off
+            theta_half = _select_nodes(mask, theta_half, theta, m)
+            opt_new = _select_nodes(mask, opt_new, state.opt, m)
 
         # --- dual update ----------------------------------------------------
-        lam_new = self.dual.update(state.lam, losses, ctx)
+        lam_new = self.dual.update(state.lam, losses, ctx, mixing=mixing, mask=mask)
 
         # --- consensus ------------------------------------------------------
-        theta_new, cons_new = self.consensus.mix(theta_half, state.consensus, gossip_key, ctx)
+        theta_new, cons_new = self.consensus.mix(
+            theta_half, state.consensus, gossip_key, ctx,
+            step=state.step, mask=mask, mixing=mixing,
+        )
 
         # --- running average of the network mean (output theta_o) -----------
         if self.track_average:
@@ -672,6 +769,8 @@ class DecentralizedTrainer:
         }
         if not self.federated:
             aux["consensus_err"] = _consensus_error(theta_new)
+        if mask is not None:
+            aux["participation"] = mask
 
         new_state = TrainerState(
             step=state.step + 1,

@@ -30,6 +30,10 @@ def make_trainer(
     num_nodes: int,
     *,
     topology: str = "ring",
+    topology_schedule: str | None = None,
+    dropout: float = 0.0,
+    topology_p: float | None = None,
+    topology_seed: int = 0,
     compressor: str = "q4b",
     alpha: float = 0.01,
     eta_theta: float = 0.1,
@@ -56,6 +60,10 @@ def make_trainer(
     adgda_cfg = ADGDAConfig(
         num_nodes=num_nodes,
         topology=topology,
+        topology_schedule=topology_schedule,
+        dropout=dropout,
+        topology_p=topology_p,
+        topology_seed=topology_seed,
         compressor=compressor,
         alpha=alpha,
         eta_theta=eta_theta,

@@ -8,17 +8,30 @@ demonstrates.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
       --steps 100 --nodes 4 --compressor q4b --topology ring
+
+Fault-tolerant / time-varying runs gossip over a topology schedule with
+optional per-round Bernoulli node dropout, and long runs are survivable:
+``--checkpoint ckpt/run --checkpoint-every 50`` persists the **entire**
+trainer state (theta, lambda, optimizer moments, CHOCO trackers, rng, step)
+and ``--resume`` picks up from the latest checkpoint bit-identically to an
+uninterrupted run (the synthetic data stream is deterministic and is
+fast-forwarded to the resume step):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --steps 200 --topology-schedule roundrobin:ring,torus --dropout 0.2 \
+      --checkpoint ckpt/run --checkpoint-every 50 --resume
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save
+from repro.checkpoint import latest_step, restore, save, step_path
 from repro.configs import get_config
 from repro.data import node_token_stream
 from repro.launch import steps as st
@@ -34,6 +47,15 @@ def main() -> None:
     ap.add_argument("--batch-per-node", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--topology", default="ring")
+    ap.add_argument("--topology-schedule", default=None,
+                    help="time-varying wire: 'roundrobin:ring,torus', "
+                         "'matching[:P]', or a static topology name")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-round Bernoulli node-dropout probability")
+    ap.add_argument("--topology-p", type=float, default=None,
+                    help="edge probability for --topology erdos_renyi")
+    ap.add_argument("--topology-seed", type=int, default=0,
+                    help="graph-sampling seed (erdos_renyi, matching schedules)")
     ap.add_argument("--compressor", default="q4b")
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--eta-theta", type=float, default=0.05)
@@ -53,6 +75,14 @@ def main() -> None:
                     help="single-pass Pallas gossip (requires a kq* compressor)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None, help="path prefix for npz checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=100,
+                    help="save the full trainer state every N completed rounds")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the full trainer state from the latest "
+                         "--checkpoint file and continue (bit-identical to an "
+                         "uninterrupted run)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write final losses/consensus_err to this JSON file")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -68,6 +98,10 @@ def main() -> None:
         cfg,
         args.nodes,
         topology=args.topology,
+        topology_schedule=args.topology_schedule,
+        dropout=args.dropout,
+        topology_p=args.topology_p,
+        topology_seed=args.topology_seed,
         compressor=args.compressor,
         alpha=args.alpha,
         eta_theta=args.eta_theta,
@@ -87,13 +121,38 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     params = T.init_model(key, cfg)
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+    wire = args.topology_schedule or args.topology
+    if args.dropout:
+        wire += f"+drop{args.dropout:g}"
     print(f"arch={cfg.name} params={n_params:,} nodes={args.nodes} "
-          f"compressor={args.compressor} topology={args.topology}")
+          f"compressor={args.compressor} topology={wire}")
 
-    state = trainer.init(params, jax.random.PRNGKey(args.seed + 1))
+    init_rng = jax.random.PRNGKey(args.seed + 1)
+    start_step = 0
+    if args.resume:
+        if not args.checkpoint:
+            raise SystemExit("--resume requires --checkpoint")
+        found = latest_step(args.checkpoint)
+        if found is None:
+            print(f"--resume: no checkpoint under {args.checkpoint!r}; starting fresh")
+            state = trainer.init(params, init_rng)
+        else:
+            # restore the *entire* trainer state into the abstract template —
+            # no recompute, and the continuation is bit-identical to a run
+            # that never stopped
+            template = jax.eval_shape(trainer.init, params, init_rng)
+            fname = step_path(args.checkpoint, found)
+            state = restore(fname, template)
+            start_step = found
+            print(f"resumed full trainer state from {fname} (step {found})")
+    else:
+        state = trainer.init(params, init_rng)
+
     # one round consumes local_steps x the per-node batch (K local updates)
     round_batch = args.batch_per_node * args.local_steps
     stream = node_token_stream(args.nodes, round_batch, seq, cfg.vocab_size, seed=args.seed)
+    for _ in range(start_step):  # deterministic stream: fast-forward to resume point
+        next(stream)
 
     def make_batch(tokens):
         batch = {"tokens": jnp.asarray(tokens)}
@@ -107,24 +166,44 @@ def main() -> None:
             )
         return batch
 
+    aux = None
     t0 = time.time()
-    for step in range(args.steps):
+    for step in range(start_step, args.steps):
         state, aux = trainer.step(state, make_batch(next(stream)))
         if step % args.log_every == 0 or step == args.steps - 1:
             losses = np.asarray(aux["losses"])
+            alive = (
+                f"alive={int(np.asarray(aux['participation']).sum())}/{args.nodes}  "
+                if "participation" in aux else ""
+            )
             print(
                 f"step {step:5d}  worst={losses.max():.4f}  mean={losses.mean():.4f}  "
-                f"consensus={float(aux['consensus_err']):.3e}  "
+                f"consensus={float(aux['consensus_err']):.3e}  {alive}"
                 f"lambda_max={float(aux['lambda_mean'].max()):.3f}  "
                 f"bits/round={trainer.bits_per_round(state):.3e}  "
-                f"({(time.time() - t0) / (step + 1):.2f}s/step)"
+                f"({(time.time() - t0) / (step - start_step + 1):.2f}s/step)"
             )
-        if args.checkpoint and step and step % 100 == 0:
-            save(args.checkpoint, trainer.network_mean(state), step=step)
+        done = step + 1
+        if args.checkpoint and done % args.checkpoint_every == 0 and done < args.steps:
+            fname = save(args.checkpoint, state, step=done)
+            print(f"checkpointed full trainer state to {fname}")
 
     if args.checkpoint:
-        fname = save(args.checkpoint, trainer.network_mean(state), step=args.steps)
-        print(f"saved consensus model to {fname}")
+        fname = save(args.checkpoint, state, step=args.steps)
+        base = args.checkpoint[:-4] if args.checkpoint.endswith(".npz") else args.checkpoint
+        model_file = save(base + "_model", trainer.network_mean(state))
+        print(f"saved final state to {fname}, consensus model to {model_file}")
+
+    if args.metrics_out and aux is not None:
+        metrics = {
+            "final_step": args.steps,
+            "losses": [float(x) for x in np.asarray(aux["losses"])],
+            "worst_loss": float(np.asarray(aux["losses"]).max()),
+            "consensus_err": float(aux["consensus_err"]),
+        }
+        with open(args.metrics_out, "w") as f:
+            json.dump(metrics, f, indent=2)
+        print(f"wrote metrics to {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,183 @@
+"""checkpoint/npz: round-trips, validation errors, latest_step, atomicity —
+and the full-state kill-and-resume parity harness (ISSUE 3 acceptance:
+resumed run == uninterrupted run bit-for-bit under jax.disable_jit)."""
+import os
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.core.adgda import ADGDAConfig, adgda_trainer
+
+
+class Inner(NamedTuple):
+    a: Any
+    b: Any
+
+
+class Outer(NamedTuple):
+    x: Any
+    items: Any
+    d: Any
+
+
+def _tree():
+    return Outer(
+        x=jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        items=[jnp.ones((4,), jnp.int32), Inner(a=jnp.zeros((2, 2)), b=jnp.float32(3.5))],
+        d={"k1": jnp.arange(5, dtype=jnp.uint32), "k2": (jnp.ones(()), jnp.zeros((1, 1)))},
+    )
+
+
+# ------------------------------------------------------------- round trips
+def test_roundtrip_nested_tree(tmp_path):
+    tree = _tree()
+    fname = save(str(tmp_path / "ckpt"), tree)
+    assert fname.endswith(".npz") and os.path.exists(fname)
+    out = restore(fname, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_roundtrip_into_shape_dtype_structs(tmp_path):
+    tree = _tree()
+    fname = save(str(tmp_path / "ckpt"), tree)
+    template = jax.eval_shape(lambda: _tree())
+    out = restore(fname, template)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------ errors
+def test_shape_mismatch_raises(tmp_path):
+    fname = save(str(tmp_path / "ckpt"), {"w": jnp.zeros((3, 3))})
+    with pytest.raises(ValueError, match="shape"):
+        restore(fname, {"w": jnp.zeros((2, 3))})
+
+
+def test_missing_leaf_raises(tmp_path):
+    fname = save(str(tmp_path / "ckpt"), {"w": jnp.zeros((3,))})
+    with pytest.raises(KeyError, match="missing leaf"):
+        restore(fname, {"w": jnp.zeros((3,)), "extra": jnp.zeros((1,))})
+
+
+def test_dtype_cast_to_reference(tmp_path):
+    fname = save(str(tmp_path / "ckpt"), {"w": jnp.arange(3, dtype=jnp.int32)})
+    out = restore(fname, {"w": jnp.zeros((3,), jnp.float32)})
+    assert np.asarray(out["w"]).dtype == np.float32
+
+
+# ------------------------------------------------------- naming/discovery
+def test_step_naming_strips_npz_suffix(tmp_path):
+    """Regression: save('foo.npz', step=N) used to write foo.npz_N.npz."""
+    f1 = save(str(tmp_path / "run.npz"), {"w": jnp.zeros(2)}, step=100)
+    f2 = save(str(tmp_path / "run"), {"w": jnp.zeros(2)}, step=200)
+    assert os.path.basename(f1) == "run_00000100.npz"
+    assert os.path.basename(f2) == "run_00000200.npz"
+    assert ".npz_" not in f1
+
+
+def test_latest_step_discovery(tmp_path):
+    prefix = str(tmp_path / "run")
+    assert latest_step(prefix) is None
+    for s in (10, 300, 20):
+        save(prefix, {"w": jnp.zeros(2)}, step=s)
+    assert latest_step(prefix) == 300
+    # both path spellings find the same files
+    assert latest_step(prefix + ".npz") == 300
+    # unrelated files with similar names are not picked up
+    (tmp_path / "run2_00000999.npz").write_bytes(b"")
+    assert latest_step(prefix) == 300
+
+
+def test_latest_step_missing_dir():
+    assert latest_step("/nonexistent/dir/run") is None
+
+
+# -------------------------------------------------------------- atomicity
+def test_atomic_write_no_tmp_left_on_success(tmp_path):
+    save(str(tmp_path / "ckpt"), {"w": jnp.zeros(2)}, step=1)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_atomic_write_tmp_cleaned_on_failure(tmp_path, monkeypatch):
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(OSError):
+        save(str(tmp_path / "ckpt"), {"w": jnp.zeros(2)}, step=1)
+    assert os.listdir(tmp_path) == []  # neither the .npz nor a stale .tmp
+    assert latest_step(str(tmp_path / "ckpt")) is None
+
+
+# ------------------------------------------- full-state resume bit-parity
+def _toy_loss(params, batch, rng):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+def _toy_batch(m, key, n=8, d=4):
+    kx, ky = jax.random.split(key)
+    return (jax.random.normal(kx, (m, n, d)), jax.random.normal(ky, (m, n)))
+
+
+@pytest.mark.parametrize(
+    "cfg_kwargs",
+    [
+        {"topology": "ring"},
+        {"topology": "ring", "momentum": 0.9},
+        {"topology": "ring", "optimizer": "adam", "momentum": 0.0},
+        {"topology_schedule": "roundrobin:ring,torus", "dropout": 0.25},
+        {"topology_schedule": "matching:3", "dropout": 0.5},
+    ],
+    ids=["sgd", "momentum", "adam", "roundrobin-drop", "matching-drop"],
+)
+def test_kill_and_resume_bit_identical(tmp_path, cfg_kwargs):
+    """Save the full TrainerState mid-run, rebuild everything from scratch,
+    restore, continue — every leaf of the final state (theta, lam, optimizer
+    moments, CHOCO trackers, rng, step) must match the uninterrupted run
+    bit-for-bit."""
+    m, total, cut = 6, 8, 4
+    cfg = ADGDAConfig(num_nodes=m, compressor="q4b", eta_theta=0.1, **cfg_kwargs)
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros(())}
+    batches = [_toy_batch(m, jax.random.PRNGKey(100 + t)) for t in range(total)]
+
+    with jax.disable_jit():
+        trainer = adgda_trainer(cfg, _toy_loss)
+        state = trainer.init(params, jax.random.PRNGKey(0))
+        final_auxes = []
+        for t in range(total):
+            if t == cut:
+                save(str(tmp_path / "run"), state, step=t)
+            state, aux = trainer.step_impl(state, batches[t])
+            final_auxes.append(aux)
+        uninterrupted = state
+
+        # "kill": fresh trainer + abstract template, restore, continue
+        trainer2 = adgda_trainer(cfg, _toy_loss)
+        found = latest_step(str(tmp_path / "run"))
+        assert found == cut
+        template = jax.eval_shape(trainer2.init, params, jax.random.PRNGKey(0))
+        state2 = restore(str(tmp_path / f"run_{found:08d}.npz"), template)
+        resumed_auxes = []
+        for t in range(cut, total):
+            state2, aux = trainer2.step_impl(state2, batches[t])
+            resumed_auxes.append(aux)
+
+    flat1, tdef1 = jax.tree_util.tree_flatten(uninterrupted)
+    flat2, tdef2 = jax.tree_util.tree_flatten(state2)
+    assert tdef1 == tdef2
+    for a, b in zip(flat1, flat2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # aux streams (losses, consensus error) match bit-for-bit as well
+    for a, b in zip(final_auxes[cut:], resumed_auxes):
+        np.testing.assert_array_equal(np.asarray(a["losses"]), np.asarray(b["losses"]))
+        np.testing.assert_array_equal(
+            np.asarray(a["consensus_err"]), np.asarray(b["consensus_err"])
+        )

@@ -145,3 +145,26 @@ def test_bits_per_element_ordering():
     t10 = TopK(fraction=0.10).bits_per_element(d)
     assert b4 < b8 < 32
     assert t10 < 32
+
+
+def test_topk_bits_exact_at_small_d():
+    """bits_per_element must bill what encode actually transmits: 64 bits per
+    *kept* element, k = k_for(d) — not the unrounded fraction (regression:
+    raw `64 * fraction` was wrong whenever round(fraction * d) != fraction*d,
+    and ignored the k >= 1 floor entirely)."""
+    tk = TopK(fraction=0.25)
+    for d in (1, 2, 3, 5, 10, 1024):
+        k = tk.k_for(d)
+        payload = tk.encode(jnp.arange(1.0, d + 1.0))
+        assert payload["values"].shape[0] == k
+        assert tk.bits_per_element(d) == pytest.approx(64.0 * k / d)
+    # d=2 @ 25%: keeps 1 of 2 elements (k floor), i.e. 32 bits/elem, not 16
+    assert tk.bits_per_element(2) == pytest.approx(32.0)
+    # large d: converges to the fraction-based estimate
+    assert tk.bits_per_element(1 << 20) == pytest.approx(64.0 * 0.25, rel=1e-5)
+
+
+def test_dead_topk_mask_helper_removed():
+    from repro.core import compression
+
+    assert not hasattr(compression, "_topk_mask")

@@ -166,3 +166,16 @@ def test_block_scanned_gossip_preserves_average_and_consensus():
     leaf2 = np.asarray(theta2["blocks"], np.float32)
     err_whole = ((leaf2 - leaf2.mean(0)) ** 2).sum()
     assert err_whole < 0.05 * errs[0]
+
+
+def test_payload_bits_scalar_leaf_regression():
+    """A stacked 1-D leaf [m] is ONE scalar per node: payload_bits must bill
+    d=1 for it, not d=m (regression: the old `leaf.ndim == 1` branch used
+    shape[0], inflating scalar leaves m-fold)."""
+    topo_ring = topology.ring(8)  # degree 2
+    theta = {"w": jnp.zeros((8, 100)), "scale": jnp.zeros((8,))}
+    bits = gossip.payload_bits(Identity(), theta, topo_ring)
+    assert bits == pytest.approx(2 * (100 + 1) * 32.0)
+    # independent of the node count: same per-node payload on a bigger graph
+    theta16 = {"w": jnp.zeros((16, 100)), "scale": jnp.zeros((16,))}
+    assert gossip.payload_bits(Identity(), theta16, topology.ring(16)) == bits

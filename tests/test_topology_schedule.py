@@ -1,0 +1,355 @@
+"""Time-varying, fault-tolerant consensus: TopologySchedule + dropout masks.
+
+Invariants under test:
+  * every phase of every schedule is symmetric doubly stochastic (Assumption
+    3.1 round-wise), including the Metropolis rescale on an arbitrary
+    surviving subgraph;
+  * a static schedule with no dropout is *bit-identical* to the plain
+    Topology fast paths (packed / unpacked / fused dispatch);
+  * dropped nodes skip their local update and gossip contribution but keep
+    their CHOCO trackers frozen, so they can rejoin consistently;
+  * the erdos_renyi factory is reachable through make_topology (regression:
+    it was implemented but unregistered).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gossip
+from repro.core import topology as topo
+from repro.core.adgda import ADGDAConfig, adgda_trainer
+from repro.core.compression import RandomQuantization
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _assert_doubly_stochastic(w, atol=1e-6):
+    w = np.asarray(w)
+    np.testing.assert_allclose(w, w.T, atol=atol)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=atol)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=atol)
+    assert (w >= -atol).all()
+
+
+# ------------------------------------------------------------- construction
+def test_erdos_renyi_reachable_through_factory():
+    t = topo.make_topology("erdos_renyi", 12, p=0.4, seed=3)
+    assert t.name == "erdos_renyi" and t.num_nodes == 12
+    _assert_doubly_stochastic(t.mixing, atol=1e-12)
+    # default p works without kwargs (the CLI path)
+    assert topo.make_topology("erdos_renyi", 8).num_nodes == 8
+
+
+@pytest.mark.parametrize(
+    "spec", ["ring", "roundrobin:ring,torus,mesh", "matching", "matching:3"]
+)
+def test_schedule_phases_doubly_stochastic(spec):
+    s = topo.make_topology_schedule(spec, 12, seed=1)
+    for t in range(2 * s.period):
+        _assert_doubly_stochastic(s.mixing_at(jnp.int32(t)))
+        # host-side view agrees with the traced bank
+        np.testing.assert_allclose(
+            np.asarray(s.mixing_at(jnp.int32(t))), s.topology_at(t).mixing, atol=1e-6
+        )
+
+
+def test_static_schedule_unwraps_and_is_static():
+    s = topo.make_topology_schedule("ring", 8)
+    assert s.is_static and s.period == 1 and s.dropout_rate == 0.0
+    assert not topo.make_topology_schedule("ring", 8, dropout=0.2).is_static
+    assert not topo.make_topology_schedule("roundrobin:ring,torus", 16).is_static
+
+
+def test_matching_schedule_is_one_peer():
+    s = topo.make_topology_schedule("matching:5", 10, seed=0)
+    assert s.max_degree == 1
+    for phase in s.topologies:
+        deg = (phase.adjacency - np.eye(10)).sum(1)
+        assert deg.max() <= 1
+
+
+def test_worst_phase_analysis():
+    s = topo.make_topology_schedule("roundrobin:ring,mesh", 16)
+    assert s.spectral_gap == pytest.approx(topo.ring(16).spectral_gap)
+    assert s.max_degree == topo.mesh(16).max_degree
+    assert s.consensus_step_size(0.5) == pytest.approx(
+        topo.ring(16).consensus_step_size(0.5)
+    )
+
+
+def test_matching_theory_gamma_positive():
+    """Regression: every single-matching phase is disconnected (gap 0), so
+    the worst-phase Theorem 4.1 gamma would silently be 0 and consensus
+    would never move; the schedule must fall back to the period-mean W."""
+    s = topo.make_topology_schedule("matching:8", 10, seed=0)
+    g = s.consensus_step_size(0.25)
+    assert 0.0 < g <= 1.0
+    # a schedule that never connects has no theory gamma at all
+    frozen = topo.TopologySchedule(
+        [topo.Topology("frozen", np.eye(4), np.eye(4), None)] * 2
+    )
+    with pytest.raises(ValueError, match="never connects"):
+        frozen.consensus_step_size(0.25)
+
+
+def test_mask_without_mixing_uses_masked_metropolis():
+    """Regression: choco_round(mask=...) with no explicit mixing must not
+    fall back to the full static weights — dead nodes would keep full-weight
+    influence on their neighbors.  The backfill must be the Metropolis
+    rescale on the surviving subgraph (identity rows for the dead)."""
+    m = 8
+    ring = topo.ring(m)
+    comp = RandomQuantization(bits=4)
+    theta = {"w": jax.random.normal(KEY, (m, 32))}
+    state = gossip.choco_init(theta)
+    mask = jnp.asarray([1, 1, 0, 1, 0, 1, 1, 1], jnp.float32)
+    t_a, s_a = gossip.choco_round(theta, state, ring, 0.3, comp, KEY, mask=mask)
+    t_b, s_b = gossip.choco_round(
+        theta, state, ring, 0.3, comp, KEY,
+        mixing=topo.masked_metropolis(ring.adjacency, mask), mask=mask,
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves((t_a, s_a)), jax.tree_util.tree_leaves((t_b, s_b))
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------ dropout masks
+def test_masked_metropolis_doubly_stochastic_any_mask():
+    t = topo.erdos_renyi(10, 0.4, seed=7)
+    for i, mask in enumerate(
+        [np.ones(10), np.zeros(10), (np.arange(10) % 2).astype(float)]
+    ):
+        w = topo.masked_metropolis(t.adjacency, jnp.asarray(mask))
+        _assert_doubly_stochastic(w)
+        dead = mask == 0
+        wd = np.asarray(w)
+        # dead nodes degenerate to the identity row/column
+        assert np.allclose(wd[dead].sum(1), 1.0)
+        assert np.allclose(np.diag(wd)[dead], 1.0), i
+
+
+def test_bernoulli_dropout_mask_and_rescale():
+    s = topo.make_topology_schedule("ring", 8, dropout=0.4)
+    mask = s.mask_at(jax.random.PRNGKey(3), jnp.int32(0))
+    assert mask.shape == (8,) and set(np.unique(np.asarray(mask))) <= {0.0, 1.0}
+    _assert_doubly_stochastic(s.mixing_at(jnp.int32(0), mask))
+    # all-alive mask reproduces plain Metropolis == the base ring weights
+    np.testing.assert_allclose(
+        np.asarray(s.mixing_at(jnp.int32(0), jnp.ones(8))),
+        topo.ring(8).mixing,
+        atol=1e-6,
+    )
+
+
+# ------------------------------------- masked CHOCO round: freeze + rejoin
+def test_dropped_nodes_frozen_and_rejoin_consistent():
+    m = 8
+    sched = topo.make_topology_schedule("ring", m, dropout=0.5)
+    comp = RandomQuantization(bits=4)
+    theta = {"w": jax.random.normal(KEY, (m, 32)), "b": jax.random.normal(KEY, (m,))}
+    state = gossip.choco_init(theta)
+    ring = sched.topology_at(0)
+
+    mask = jnp.asarray([1, 1, 0, 1, 0, 1, 1, 1], jnp.float32)
+    dead = np.asarray(mask) == 0
+    mixing = sched.mixing_at(jnp.int32(0), mask)
+    t1, s1 = gossip.choco_round(
+        theta, state, ring, 0.3, comp, KEY, mixing=mixing, mask=mask
+    )
+    for old, new in zip(jax.tree_util.tree_leaves(theta), jax.tree_util.tree_leaves(t1)):
+        assert np.array_equal(np.asarray(new)[dead], np.asarray(old)[dead])
+    for leaf in jax.tree_util.tree_leaves((s1.theta_hat, s1.s)):
+        assert np.array_equal(np.asarray(leaf)[dead], np.zeros_like(np.asarray(leaf)[dead]))
+
+    # rejoin: everyone alive next round — the round must still preserve the
+    # global average of theta (CHOCO invariant) and contract consensus
+    all_alive = jnp.ones((m,), jnp.float32)
+    t, s = t1, s1
+    mean0 = np.asarray(t["w"]).mean(0)
+    for i in range(250):
+        t, s = gossip.choco_round(
+            t, s, ring, 0.3, comp, jax.random.PRNGKey(i),
+            mixing=sched.mixing_at(jnp.int32(i), all_alive), mask=all_alive,
+        )
+    np.testing.assert_allclose(np.asarray(t["w"]).mean(0), mean0, atol=1e-4)
+    var0 = ((np.asarray(t1["w"]) - np.asarray(t1["w"]).mean(0)) ** 2).sum()
+    var = ((np.asarray(t["w"]) - np.asarray(t["w"]).mean(0)) ** 2).sum()
+    assert var < 0.05 * var0
+
+
+def test_masked_round_tracker_identity():
+    """Alive nodes' s must equal the true neighbor tracker
+    sum_j w_ij(t) theta_hat_j(t) after the round (memory-full CHOCO form);
+    gamma=0 leaves theta itself untouched."""
+    m = 6
+    sched = topo.make_topology_schedule("ring", m, dropout=0.3)
+    theta = {"w": jax.random.normal(KEY, (m, 16))}
+    state = gossip.choco_init(theta)
+    comp = RandomQuantization(bits=8)
+    mask = jnp.asarray([1, 0, 1, 1, 0, 1], jnp.float32)
+    mixing = sched.mixing_at(jnp.int32(0), mask)
+    t1, s1 = gossip.choco_round(
+        theta, state, sched.topology_at(0), 0.0, comp, KEY, mixing=mixing, mask=mask
+    )
+    # gamma=0: no averaging step, so theta is untouched and only hat/s move
+    np.testing.assert_array_equal(np.asarray(t1["w"]), np.asarray(theta["w"]))
+    alive = np.asarray(mask) == 1
+    tracker = np.asarray(mixing) @ np.asarray(s1.theta_hat["w"])
+    np.testing.assert_allclose(
+        np.asarray(s1.s["w"])[alive], tracker[alive], atol=1e-5
+    )
+
+
+# ----------------------------------------------- trainer-level integration
+def _toy_loss(params, batch, rng):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+def _toy_batch(m, key, n=8, d=4):
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (m, n, d))
+    y = jax.random.normal(ky, (m, n))
+    return (x, y)
+
+
+def _toy_params(d=4):
+    return {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+
+
+def _run(cfg_kwargs, steps=4, m=6, seed=0):
+    cfg = ADGDAConfig(num_nodes=m, compressor="q4b", eta_theta=0.1, **cfg_kwargs)
+    trainer = adgda_trainer(cfg, _toy_loss)
+    state = trainer.init(_toy_params(), jax.random.PRNGKey(seed))
+    auxes = []
+    with jax.disable_jit():
+        for t in range(steps):
+            state, aux = trainer.step_impl(state, _toy_batch(m, jax.random.PRNGKey(100 + t)))
+            auxes.append(aux)
+    return state, auxes
+
+
+def test_static_schedule_bit_identical_to_plain_topology():
+    """dropout=0 + static schedule must take the exact pre-schedule code path."""
+    s_plain, _ = _run({"topology": "ring"})
+    s_sched, _ = _run({"topology": "ring", "topology_schedule": "ring"})
+    for a, b in zip(jax.tree_util.tree_leaves(s_plain), jax.tree_util.tree_leaves(s_sched)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_static_schedule_bit_identical_packed_and_unpacked():
+    for packed in (True, False):
+        s_plain, _ = _run({"topology": "ring", "packed_gossip": packed})
+        s_sched, _ = _run(
+            {"topology": "ring", "topology_schedule": "ring", "packed_gossip": packed}
+        )
+        for a, b in zip(
+            jax.tree_util.tree_leaves(s_plain), jax.tree_util.tree_leaves(s_sched)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_static_schedule_bit_identical_fused():
+    """The fused Pallas dispatch must also be untouched by a static schedule
+    (jitted-vs-jitted: the fused kernel can't run op-by-op in interpret
+    mode, so compare the two jitted programs — identical trainers compile to
+    identical programs)."""
+    def run_jitted(cfg_kwargs, steps=2, m=6, seed=0):
+        cfg = ADGDAConfig(
+            num_nodes=m, compressor="kq4b", fused_gossip=True, eta_theta=0.1,
+            **cfg_kwargs,
+        )
+        trainer = adgda_trainer(cfg, _toy_loss)
+        state = trainer.init(_toy_params(), jax.random.PRNGKey(seed))
+        for t in range(steps):
+            state, _ = trainer.step(state, _toy_batch(m, jax.random.PRNGKey(100 + t)))
+        return state
+
+    s_plain = run_jitted({"topology": "ring"})
+    s_sched = run_jitted({"topology": "ring", "topology_schedule": "ring"})
+    for a, b in zip(
+        jax.tree_util.tree_leaves(s_plain), jax.tree_util.tree_leaves(s_sched)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dropout_trainer_freezes_dropped_nodes():
+    m = 6
+    cfg = ADGDAConfig(
+        num_nodes=m, topology="ring", dropout=0.5, compressor="q4b",
+        eta_theta=0.1, momentum=0.9,
+    )
+    trainer = adgda_trainer(cfg, _toy_loss)
+    assert trainer.schedule is not None and trainer.schedule.dropout_rate == 0.5
+    state = trainer.init(_toy_params(), jax.random.PRNGKey(0))
+    with jax.disable_jit():
+        for t in range(6):
+            prev = state
+            state, aux = trainer.step_impl(state, _toy_batch(m, jax.random.PRNGKey(t)))
+            mask = np.asarray(aux["participation"])
+            dead = mask == 0
+            if not dead.any():
+                continue
+            # dropped nodes: theta, optimizer momentum, CHOCO trackers frozen
+            for old, new in zip(
+                jax.tree_util.tree_leaves(
+                    (prev.theta, prev.opt.mu, prev.consensus)
+                ),
+                jax.tree_util.tree_leaves(
+                    (state.theta, state.opt.mu, state.consensus)
+                ),
+            ):
+                o, n = np.asarray(old), np.asarray(new)
+                if o.ndim >= 1 and o.shape[0] == m:
+                    assert np.array_equal(n[dead], o[dead])
+
+
+def test_roundrobin_trainer_converges_consensus():
+    m = 8
+    cfg = ADGDAConfig(
+        num_nodes=m, topology_schedule="roundrobin:ring,torus",
+        compressor="q8b", eta_theta=0.0, robust=False,
+    )
+    trainer = adgda_trainer(cfg, _toy_loss)
+    params = {"w": jnp.ones((4,)), "b": jnp.ones(())}
+    state = trainer.init(params, jax.random.PRNGKey(0))
+    # diverge the replicas, then let the schedule gossip them back together
+    theta = jax.tree.map(
+        lambda x: x + jax.random.normal(jax.random.PRNGKey(1), x.shape), state.theta
+    )
+    state = state._replace(theta=theta)
+    err0 = None
+    with jax.disable_jit():
+        for t in range(120):
+            state, aux = trainer.step_impl(state, _toy_batch(m, jax.random.PRNGKey(t)))
+            if err0 is None:
+                err0 = float(aux["consensus_err"])
+    assert float(aux["consensus_err"]) < 0.05 * err0
+
+
+def test_exact_consensus_accepts_schedule():
+    from repro.core.trainer import ExactConsensus
+
+    sched = topo.make_topology_schedule("roundrobin:ring,mesh", 6)
+    cons = ExactConsensus(sched)
+    x = {"w": jax.random.normal(KEY, (6, 5))}
+    out0, _ = cons.mix(x, (), None, None, step=jnp.int32(0))
+    out1, _ = cons.mix(x, (), None, None, step=jnp.int32(1))  # mesh phase
+    np.testing.assert_allclose(
+        np.asarray(out1["w"]), np.tile(np.asarray(x["w"]).mean(0), (6, 1)), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(out0["w"]), np.asarray(out1["w"]))
+
+
+def test_dropout_run_is_deterministic_given_seed():
+    """The mask stream comes from the trainer rng — same seed, same run."""
+    a, auxa = _run({"topology": "ring", "dropout": 0.3}, steps=5)
+    b, auxb = _run({"topology": "ring", "dropout": 0.3}, steps=5)
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_array_equal(
+        np.asarray(auxa[-1]["participation"]), np.asarray(auxb[-1]["participation"])
+    )
