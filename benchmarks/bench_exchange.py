@@ -1,0 +1,231 @@
+"""Collective-traffic suite — rolled vs ppermute exchange backends (suite X).
+
+Compiles one CHOCO gossip round (and one full AD-GDA train step) per
+{topology x compressor x backend} on an 8-device node-sharded CPU mesh and
+reads the *optimized per-partition HLO* with ``launch/hlo_cost.py``:
+
+* the ``ppermute`` backend must move collective-permute bytes ≈ **degree x
+  compressed payload** per device — the wire model the paper's
+  communication-efficiency claims assume (per-link, per-round accounting a
+  la DRFA/DR-DSGD), with zero all-gather traffic;
+* the ``rolled`` backend simulates the network on the stacked array, and at
+  m >= 8 GSPMD turns parts of it into all-gathers of the whole stacked
+  payload — its estimated transmitted bytes (``Cost.wire_bytes``) must be
+  *strictly above* the ppermute backend's for every scenario.
+
+Both assertions run inside the suite (a regression fails the benchmark, and
+CI runs it on the quick tier).  Device count must be fixed before jax
+initializes, so ``run()`` re-executes this module as a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; rows are persisted
+to BENCH_X.json by ``benchmarks.run`` like every suite.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+M = 8  # nodes == devices: every topology family is exercisable (block = 1)
+_MARK = "BENCH_X_JSON:"
+
+
+def run(quick: bool = True) -> list[dict]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 " + env.get("XLA_FLAGS", "")
+    ).strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [env.get("PYTHONPATH"), _repo_src(), _repo_root()] if p
+    )
+    cmd = [sys.executable, "-m", "benchmarks.bench_exchange", "--child"]
+    if not quick:
+        cmd.append("--full")
+    proc = subprocess.run(
+        cmd, env=env, cwd=_repo_root(), capture_output=True, text=True
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"bench_exchange child failed (rc={proc.returncode}):\n"
+            f"{proc.stdout[-4000:]}\n{proc.stderr[-4000:]}"
+        )
+    for line in proc.stdout.splitlines():
+        if line.startswith(_MARK):
+            return json.loads(line[len(_MARK):])
+    raise RuntimeError(f"bench_exchange child printed no rows:\n{proc.stdout[-2000:]}")
+
+
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _repo_src() -> str:
+    return os.path.join(_repo_root(), "src")
+
+
+# ---------------------------------------------------------------- child side
+def _payload_bytes(spec: str, d: int) -> float:
+    """Per-neighbor wire bytes of one compressed leaf payload.
+
+    kq*b: bit-packed levels (bits/8 B/elem) + sign bitmask (1/8 B/elem) +
+    one f32 norm; q*b: the unpacked reference wire format (uint8 level +
+    bool sign per element + one f32 norm).
+    """
+    if spec.startswith("kq"):
+        bits = int(spec[2:-1])
+        return d * bits / 8.0 + d / 8.0 + 4.0
+    if spec.startswith("q"):
+        return 2.0 * d + 4.0
+    raise ValueError(spec)
+
+
+def _child(quick: bool) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import gossip
+    from repro.core.compression import make_compressor
+    from repro.core.topology import make_topology
+    from repro.launch.hlo_cost import analyze_compiled
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.launch.sharding import node_shardings
+
+    assert len(jax.devices()) >= M, "child must run with 8 forced host devices"
+    mesh = make_cpu_mesh(data=M)
+    d = 1 << 14 if quick else 1 << 16
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(0), (M, d))}
+    state = gossip.choco_init(theta)
+    key = jax.random.PRNGKey(1)
+    repl = NamedSharding(mesh, P())
+    stree = lambda t: node_shardings(t, mesh, M)
+
+    rows: list[dict] = []
+    scenarios = [("ring", "kq4b"), ("torus", "kq4b"), ("erdos_renyi", "kq4b"),
+                 ("ring", "q4b"), ("erdos_renyi", "q4b")]
+    if not quick:
+        scenarios += [("torus", "q4b"), ("ring", "kq8b")]
+    for topo_name, spec in scenarios:
+        topo = make_topology(topo_name, M)
+        comp = make_compressor(spec)
+        per_backend = {}
+        for backend in ("rolled", "ppermute"):
+            kw = dict(packed=True)
+            if backend == "ppermute":
+                kw.update(backend="ppermute", mesh=mesh)
+            fn = lambda t, s, k: gossip.choco_round(t, s, topo, 0.2, comp, k, **kw)
+            compiled = (
+                jax.jit(fn, in_shardings=(stree(theta), stree(state), repl))
+                .lower(theta, state, key)
+                .compile()
+            )
+            cost = analyze_compiled(compiled)
+            per_backend[backend] = cost
+            rows.append({
+                "table": "X",
+                "scenario": "choco_round",
+                "topology": topo_name,
+                "compressor": spec,
+                "backend": backend,
+                "d": d,
+                "coll_permute_bytes": cost.coll["collective-permute"],
+                "all_gather_bytes": cost.coll["all-gather"],
+                "coll_operand_bytes": cost.coll_bytes,
+                "wire_bytes": cost.wire_bytes(M),
+                "expected_wire_bytes": topo.max_degree * _payload_bytes(spec, d),
+            })
+        # --- the wire-model assertions (the point of this suite) ----------
+        pp, ro = per_backend["ppermute"], per_backend["rolled"]
+        expect = topo.max_degree * _payload_bytes(spec, d)
+        cp = pp.coll["collective-permute"]
+        assert pp.coll["all-gather"] == 0.0, (
+            f"{topo_name}/{spec}: ppermute backend emitted all-gather bytes "
+            f"({pp.coll['all-gather']:.0f}) — the wire model leaked"
+        )
+        assert 0.9 * expect <= cp <= 1.6 * expect, (
+            f"{topo_name}/{spec}: ppermute collective-permute bytes {cp:.0f} "
+            f"not ~ degree x payload ({expect:.0f})"
+        )
+        assert pp.wire_bytes(M) < ro.wire_bytes(M), (
+            f"{topo_name}/{spec}: ppermute wire bytes {pp.wire_bytes(M):.0f} "
+            f"not strictly below rolled {ro.wire_bytes(M):.0f} at m={M}"
+        )
+
+    rows += _train_step_rows(mesh, d if quick else 1 << 14)
+    return rows
+
+
+def _train_step_rows(mesh, d: int) -> list[dict]:
+    """Compile the *full* AD-GDA train step (oracle + dual + consensus) on
+    both backends: the ppermute step's collective-permute bytes must still be
+    dominated by degree x payload (model payload + the m-float lambda gossip
+    riding the same permutes)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ADGDAConfig, adgda_trainer
+    from repro.launch.hlo_cost import analyze_compiled
+    from repro.launch.sharding import node_shardings
+
+    def loss_fn(params, batch, rng):
+        return (batch @ params["w"]).mean()
+
+    params = {"w": jnp.zeros((d,))}
+    batch = jax.random.normal(jax.random.PRNGKey(2), (M, 4, d))
+
+    rows = []
+    wire = {}
+    for backend in ("rolled", "ppermute"):
+        cfg = ADGDAConfig(
+            num_nodes=M, topology="ring", compressor="kq4b", alpha=0.05,
+            eta_theta=0.1, eta_lambda=0.05, track_average=False,
+            gossip_backend=backend,
+        )
+        trainer = adgda_trainer(
+            cfg, loss_fn, mesh=mesh if backend == "ppermute" else None
+        )
+        state = jax.eval_shape(trainer.init, params, jax.random.PRNGKey(0))
+        spec = node_shardings(state, mesh, M)
+        compiled = (
+            jax.jit(trainer.step_impl, in_shardings=(spec, node_shardings(batch, mesh, M)))
+            .lower(state, jax.ShapeDtypeStruct(batch.shape, batch.dtype))
+            .compile()
+        )
+        cost = analyze_compiled(compiled)
+        expect = 2 * (_payload_bytes("kq4b", d) + 4.0 * M)  # + lambda row gossip
+        wire[backend] = cost.wire_bytes(M)
+        rows.append({
+            "table": "X",
+            "scenario": "train_step",
+            "topology": "ring",
+            "compressor": "kq4b",
+            "backend": backend,
+            "d": d,
+            "coll_permute_bytes": cost.coll["collective-permute"],
+            "all_gather_bytes": cost.coll["all-gather"],
+            "coll_operand_bytes": cost.coll_bytes,
+            "wire_bytes": wire[backend],
+            "expected_wire_bytes": expect,
+        })
+        if backend == "ppermute":
+            cp = cost.coll["collective-permute"]
+            assert 0.9 * expect <= cp <= 2.0 * expect, (
+                f"train_step ppermute collective-permute bytes {cp:.0f} not ~ "
+                f"degree x (payload + lambda) ({expect:.0f})"
+            )
+    assert wire["ppermute"] < wire["rolled"], (
+        f"train_step: ppermute wire bytes {wire['ppermute']:.0f} not strictly "
+        f"below rolled {wire['rolled']:.0f}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        out = _child(quick="--full" not in sys.argv)
+        print(_MARK + json.dumps(out))
+    else:
+        from benchmarks.common import print_rows
+
+        print_rows(run(quick="--full" not in sys.argv))

@@ -57,7 +57,13 @@ def run(quick: bool = True, seeds=(0, 1)) -> list[dict]:
                 "steps": steps,
                 "worst_acc": sum(worst_accs) / len(worst_accs),
                 "consensus_err": sum(cons_errs) / len(cons_errs),
+                # upper bound (busiest phase, everyone alive) vs the
+                # participation-aware expectation a realized-bits meter
+                # converges to — the gap is the dropout dividend
                 "bits_per_round": info["bits_per_round"],
+                "bits_per_round_expected": float(
+                    trainer.bits_per_round(info["state"], mode="expected")
+                ),
             })
     return rows
 

@@ -1,0 +1,150 @@
+"""Bench regression gate — fail CI when a suite regresses vs its committed
+baseline.
+
+  PYTHONPATH=src python -m benchmarks.check_regression --suite G [--threshold 0.25]
+
+Re-runs the suite in quick mode and compares each row (matched on its
+non-numeric key fields) against the committed ``BENCH_<suite>.json``.  Gated
+metrics are *relative* or deterministic quantities so the gate is meaningful
+across machines:
+
+* suite **G** — ``speedup_fused_vs_packed`` (fused-gossip throughput
+  relative to the packed path on the same host; absolute ms are
+  machine-dependent and only reported).  Fails when the speedup drops more
+  than ``threshold`` below the baseline AND lands below the absolute
+  acceptance bar (1.5x, the PR-1 bar): a ratio that is merely lower than a
+  lucky dev-machine baseline but still comfortably above the bar is not a
+  regression — the committed baseline was not measured on the CI runner
+  class.
+* suite **X** — ``wire_bytes`` of the ppermute backend (a property of the
+  compiled HLO, deterministic per jax/XLA version).  Fails when the wire
+  bytes *grow* more than ``threshold`` above the baseline.
+
+Rows present in only one side are reported but do not fail the gate (suites
+grow across PRs); a metric regression does.
+
+Timing metrics on small shared runners are noisy even as ratios (the suite
+already takes min-of-N per timing), so an apparent regression triggers up to
+``--retries`` fresh re-runs of the whole suite, keeping each row's *best*
+value — the gate only fails when a drop is reproducible across every run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# suite -> list of (metric, direction, absolute_ok): "higher" = regression
+# when it drops, "lower" = regression when it grows.  A non-None absolute_ok
+# exempts values still on the right side of that bar from relative gating
+# (cross-machine baselines make pure ratios-of-timings flaky).
+GATES = {
+    "G": [("speedup_fused_vs_packed", "higher", 1.5)],
+    "X": [("wire_bytes", "lower", None)],
+}
+
+
+def _key(row: dict) -> tuple:
+    return tuple(
+        (k, v) for k, v in sorted(row.items()) if not isinstance(v, float)
+    )
+
+
+def _merge_best(suite: str, best: dict, fresh: dict) -> dict:
+    """Keep each row's best gated-metric values across runs (direction-aware)."""
+    out = dict(best)
+    for key, new in fresh.items():
+        old = out.get(key)
+        if old is None:
+            out[key] = new
+            continue
+        merged = dict(old)
+        for metric, direction, _ in GATES.get(suite, []):
+            if metric not in new or metric not in old:
+                continue
+            o, n = float(old[metric]), float(new[metric])
+            merged[metric] = max(o, n) if direction == "higher" else min(o, n)
+        out[key] = merged
+    return out
+
+
+def _evaluate(suite: str, baseline: dict, fresh: dict, threshold: float,
+              verbose: bool) -> list:
+    failures = []
+    for key, new in fresh.items():
+        old = baseline.get(key)
+        if old is None:
+            if verbose:
+                print(f"NEW ROW (not gated): {dict(key)}")
+            continue
+        for metric, direction, absolute_ok in GATES.get(suite, []):
+            if metric not in new or metric not in old:
+                continue
+            o, n = float(old[metric]), float(new[metric])
+            if direction == "higher":
+                bad = n < o * (1.0 - threshold)
+                verdict = f"{metric} {o:.4g} -> {n:.4g} (floor {o * (1 - threshold):.4g})"
+                if bad and absolute_ok is not None and n >= absolute_ok:
+                    bad = False
+                    verdict += f"; above the {absolute_ok:g} absolute bar, not gated"
+            else:
+                bad = n > o * (1.0 + threshold)
+                verdict = f"{metric} {o:.4g} -> {n:.4g} (ceiling {o * (1 + threshold):.4g})"
+                if bad and absolute_ok is not None and n <= absolute_ok:
+                    bad = False
+                    verdict += f"; below the {absolute_ok:g} absolute bar, not gated"
+            if verbose:
+                print(f"{'REGRESSION' if bad else 'ok':10s} {dict(key)}: {verdict}")
+            if bad:
+                failures.append((key, metric, o, n))
+    return failures
+
+
+def check(suite: str, threshold: float, retries: int = 1) -> int:
+    from benchmarks.run import SUITES
+
+    baseline_path = REPO_ROOT / f"BENCH_{suite}.json"
+    if not baseline_path.exists():
+        print(f"no committed baseline {baseline_path.name}; nothing to gate")
+        return 0
+    baseline = {_key(r): r for r in json.loads(baseline_path.read_text())["rows"]}
+    fresh = {_key(r): r for r in SUITES[suite].run(quick=True)}
+
+    failures = _evaluate(suite, baseline, fresh, threshold, verbose=True)
+    attempt = 0
+    while failures and attempt < retries:
+        attempt += 1
+        print(f"\napparent regression — retry {attempt}/{retries} "
+              "(timing noise is only believed when reproducible)")
+        fresh = _merge_best(
+            suite, fresh, {_key(r): r for r in SUITES[suite].run(quick=True)}
+        )
+        failures = _evaluate(suite, baseline, fresh, threshold, verbose=True)
+
+    gone = [k for k in baseline if k not in fresh]
+    for k in gone:
+        print(f"GONE (not gated): {dict(k)}")
+    if failures:
+        print(f"\n{len(failures)} metric regression(s) beyond {threshold:.0%} "
+              f"(reproduced across {attempt + 1} run(s))")
+        return 1
+    print(f"\ngate passed: {len(fresh)} rows within {threshold:.0%} of baseline")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suite", default="G", choices=sorted(GATES))
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument("--retries", type=int, default=1,
+                    help="extra full-suite re-runs when a regression appears; "
+                         "per-row best metric wins (timing noise absorber)")
+    args = ap.parse_args()
+    sys.exit(check(args.suite, args.threshold, args.retries))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ Paper-artifact map:
   K   bench_kernels        Pallas kernels vs refs
   G   bench_gossip         fused vs packed vs unpacked CHOCO round
   FT  bench_faults         dropout / time-varying topology fault tolerance
+  X   bench_exchange       rolled vs ppermute backend HLO collective bytes
 Roofline/dry-run artifacts live in launch/dryrun.py (§Dry-run, §Roofline).
 
 Each suite's rows are persisted to BENCH_<suite>.json next to this package's
@@ -27,6 +28,7 @@ from benchmarks import (
     bench_comparison,
     bench_compression,
     bench_convergence,
+    bench_exchange,
     bench_faults,
     bench_gossip,
     bench_kernels,
@@ -44,6 +46,7 @@ SUITES = {
     "K": bench_kernels,
     "G": bench_gossip,
     "FT": bench_faults,
+    "X": bench_exchange,
 }
 
 REPO_ROOT = Path(__file__).resolve().parent.parent

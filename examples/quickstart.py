@@ -19,6 +19,15 @@ the dual (projected ascent vs. frozen prior) and the CHOCO consensus
 ``choco_sgd(config, loss_fn)`` is the same composition with the dual frozen
 at the prior — the comparison below isolates exactly the robustness delta.
 
+The gossip here runs on the default ``rolled`` backend (the stacked-array
+network simulation).  On a multi-device host the same config runs
+mesh-native — only compressed payloads travel between ring neighbors as
+collective-permutes (README "Wire model"):
+
+    from repro.launch.mesh import make_node_mesh
+    cfg = ADGDAConfig(num_nodes=10, compressor="q4b", gossip_backend="ppermute")
+    trainer = adgda_trainer(cfg, loss_fn, mesh=make_node_mesh(10))
+
   PYTHONPATH=src python examples/quickstart.py [--steps 600]
 """
 import argparse

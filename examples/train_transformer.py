@@ -9,6 +9,14 @@ parameters travel the ring as 4-bit-quantized CHOCO residuals.
 On real hardware drop --reduced and point --arch at any of the 10 assigned
 configs; the full-scale mesh path is exercised by repro.launch.dryrun.
 
+``--gossip-backend ppermute`` swaps the rolled network *simulation* for the
+mesh-native neighbor-exchange substrate (shard_map + collective-permute of
+the packed payload — see README "Wire model"); give the host multiple
+devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/train_transformer.py --gossip-backend ppermute
+
   PYTHONPATH=src python examples/train_transformer.py [--arch qwen3-1.7b] [--steps 60]
 """
 import argparse
@@ -24,6 +32,7 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--gossip-backend", choices=("rolled", "ppermute"), default="rolled")
     args = ap.parse_args()
 
     sys.argv = [
@@ -36,6 +45,7 @@ def main() -> None:
         "--seq", "64",
         "--compressor", "q4b",
         "--topology", "ring",
+        "--gossip-backend", args.gossip_backend,
         "--log-every", "10",
     ]
     train_main()

@@ -83,6 +83,11 @@ class ADGDAConfig:
     lr_decay: float = 1.0  # eta_t = lr_decay^t * eta_0 (paper writes r^{-t}, intent is decay, r=0.995)
     gamma: float | str | None = None  # None -> 0.5*delta; "theory" -> Thm 4.1 value
     momentum: float = 0.0
+    gossip_backend: str = "rolled"  # exchange implementation: "rolled" (the
+    # stacked-array simulation, the reference oracle) or "ppermute" (the
+    # mesh-native SPMD substrate — shard_map + lax.ppermute moving only
+    # degree-many compressed messages between graph neighbors; requires the
+    # mesh kwarg of adgda_trainer / steps.make_trainer)
     packed_gossip: bool = True
     fused_gossip: bool = False  # dispatch the theta gossip to the single-pass
     # Pallas fast path (kernels/choco_fused.py).  Requires a compressor that
@@ -151,11 +156,17 @@ class ADGDAConfig:
         raise ValueError(f"unknown optimizer {self.optimizer!r}; choose sgd or adam")
 
 
-def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None) -> DecentralizedTrainer:
+def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None, *,
+                  mesh=None, node_axes="data") -> DecentralizedTrainer:
     """Compose AD-GDA (paper Algorithm 1) as a :class:`DecentralizedTrainer`.
 
     ``robust=False`` yields CHOCO-SGD (dual frozen at the prior) — same wire,
     same oracle, so the comparison isolates exactly the robustness delta.
+
+    ``mesh``/``node_axes`` place the node shards for
+    ``config.gossip_backend == "ppermute"`` (see ``launch.mesh``); both the
+    model consensus and the lambda gossip then run on the neighbor-exchange
+    substrate.
     """
     m = config.num_nodes
     topology, compressor = config.build()
@@ -170,10 +181,16 @@ def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None) -> Decentral
         grad_accum_dtype=config.grad_accum_dtype,
         spmd_axis_name=config.spmd_axis_name,
     )
+    consensus = ChocoConsensus(
+        topology, compressor, config.gamma,
+        packed=config.packed_gossip, fused=config.fused_gossip,
+        backend=config.gossip_backend, mesh=mesh, node_axes=node_axes,
+    )
     # the dual's own gossip: a static schedule unwraps to its phase topology
     # (plain mix_stacked fast path); a time-varying one is kept whole — the
     # trainer threads the per-round dense W(t) into dual.update so the lambda
-    # gossip travels the same wire as the model
+    # gossip travels the same wire as the model.  On the ppermute backend the
+    # static lambda gossip rides the consensus's neighbor permutes.
     dual_topology = (
         topology.topology_at(0)
         if isinstance(topology, TopologySchedule) and topology.is_static
@@ -186,13 +203,10 @@ def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None) -> Decentral
             eta_lambda=config.eta_lambda,
             regularizer=dro.make_regularizer(config.regularizer),
             topology=dual_topology,
+            mix_fn=consensus.wire_mix if config.gossip_backend == "ppermute" else None,
         )
     else:
         dual = FrozenPrior(prior=prior)
-    consensus = ChocoConsensus(
-        topology, compressor, config.gamma,
-        packed=config.packed_gossip, fused=config.fused_gossip,
-    )
     return DecentralizedTrainer(
         loss_fn,
         num_nodes=m,

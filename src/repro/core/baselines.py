@@ -63,9 +63,11 @@ DRDSGDState = TrainerState
 DRFAState = TrainerState
 
 
-def choco_sgd(config: ADGDAConfig, loss_fn: LossFn, prior=None) -> DecentralizedTrainer:
+def choco_sgd(config: ADGDAConfig, loss_fn: LossFn, prior=None, *,
+              mesh=None, node_axes="data") -> DecentralizedTrainer:
     """CHOCO-SGD = AD-GDA with the dual frozen at the prior."""
-    return adgda_trainer(dataclasses.replace(config, robust=False), loss_fn, prior)
+    return adgda_trainer(dataclasses.replace(config, robust=False), loss_fn, prior,
+                         mesh=mesh, node_axes=node_axes)
 
 
 # --------------------------------------------------------------------- DR-DSGD

@@ -1,0 +1,478 @@
+"""Mesh-native neighbor-exchange gossip: the SPMD consensus substrate.
+
+``core/gossip.py`` *simulates* the network on a single stacked array — every
+mix is a ``jnp.roll`` over the full node axis or a dense ``[m, m]`` matmul,
+and whether that turns into degree-many neighbor messages or an all-gather of
+the whole stacked payload is left to GSPMD's sharding propagation.  This
+module makes the wire model explicit: ``choco_round_ppermute`` runs the same
+CHOCO round under ``jax.experimental.shard_map`` over the mesh's node axes,
+where each device holds a contiguous block of nodes and *only compressed
+payloads travel between actual graph neighbors* via ``jax.lax.ppermute``:
+
+* circulant graphs (ring / torus / mesh) execute each shift of the
+  :class:`~repro.core.topology.PermutePlan` as a global roll of the sharded
+  node axis — at most two collective-permutes of boundary slabs per shift,
+  independent of the nodes-per-device block size;
+* irregular graphs (erdos_renyi, star, matching phases) execute the plan's
+  :class:`~repro.core.topology.EdgeStep` barriers — per-edge partial
+  permutations (one node per device required; see ROADMAP open items for the
+  uneven-ratio generalization);
+* time-varying schedules select their phase's wire program with
+  ``lax.switch`` on the traced round index, and dropout-masked rounds
+  compute the masked-Metropolis weights *locally from permuted participation
+  bits* (alive bits travel the plan's own exchanges, then degrees do) — no
+  ``[m, m]`` matrix is ever materialized on the wire path.
+
+Numerics: the static circulant paths (unpacked, packed, fused-Pallas)
+replicate the rolled oracle's accumulation order operation-for-operation and
+are bit-identical to ``gossip.choco_round`` jitted-vs-jitted; dense-matmul
+oracle paths (irregular graphs, masked rounds) reassociate the neighbor sum
+and agree to f32 rounding (~1 ULP per round) — tests/test_exchange.py pins
+both levels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.compression import Compressor, Identity
+from repro.core.gossip import BLOCK_SCAN_ELEMS, CHOCOState, _round_leaves, _vdecode
+from repro.core.topology import (
+    PermutePlan,
+    Topology,
+    TopologySchedule,
+    compile_permute_plan,
+    compile_schedule_plans,
+)
+
+__all__ = [
+    "choco_round_ppermute",
+    "mix_stacked_ppermute",
+    "node_mesh_info",
+]
+
+
+def node_mesh_info(mesh, node_axes, num_nodes: int) -> tuple[tuple[str, ...], int, int]:
+    """Validated (axes, ndev, block) for sharding ``num_nodes`` over the
+    mesh's node axes.  ``block`` is the nodes-per-device contiguous block."""
+    axes = (node_axes,) if isinstance(node_axes, str) else tuple(node_axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    missing = [a for a in axes if a not in sizes]
+    if missing:
+        raise ValueError(f"mesh {mesh.axis_names} has no axes {missing}")
+    ndev = 1
+    for a in axes:
+        ndev *= int(sizes[a])
+    if num_nodes % ndev != 0:
+        raise ValueError(
+            f"num_nodes={num_nodes} must be divisible by the node-axis device "
+            f"count {ndev} (mesh axes {axes}); uneven node/device ratios are a "
+            "ROADMAP open item"
+        )
+    return axes, ndev, num_nodes // ndev
+
+
+def _flat_axis_index(axes: tuple[str, ...], sizes: dict[str, int]):
+    """Row-major flat device index along the (possibly multi-axis) node dim."""
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * sizes[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _dev_perm(ndev: int, q: int) -> list[tuple[int, int]]:
+    return [(i, (i + q) % ndev) for i in range(ndev)]
+
+
+def _local_slice(arr, idx, block: int):
+    """Device-local [block, ...] slice of a replicated [m, ...] array."""
+    return jax.lax.dynamic_slice_in_dim(arr, idx * block, block, axis=0)
+
+
+def _shard_roll(x, shift: int, axes, ndev: int, block: int):
+    """``jnp.roll(x, shift, axis=0)`` over a node-sharded leading axis.
+
+    Decomposes the global shift into a whole-block device permute plus one
+    boundary-slab permute — the wire moves only what crosses a device
+    boundary, so a ring shift of ±1 costs one node-row per device however
+    many nodes a device hosts.  The shift is taken in the *minimal-|s|*
+    signed representative: normalizing -1 to m-1 would turn the ring's
+    backward edge into a full-block permute plus a (block-1)-row slab.
+    """
+    m = ndev * block
+    s = shift % m
+    if s == 0:
+        return x
+    if ndev == 1:
+        return jnp.roll(x, s, axis=0)
+    if s > m // 2:  # roll backward by m - s: fewer boundary rows on the wire
+        b = m - s
+        q, r = divmod(b, block)
+        if q:
+            x = jax.lax.ppermute(x, axes, _dev_perm(ndev, -q))
+        if r:
+            bot = jax.lax.ppermute(x[:r], axes, _dev_perm(ndev, -1))
+            x = jnp.concatenate([x[r:], bot], axis=0)
+        return x
+    q, r = divmod(s, block)
+    if q:
+        x = jax.lax.ppermute(x, axes, _dev_perm(ndev, q))
+    if r:
+        top = jax.lax.ppermute(x[block - r :], axes, _dev_perm(ndev, 1))
+        x = jnp.concatenate([top, x[: block - r]], axis=0)
+    return x
+
+
+def _recv(x, op, axes, ndev: int, block: int):
+    """Receive the neighbor value for one plan exchange op.
+
+    ``("shift", s)`` → global roll; ``("perm", pairs)`` → per-edge partial
+    permutation (block == 1, node index == device index).  Nodes that
+    receive nothing in a perm step get zeros — their receive weight is zero
+    by construction.
+    """
+    kind, arg = op
+    if kind == "shift":
+        return _shard_roll(x, arg, axes, ndev, block)
+    if ndev == 1:  # single-device degenerate mesh: permute rows locally
+        out = jnp.zeros_like(x)
+        for src, dst in arg:
+            out = out.at[dst].set(x[src])
+        return out
+    return jax.lax.ppermute(x, axes, list(arg))
+
+
+def _bcast(w, ndim: int):
+    """[block] per-node weights broadcast against a [block, ...] leaf."""
+    return w.reshape((w.shape[0],) + (1,) * (ndim - 1))
+
+
+# ---------------------------------------------------------------- static mix
+def _mix_local(x, plan: PermutePlan, axes, ndev, block, idx):
+    """``sum_j w_ij x_j`` on the local shard — mirrors ``gossip._mix_leaf``.
+
+    Circulant plans accumulate ``weight * shard_roll(x, shift)`` in the
+    oracle's shift order (bit-identical); irregular plans accumulate the
+    self term plus per-edge permutes (the dense-matmul oracle reassociated,
+    ~1 ULP).
+    """
+    if plan.shifts is not None:
+        out = jnp.zeros_like(x)
+        for shift, weight in plan.shifts:
+            term = x if shift == 0 else _shard_roll(x, shift, axes, ndev, block)
+            out = out + weight * term
+        return out
+    wdt = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
+    xw = x.astype(wdt)
+    sw = _local_slice(jnp.asarray(plan.self_weight, wdt), idx, block)
+    out = _bcast(sw, x.ndim) * xw
+    for step in plan.steps:
+        w = _local_slice(jnp.asarray(step.weights, wdt), idx, block)
+        out = out + _bcast(w, x.ndim) * _recv(xw, ("perm", step.perm), axes, ndev, block)
+    return out.astype(x.dtype)
+
+
+def _mix_payload_local(compressor, payload, shape, dtype, plan: PermutePlan,
+                       axes, ndev, block, idx):
+    """``sum_j w_ij decode(q_j)`` with the *packed payload* on the wire —
+    mirrors ``gossip._mix_payload`` for circulant plans (bit-identical) and
+    extends it to irregular plans (the rolled backend cannot pack those: it
+    falls back to a dense mix of decoded tensors, all-gathering f32)."""
+    troll = lambda p, op: jax.tree.map(lambda t: _recv(t, op, axes, ndev, block), p)
+    if plan.shifts is not None:
+        out = None
+        for shift, weight in plan.shifts:
+            rolled = payload if shift == 0 else troll(payload, ("shift", shift))
+            deq = _vdecode(compressor, rolled, shape, dtype)
+            out = weight * deq if out is None else out + weight * deq
+        return out
+    sw = _local_slice(jnp.asarray(plan.self_weight, jnp.float32), idx, block)
+    out = _bcast(sw, len(shape) + 1) * _vdecode(compressor, payload, shape, dtype)
+    for step in plan.steps:
+        recv = troll(payload, ("perm", step.perm))
+        deq = _vdecode(compressor, recv, shape, dtype)
+        w = _local_slice(jnp.asarray(step.weights, jnp.float32), idx, block)
+        out = out + _bcast(w, deq.ndim) * deq
+    return out
+
+
+# ------------------------------------------------------- masked / per-phase
+def _masked_weights(plan: PermutePlan, alive, axes, ndev, block):
+    """Masked-Metropolis weights computed locally from permuted participation
+    bits (the distributed form of ``topology.masked_metropolis``): alive bits
+    travel the plan's exchanges, per-node degrees are summed on-device, then
+    degrees travel the same exchanges to form w_ij = a_i a_j / (1 + max(deg_i,
+    deg_j)).  Returns (self_w [block], per-op weight vectors)."""
+    ops = plan.exchange_ops()
+    alive_nb = [_recv(alive, op, axes, ndev, block) for op in ops]
+    deg = jnp.zeros_like(alive)
+    for nb in alive_nb:
+        deg = deg + alive * nb
+    deg_nb = [_recv(deg, op, axes, ndev, block) for op in ops]
+    ws = [
+        alive * nb / (1.0 + jnp.maximum(deg, dnb))
+        for nb, dnb in zip(alive_nb, deg_nb)
+    ]
+    self_w = jnp.ones_like(alive)
+    for w in ws:
+        self_w = self_w - w
+    return self_w, ws
+
+
+def _phase_mix(x, alive, plan: PermutePlan, masked: bool, axes, ndev, block, idx):
+    """One phase's ``sum_j w_ij(t) x_j`` in f32: static phase weights when
+    unmasked, locally recomputed masked-Metropolis weights otherwise."""
+    xf = x.astype(jnp.float32)
+    if not masked:
+        return _mix_local(xf, plan, axes, ndev, block, idx)
+    self_w, ws = _masked_weights(plan, alive, axes, ndev, block)
+    out = _bcast(self_w, x.ndim) * xf
+    for op, w in zip(plan.exchange_ops(), ws):
+        out = out + _bcast(w, x.ndim) * _recv(xf, op, axes, ndev, block)
+    return out
+
+
+def _make_mix_t(plans, phase, alive, masked: bool, axes, ndev, block, idx):
+    """mix(x) = sum_j w_ij(t) x_j for the (traced) round phase."""
+    if len(plans) == 1:
+        return lambda x: _phase_mix(x, alive, plans[0], masked, axes, ndev, block, idx)
+
+    def mix(x):
+        branches = [
+            functools.partial(
+                _phase_mix, plan=p, masked=masked, axes=axes, ndev=ndev,
+                block=block, idx=idx,
+            )
+            for p in plans
+        ]
+        return jax.lax.switch(phase, branches, x, alive)
+
+    return mix
+
+
+# ------------------------------------------------------------- leaf rounds
+def _round_leaf_local(leaf, hat, s, key, plan, gamma, compressor: Compressor,
+                      use_packed, use_fused, axes, ndev, block, idx, m_global):
+    """One static CHOCO round on the local node block — mirrors
+    ``gossip._round_leaf`` operation-for-operation."""
+    if use_fused:
+        return _fused_round_local(
+            leaf, hat, s, key, plan, gamma, compressor, axes, ndev, block, idx, m_global
+        )
+    inner_shape, dtype = leaf.shape[1:], leaf.dtype
+    theta_new = leaf + jnp.asarray(gamma, dtype) * (s - hat).astype(dtype)
+    resid = (theta_new - hat).astype(jnp.float32)
+    if isinstance(compressor, Identity):
+        q_self = resid
+        mixed = _mix_local(q_self, plan, axes, ndev, block, idx)
+    else:
+        node_keys = _local_slice(jax.random.split(key, m_global), idx, block)
+        payload = jax.vmap(compressor.encode)(resid, node_keys)
+        q_self = _vdecode(compressor, payload, inner_shape, jnp.float32)
+        if use_packed:
+            mixed = _mix_payload_local(
+                compressor, payload, inner_shape, jnp.float32, plan,
+                axes, ndev, block, idx,
+            )
+        else:
+            mixed = _mix_local(q_self, plan, axes, ndev, block, idx)
+    hat_new = (hat.astype(jnp.float32) + q_self).astype(hat.dtype)
+    s_new = (s.astype(jnp.float32) + mixed).astype(s.dtype)
+    return theta_new, hat_new, s_new
+
+
+def _fused_round_local(leaf, hat, s, key, plan, gamma, compressor,
+                       axes, ndev, block, idx, m_global):
+    """Single-pass Pallas fast path on the local shard: the fused encode /
+    multi-shift dequant-accumulate kernels run on the [block, ...] slab and
+    the packed payload travels the wire via :func:`_shard_roll`."""
+    from repro.kernels.ops import fused_choco_round_leaf
+
+    node_keys = _local_slice(jax.random.split(key, m_global), idx, block)
+    roll_fn = lambda x, sh: _shard_roll(x, sh, axes, ndev, block)
+    return fused_choco_round_leaf(
+        leaf, hat, s, key, plan, gamma, compressor.bits,
+        getattr(compressor, "interpret", None),
+        roll_fn=roll_fn, node_keys=node_keys,
+    )
+
+
+def _round_leaf_masked_local(leaf, hat, s, key, mix_t, gamma,
+                             compressor: Compressor, alive, idx, block, m_global):
+    """Time-varying / fault-tolerant round on the local block — the
+    memory-full CHOCO form of ``gossip._round_leaf_masked`` with the two
+    dense ``W(t)`` products replaced by neighbor exchanges (``mix_t``)."""
+    inner_shape, dtype = leaf.shape[1:], leaf.dtype
+    ab = _bcast(alive, leaf.ndim)
+    s_cur = mix_t(hat.astype(jnp.float32))
+    theta_new = leaf + (ab * gamma).astype(dtype) * (s_cur - hat.astype(jnp.float32)).astype(dtype)
+    resid = ((theta_new - hat).astype(jnp.float32)) * ab
+    if isinstance(compressor, Identity):
+        q_self = resid
+    else:
+        node_keys = _local_slice(jax.random.split(key, m_global), idx, block)
+        payload = jax.vmap(compressor.encode)(resid, node_keys)
+        q_self = _vdecode(compressor, payload, inner_shape, jnp.float32) * ab
+    hat_new = (hat.astype(jnp.float32) + q_self).astype(hat.dtype)
+    s_post = s_cur + mix_t(q_self)
+    s_new = (ab * s_post + (1.0 - ab) * s.astype(jnp.float32)).astype(s.dtype)
+    return theta_new, hat_new, s_new
+
+
+# ------------------------------------------------------------------- rounds
+def choco_round_ppermute(
+    theta_half,
+    state: CHOCOState,
+    topology: Topology,
+    gamma: float,
+    compressor: Compressor,
+    key: jax.Array,
+    *,
+    mesh,
+    node_axes="data",
+    packed: bool = True,
+    fused: bool = False,
+    block_scan_elems: int = BLOCK_SCAN_ELEMS,
+    schedule: TopologySchedule | None = None,
+    step=None,
+    mask=None,
+):
+    """One compressed-consensus round on the SPMD neighbor-exchange backend.
+
+    Drop-in for ``gossip.choco_round`` (reached via its ``backend="ppermute"``
+    dispatch): same state threading, same RNG stream, same scan-plan leaf
+    chunking — but executed under ``shard_map`` over ``mesh``'s
+    ``node_axes``, with only packed compressed payloads (static rounds) or
+    public-copy/neighbor-q exchanges (time-varying rounds) on the wire.
+
+    ``schedule`` + ``step`` + ``mask`` replace the rolled backend's dense
+    ``mixing`` argument: phases are compiled to per-phase
+    :class:`~repro.core.topology.PermutePlan` wire programs selected by
+    ``lax.switch``, and a participation mask triggers the locally-computed
+    masked-Metropolis weights.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(theta_half)
+    m = leaves[0].shape[0]
+    axes, ndev, block = node_mesh_info(mesh, node_axes, m)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    time_varying = (
+        schedule is not None and not getattr(schedule, "is_static", True)
+    ) or mask is not None
+    if time_varying:
+        if schedule is not None:
+            plans = compile_schedule_plans(schedule)
+        else:
+            plans = (compile_permute_plan(topology),)
+        _check_block(plans, block, ndev)
+        period = len(plans)
+        use_packed = use_fused = False
+        plan = None
+    else:
+        plan = compile_permute_plan(topology)
+        _check_block((plan,), block, ndev)
+        use_packed = packed and not isinstance(compressor, Identity)
+        use_fused = (
+            fused
+            and plan.is_circulant
+            and getattr(compressor, "supports_fused_round", False)
+        )
+        period = 1
+
+    masked = mask is not None
+    args = [theta_half, state, key]
+    specs = [P(axes), P(axes), P()]
+    if masked:
+        args.append(mask)
+        specs.append(P(axes))
+    if time_varying:
+        step_arr = jnp.zeros((), jnp.int32) if step is None else jnp.asarray(step, jnp.int32)
+        args.append(step_arr)
+        specs.append(P())
+
+    def body(theta, st, key, *rest):
+        rest = list(rest)
+        alive = rest.pop(0) if masked else None
+        step_arg = rest.pop(0) if time_varying else None
+        idx = _flat_axis_index(axes, sizes)
+        lv, td = jax.tree_util.tree_flatten(theta)
+        hv = td.flatten_up_to(st.theta_hat)
+        sv = td.flatten_up_to(st.s)
+        keys = jax.random.split(key, len(lv))
+
+        if time_varying:
+            alive_local = (
+                jnp.ones((block,), jnp.float32)
+                if alive is None
+                else alive.astype(jnp.float32)
+            )
+            phase = (
+                jnp.zeros((), jnp.int32) if period == 1 else step_arg % period
+            )
+            mix_t = _make_mix_t(plans, phase, alive_local, masked, axes, ndev, block, idx)
+
+            def round_one(leaf, hat, s, k):
+                return _round_leaf_masked_local(
+                    leaf, hat, s, k, mix_t, gamma, compressor, alive_local,
+                    idx, block, m,
+                )
+
+        else:
+
+            def round_one(leaf, hat, s, k):
+                return _round_leaf_local(
+                    leaf, hat, s, k, plan, gamma, compressor, use_packed,
+                    use_fused, axes, ndev, block, idx, m,
+                )
+
+        # the chunk layout and per-chunk key stream come from the SAME driver
+        # as the rolled backend — bit-parity of the two is structural
+        new_theta, new_hat, new_s = _round_leaves(
+            lv, hv, sv, keys, round_one, block_scan_elems
+        )
+        unf = lambda ls: jax.tree_util.tree_unflatten(td, ls)
+        return unf(new_theta), CHOCOState(theta_hat=unf(new_hat), s=unf(new_s))
+
+    fn = shard_map(
+        body, mesh, in_specs=tuple(specs), out_specs=(P(axes), P(axes)),
+        check_rep=False,
+    )
+    return fn(*args)
+
+
+def mix_stacked_ppermute(tree, topology: Topology, *, mesh, node_axes="data"):
+    """Uncompressed gossip mix of a stacked pytree over the neighbor-exchange
+    wire — the SPMD counterpart of ``gossip.mix_stacked`` (the dual/lambda
+    gossip rides exactly these permutes when the ppermute backend is on)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    axes, ndev, block = node_mesh_info(mesh, node_axes, m)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    plan = compile_permute_plan(topology)
+    _check_block((plan,), block, ndev)
+
+    def body(t):
+        idx = _flat_axis_index(axes, sizes)
+        return jax.tree.map(
+            lambda x: _mix_local(x, plan, axes, ndev, block, idx), t
+        )
+
+    return shard_map(body, mesh, in_specs=P(axes), out_specs=P(axes), check_rep=False)(tree)
+
+
+def _check_block(plans: Sequence[PermutePlan], block: int, ndev: int) -> None:
+    """Irregular (non-circulant) graphs need one node per device: an EdgeStep
+    is a *device* permutation.  A single-device mesh is exempt — there is no
+    wire, and ``_recv`` executes the node permutation locally."""
+    if ndev > 1 and block > 1 and any(not p.is_circulant for p in plans):
+        raise ValueError(
+            "the ppermute backend runs irregular (non-circulant) graphs with "
+            "exactly one node per device; got a block of "
+            f"{block} nodes/device — use the rolled backend or a mesh whose "
+            "node axes match num_nodes (uneven ratios: ROADMAP open item)"
+        )

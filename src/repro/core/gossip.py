@@ -240,10 +240,28 @@ def choco_round(
     block_scan_elems: int = BLOCK_SCAN_ELEMS,
     mixing: jax.Array | None = None,
     mask: jax.Array | None = None,
+    *,
+    backend: str = "rolled",
+    mesh=None,
+    node_axes="data",
+    schedule=None,
+    step=None,
 ):
     """One compressed-consensus round over all leaves of a stacked pytree.
 
     Returns (theta_new, state_new).  theta_half leaves are [m, ...].
+
+    ``backend`` selects the exchange implementation:
+
+    * ``"rolled"`` (default) — this module's stacked-array simulation:
+      rolls over the full node axis / dense [m, m] matmuls.  Kept verbatim
+      as the reference oracle; how it maps to collectives is up to GSPMD.
+    * ``"ppermute"`` — the mesh-native SPMD substrate (core/exchange.py):
+      the round runs under ``shard_map`` over ``mesh``'s ``node_axes`` and
+      only degree-many compressed payloads travel between actual graph
+      neighbors via ``lax.ppermute``.  Requires ``mesh``; time variation is
+      expressed as ``schedule`` + ``step`` + ``mask`` (a dense ``mixing``
+      matrix has no wire meaning there and is rejected).
 
     ``fused=True`` dispatches to the compressor's single-pass Pallas fast
     path (kernels/choco_fused.py) when the compressor advertises
@@ -260,6 +278,30 @@ def choco_round(
     ``mixing is None and mask is None`` the static fast paths are taken and
     the round is bit-identical to pre-schedule behavior.
     """
+    if backend == "ppermute":
+        from repro.core.exchange import choco_round_ppermute
+
+        if mixing is not None:
+            raise ValueError(
+                "backend='ppermute' takes schedule/step/mask, not a dense "
+                "mixing matrix — the wire program is compiled per phase"
+            )
+        if mesh is None:
+            raise ValueError("backend='ppermute' requires a mesh")
+        return choco_round_ppermute(
+            theta_half, state, topology, gamma, compressor, key,
+            mesh=mesh, node_axes=node_axes, packed=packed, fused=fused,
+            block_scan_elems=block_scan_elems, schedule=schedule, step=step,
+            mask=mask,
+        )
+    if backend != "rolled":
+        raise ValueError(f"unknown gossip backend {backend!r}; choose rolled or ppermute")
+    if schedule is not None or step is not None:
+        raise ValueError(
+            "backend='rolled' does not consume schedule/step — resolve the "
+            "round's dense matrix yourself and pass mixing="
+            "schedule.mixing_at(step, mask) (what ChocoConsensus.mix does)"
+        )
     leaves, treedef = jax.tree_util.tree_flatten(theta_half)
     hat_leaves = treedef.flatten_up_to(state.theta_hat)
     s_leaves = treedef.flatten_up_to(state.s)
@@ -284,6 +326,22 @@ def choco_round(
         return _round_leaf(leaf, hat, s, k, topology, gamma, compressor,
                            use_packed, use_fused)
 
+    new_theta, new_hat, new_s = _round_leaves(
+        leaves, hat_leaves, s_leaves, keys, round_one, block_scan_elems
+    )
+    unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+    return unf(new_theta), CHOCOState(theta_hat=unf(new_hat), s=unf(new_s))
+
+
+def _round_leaves(leaves, hat_leaves, s_leaves, keys, round_one,
+                  block_scan_elems: int):
+    """Apply ``round_one(leaf, hat, s, key)`` to every stacked leaf, scanning
+    large leaves in _scan_plan chunks.  Shared by the rolled backend above
+    and the SPMD backend (core/exchange.py): the chunk layout and the
+    per-chunk key stream are part of the bit-parity contract between them —
+    ``_scan_plan`` reads only the inner dims, which a device-local shard
+    shares with the global leaf.
+    """
     new_theta, new_hat, new_s = [], [], []
     for leaf, hat, s, k in zip(leaves, hat_leaves, s_leaves, keys):
         inner_elems = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
@@ -308,10 +366,10 @@ def choco_round(
 
             _, (tn, hn, sn) = jax.lax.scan(body, None, (jnp.arange(chunks), bk))
 
-            def unshape(x, axis=axis):
+            def unshape(x, axis=axis, shape=leaf.shape):
                 # ys: [chunks, <leaf dims without the chunk axis position>]
                 x = jnp.moveaxis(x, 0, axis)
-                return x.reshape(leaf.shape)
+                return x.reshape(shape)
 
             theta_new, hat_new, s_new = unshape(tn), unshape(hn), unshape(sn)
         else:
@@ -319,23 +377,41 @@ def choco_round(
         new_theta.append(theta_new)
         new_hat.append(hat_new)
         new_s.append(s_new)
-
-    unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
-    return unf(new_theta), CHOCOState(theta_hat=unf(new_hat), s=unf(new_s))
+    return new_theta, new_hat, new_s
 
 
-def payload_bits(compressor: Compressor, theta_template, topology) -> float:
+def payload_bits(compressor: Compressor, theta_template, topology, *,
+                 mode: str = "max", step: int | None = None, mask=None) -> float:
     """Bits transmitted per round by the busiest node (degree x payload).
 
     ``theta_template`` leaves are *stacked* [m, ...]: the per-node payload of
     a leaf is its inner size prod(shape[1:]).  A 1-D stacked leaf [m] is one
     scalar per node (d = 1), not m elements — billing shape[0] there inflated
     every scalar leaf's bit count by m x.  ``topology`` is anything with a
-    ``max_degree`` (a :class:`Topology` or a ``TopologySchedule``, for which
-    the busiest phase bounds the per-round bill).
+    ``max_degree`` (a :class:`Topology` or a ``TopologySchedule``).
+
+    ``mode`` picks the degree the payload is billed against:
+
+    * ``"max"`` (default) — the busiest-phase ``max_degree`` upper bound,
+      mask-oblivious: what provisioning must budget for;
+    * ``"expected"`` — the participation-aware ``expected_degree``
+      (phase-averaged busiest-node degree x the probability both endpoints
+      of a link survive): what a realized-bits meter converges to;
+    * ``"realized"`` — the actual active links of round ``step`` under the
+      concrete participation ``mask``.
     """
     total = 0.0
     for leaf in jax.tree_util.tree_leaves(theta_template):
         d = int(np.prod(leaf.shape[1:]))
         total += compressor.bits_per_element(d) * d
-    return total * topology.max_degree
+    if mode == "max":
+        degree = topology.max_degree
+    elif mode == "expected":
+        degree = topology.expected_degree
+    elif mode == "realized":
+        if mask is None:
+            raise ValueError("mode='realized' needs the round's participation mask")
+        degree = topology.realized_degree(0 if step is None else step, mask)
+    else:
+        raise ValueError(f"unknown bits mode {mode!r}; choose max/expected/realized")
+    return total * degree

@@ -27,10 +27,14 @@ compositions, not new classes.
 
 All decentralized state is *stacked*: every pytree leaf carries a leading
 node axis of size m, which the production mesh shards over ``data`` (x
-``pod``) so the vmapped oracle is plain data parallelism and the consensus
-becomes collective-permutes (see ``repro/launch``).  Federated consensus
-(:class:`FedAvg`) instead keeps a single server model in the state and
-broadcasts it to the node axis at the start of each round.
+``pod``) so the vmapped oracle is plain data parallelism.  How the
+consensus maps to collectives is the exchange *backend*'s choice:
+``backend="rolled"`` (default) simulates the network on the stacked array
+and leaves the lowering to GSPMD, ``backend="ppermute"`` executes it
+mesh-native — shard_map + ``lax.ppermute`` moving exactly degree-many
+compressed messages between graph neighbors (``repro.core.exchange``).
+Federated consensus (:class:`FedAvg`) instead keeps a single server model
+in the state and broadcasts it to the node axis at the start of each round.
 
 Numerics are pinned to the pre-refactor monolithic trainers bit-for-bit on
 the single-step and microbatched paths (tests/test_trainer_parity.py); the
@@ -296,6 +300,13 @@ class ProjectedAscent(DualUpdate):
 
     The lambda gossip is uncompressed — m floats per neighbor, negligible
     next to the model payload but accounted in :meth:`bits_per_round`.
+
+    ``mix_fn`` overrides how the static lambda gossip travels: the factories
+    set it to the consensus's :meth:`ChocoConsensus.wire_mix` when the
+    ppermute backend is on, so the dual rides the same neighbor permutes as
+    the model instead of a stacked-array roll.  (Time-varying rounds receive
+    the dense W(t) from the trainer either way — lambda is [m, m], wire cost
+    negligible.)
     """
 
     prior: jax.Array
@@ -303,6 +314,7 @@ class ProjectedAscent(DualUpdate):
     eta_lambda: float
     regularizer: dro.Regularizer
     topology: Topology
+    mix_fn: Callable | None = None
 
     def init(self, m: int) -> jax.Array:
         return jnp.broadcast_to(self.prior[None], (m, m)).copy()
@@ -323,6 +335,8 @@ class ProjectedAscent(DualUpdate):
             lam_half = jnp.where((mask > 0).reshape((m, 1)), lam_half, lam)
         if mixing is not None:
             return mix_stacked_with(lam_half, mixing)
+        if self.mix_fn is not None:
+            return self.mix_fn(lam_half)
         return mix_stacked(lam_half, self.topology)
 
     def bits_per_round(self) -> float:
@@ -407,11 +421,18 @@ class Consensus:
     node dropout); the trainer then threads the round index, the
     participation ``mask`` and the round's dense ``mixing`` matrix into
     :meth:`mix`.  Static consensus implementations ignore them.
+
+    ``backend`` names the exchange implementation the consensus executes on:
+    ``"rolled"`` (the stacked-array simulation — rolls / dense matmuls over
+    the full node axis) or ``"ppermute"`` (the mesh-native SPMD substrate of
+    ``core/exchange.py`` — shard_map + lax.ppermute moving only degree-many
+    compressed messages between graph neighbors).
     """
 
     needs_key: bool = False
     federated: bool = False  # True -> state.theta has no node axis
     schedule: TopologySchedule | None = None
+    backend: str = "rolled"
 
     def init(self, theta_stacked):
         return ()
@@ -420,7 +441,11 @@ class Consensus:
             step=None, mask=None, mixing=None):
         raise NotImplementedError
 
-    def bits_per_round(self, theta_template) -> float:
+    def bits_per_round(self, theta_template, *, mode: str = "max",
+                       step=None, mask=None) -> float:
+        """Busiest-node bits per round.  ``mode``: "max" (upper bound,
+        default), "expected" (participation-aware phase average), or
+        "realized" (actual links of round ``step`` under ``mask``)."""
         raise NotImplementedError
 
 
@@ -454,12 +479,20 @@ class ChocoConsensus(Consensus):
 
     def __init__(self, topology: Topology | TopologySchedule, compressor: Compressor,
                  gamma: float | str | None = None, *, packed: bool = True,
-                 fused: bool = False):
+                 fused: bool = False, backend: str = "rolled", mesh=None,
+                 node_axes="data"):
+        if backend not in ("rolled", "ppermute"):
+            raise ValueError(f"unknown gossip backend {backend!r}; choose rolled or ppermute")
+        if backend == "ppermute" and mesh is None:
+            raise ValueError("backend='ppermute' requires a mesh (see launch.mesh.make_node_mesh)")
         self.topology, self.schedule, self._gamma_topology = _split_schedule(topology)
         self.compressor = compressor
         self.gamma_spec = gamma
         self.packed = packed
         self.fused = fused
+        self.backend = backend
+        self.mesh = mesh
+        self.node_axes = node_axes
         # provisional gamma until init()/mix() see the real leaf sizes
         self.gamma = self._resolve_gamma(4096)
 
@@ -516,6 +549,16 @@ class ChocoConsensus(Consensus):
 
     def mix(self, theta_half, state, key, ctx, *, step=None, mask=None, mixing=None):
         gamma = self._resolve_gamma(self._encode_dim(theta_half))
+        if self.backend == "ppermute":
+            # the SPMD substrate takes the schedule + round index + mask and
+            # compiles its own per-phase wire programs — a dense W(t) has no
+            # wire meaning there
+            return choco_round(
+                theta_half, state, self.topology, gamma, self.compressor, key,
+                packed=self.packed, fused=self.fused, mask=mask,
+                backend="ppermute", mesh=self.mesh, node_axes=self.node_axes,
+                schedule=self.schedule, step=step,
+            )
         if self.schedule is not None and mixing is None:
             # standalone use (no trainer threading): resolve W(t) here
             mixing = self.schedule.mixing_at(0 if step is None else step, mask)
@@ -524,9 +567,24 @@ class ChocoConsensus(Consensus):
             packed=self.packed, fused=self.fused, mixing=mixing, mask=mask,
         )
 
-    def bits_per_round(self, theta_template) -> float:
+    def wire_mix(self, tree):
+        """Uncompressed gossip of a stacked tree over this consensus's wire —
+        the dual/lambda gossip rides the same permutes as the model on the
+        ppermute backend (static topologies; time-varying duals get the dense
+        W(t) from the trainer)."""
+        if self.backend == "ppermute":
+            from repro.core.exchange import mix_stacked_ppermute
+
+            return mix_stacked_ppermute(
+                tree, self.topology, mesh=self.mesh, node_axes=self.node_axes
+            )
+        return mix_stacked(tree, self.topology)
+
+    def bits_per_round(self, theta_template, *, mode: str = "max",
+                       step=None, mask=None) -> float:
         return payload_bits(
-            self.compressor, theta_template, self.schedule or self.topology
+            self.compressor, theta_template, self.schedule or self.topology,
+            mode=mode, step=step, mask=mask,
         )
 
 
@@ -548,9 +606,11 @@ class ExactConsensus(Consensus):
             return mix_stacked_with(theta_half, mixing), state
         return mix_stacked(theta_half, self.topology), state
 
-    def bits_per_round(self, theta_template) -> float:
+    def bits_per_round(self, theta_template, *, mode: str = "max",
+                       step=None, mask=None) -> float:
         return payload_bits(
-            Identity(), theta_template, self.schedule or self.topology
+            Identity(), theta_template, self.schedule or self.topology,
+            mode=mode, step=step, mask=mask,
         )
 
 
@@ -582,8 +642,10 @@ class FedAvg(Consensus):
         )
         return theta_new, state
 
-    def bits_per_round(self, theta_template) -> float:
-        """Busiest node = the server: |U| models down + |U| models up, f32."""
+    def bits_per_round(self, theta_template, *, mode: str = "max",
+                       step=None, mask=None) -> float:
+        """Busiest node = the server: |U| models down + |U| models up, f32.
+        The sample count is fixed, so every mode bills the same."""
         d = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(theta_template))
         return 2.0 * self.num_sampled * d * 32.0
 
@@ -789,15 +851,29 @@ class DecentralizedTrainer:
             return jax.tree.map(lambda x: x.astype(jnp.float32), state.theta)
         return jax.tree.map(lambda x: x.astype(jnp.float32).mean(0), state.theta)
 
-    def bits_per_round(self, state: TrainerState, per_iteration: bool = False) -> float:
+    def bits_per_round(self, state: TrainerState, per_iteration: bool = False,
+                       *, mode: str = "max", step=None, mask=None) -> float:
         """Bits transmitted per communication round by the busiest node
         (model payload + dual traffic).
 
         One round covers ``local_steps`` gradient iterations;
         ``per_iteration=True`` divides by that, putting algorithms with
         different communication intervals (DRFA, AD-GDA-K) on equal footing.
+
+        ``mode`` controls the dropout accounting of the model payload:
+        ``"max"`` (default) bills the busiest-phase max degree — the upper
+        bound provisioning must budget for; ``"expected"`` bills the
+        participation-aware expected active degree (phase-averaged, times
+        the (1-rate)^2 link-survival probability); ``"realized"`` bills
+        round ``step``'s actual links under the concrete participation
+        ``mask`` (e.g. ``aux["participation"]``).  The dual's m-float
+        traffic stays at its upper bound in every mode — it is negligible
+        next to the model payload and not worth a mask-aware estimate.
         """
-        bits = self.consensus.bits_per_round(state.theta) + self.dual.bits_per_round()
+        bits = (
+            self.consensus.bits_per_round(state.theta, mode=mode, step=step, mask=mask)
+            + self.dual.bits_per_round()
+        )
         if per_iteration:
             bits /= self.local.local_steps
         return bits

@@ -203,13 +203,20 @@ def fused_mix_pallas(rolled_lvl, rolled_sign, s, wscale, bits: int, interpret: b
 
 # ------------------------------------------------------------- leaf round
 def fused_round_leaf(leaf, hat, s, key, shifts: Sequence[tuple[int, float]],
-                     gamma, bits: int, interpret: bool = True):
+                     gamma, bits: int, interpret: bool = True, *,
+                     roll_fn=None, node_keys=None):
     """One CHOCO round for a stacked leaf [m, ...] on the fused fast path.
 
     Matches ``gossip._round_leaf`` with a ``KernelQuantization(bits)``
     compressor bit-for-bit on the payload (same keys, noise, norms and
     floor/clip arithmetic); ``s_new`` agrees to f32 rounding (the weighted
     accumulation is reassociated inside the kernel).
+
+    ``roll_fn(x, shift)`` overrides how the packed payload travels the node
+    axis — the SPMD neighbor-exchange backend (core/exchange.py) substitutes
+    sharded boundary permutes while the kernels run unchanged on the local
+    node block; ``node_keys`` then carries that block's slice of the global
+    per-node key array (the default is the full ``split(key, m)``).
 
     Returns (theta_new, hat_new, s_new), all shaped like ``leaf``.
     """
@@ -236,7 +243,8 @@ def fused_round_leaf(leaf, hat, s, key, shifts: Sequence[tuple[int, float]],
             x = jnp.pad(x, ((0, 0), (0, pad)))
         return x.reshape(m, rows, LANES)
 
-    node_keys = jax.random.split(key, m)
+    if node_keys is None:
+        node_keys = jax.random.split(key, m)
     xi = jax.vmap(lambda k: jax.random.uniform(k, (rows, LANES)))(node_keys)
 
     scale_enc = (1 << bits) / jnp.maximum(norms, 1e-30)
@@ -251,7 +259,10 @@ def fused_round_leaf(leaf, hat, s, key, shifts: Sequence[tuple[int, float]],
     # lowers to collective-permute under a sharded node axis).  Shifts are
     # processed in batches of SHIFT_BATCH so a mesh (K = m shifts) never
     # materializes more than SHIFT_BATCH rolled payload copies at once.
-    roll0 = lambda x, sh: x if sh == 0 else jnp.roll(x, sh, axis=0)
+    if roll_fn is None:
+        roll0 = lambda x, sh: x if sh == 0 else jnp.roll(x, sh, axis=0)
+    else:
+        roll0 = lambda x, sh: x if sh == 0 else roll_fn(x, sh)
     # the accumulator stays f32 across batches (cast to the leaf dtype once
     # at the end), so multi-batch topologies match the oracle's
     # accumulate-everything-then-cast semantics for low-precision leaves too

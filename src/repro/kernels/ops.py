@@ -55,15 +55,22 @@ def dequantize(payload, shape, dtype, bits: int = 4, interpret: bool | None = No
 
 
 def fused_choco_round_leaf(leaf, hat, s, key, topology, gamma, bits: int,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None, *,
+                           roll_fn=None, node_keys=None):
     """One fused-kernel CHOCO round for a stacked leaf [m, ...] — see
-    kernels/choco_fused.py.  Returns (theta_new, hat_new, s_new)."""
+    kernels/choco_fused.py.  Returns (theta_new, hat_new, s_new).
+
+    ``topology`` is anything with a circulant ``.shifts`` decomposition (a
+    :class:`~repro.core.topology.Topology` or ``PermutePlan``); ``roll_fn``/
+    ``node_keys`` are the SPMD backend's injection points (the kernels then
+    operate on the device-local node block)."""
     from repro.kernels.choco_fused import fused_round_leaf
 
     if interpret is None:
         interpret = _interpret_default()
     return fused_round_leaf(leaf, hat, s, key, topology.shifts, gamma, bits,
-                            interpret=interpret)
+                            interpret=interpret, roll_fn=roll_fn,
+                            node_keys=node_keys)
 
 
 def block_topk(x: jax.Array, fraction: float = 0.25, block: int = 1024, interpret: bool | None = None):

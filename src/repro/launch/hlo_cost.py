@@ -23,7 +23,7 @@ import dataclasses
 import math
 import re
 
-__all__ = ["Cost", "analyze_hlo"]
+__all__ = ["Cost", "analyze_hlo", "analyze_compiled"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -74,6 +74,26 @@ class Cost:
     @property
     def coll_bytes(self) -> float:
         return sum(self.coll.values())
+
+    def wire_bytes(self, num_partitions: int) -> float:
+        """Estimated bytes actually *transmitted* per device.
+
+        ``coll`` holds operand sizes, which undercounts gather-style
+        collectives: a ring all-gather of a shard S on n devices relays
+        (n-1) shards through every link, a ring all-reduce moves
+        ~2 S (n-1)/n, etc.  collective-permute is the only kind whose
+        operand size IS its wire size — which is exactly why the ppermute
+        gossip backend is benchmarked on this number (bench_exchange).
+        """
+        n = max(int(num_partitions), 1)
+        c = self.coll
+        return (
+            c["collective-permute"]
+            + c["all-gather"] * (n - 1)
+            + c["reduce-scatter"] * (n - 1) / n
+            + c["all-reduce"] * 2.0 * (n - 1) / n
+            + c["all-to-all"] * (n - 1) / n
+        )
 
 
 def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
@@ -344,3 +364,9 @@ def analyze_hlo(text: str) -> Cost:
         return c
 
     return cost_of(entry) if entry else Cost()
+
+
+def analyze_compiled(compiled) -> Cost:
+    """Cost of a ``jax.jit(...).lower(...).compile()`` executable — parses
+    the optimized (post-GSPMD, per-partition) HLO text."""
+    return analyze_hlo(compiled.as_text())

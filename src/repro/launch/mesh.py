@@ -12,7 +12,13 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_cpu_mesh", "node_axes", "NODE_AXIS"]
+__all__ = [
+    "make_production_mesh",
+    "make_cpu_mesh",
+    "make_node_mesh",
+    "node_axes",
+    "NODE_AXIS",
+]
 
 NODE_AXIS = "nodes"  # logical name used in PartitionSpecs for the AD-GDA node dim
 
@@ -43,3 +49,18 @@ def num_nodes(mesh) -> int:
 def make_cpu_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU smoke/integration tests on the real local devices."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_node_mesh(num_nodes: int):
+    """Mesh whose ``data`` axis carries the gossip node shards — the target
+    of the ``ppermute`` exchange backend (core/exchange.py).
+
+    Uses the largest available device count that divides ``num_nodes`` so
+    every device hosts an equal contiguous node block (the backend's
+    requirement); on a single-device host this degenerates to a (1, 1) mesh
+    and the neighbor exchanges run as local rolls.  Force a multi-device CPU
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    avail = len(jax.devices())
+    data = max(k for k in range(1, min(avail, num_nodes) + 1) if num_nodes % k == 0)
+    return jax.make_mesh((data, 1), ("data", "model"), devices=jax.devices()[:data])

@@ -9,13 +9,14 @@ buffers, SSM/RG-LRU O(1) state).  CPU-scale by default (--reduced).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import restore
+from repro.checkpoint import latest_step, restore, step_path
 from repro.configs import get_config
 from repro.launch import steps as st
 from repro.models import transformer as T
@@ -29,7 +30,11 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=None)
-    ap.add_argument("--restore", default=None, help="npz checkpoint to load")
+    ap.add_argument("--restore", default=None,
+                    help="model checkpoint to load: an exact .npz file, the "
+                         "same path without the .npz suffix, or a step-tagged "
+                         "prefix (resolves to the latest <prefix>_<step>.npz, "
+                         "the spelling launch/train.py --checkpoint writes)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -46,7 +51,29 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     params = T.init_model(key, cfg)
     if args.restore:
-        params = restore(args.restore, params)
+        # accept the same path spellings checkpoint.latest_step does: an
+        # exact file, a missing-.npz suffix, or a step-tagged prefix
+        fname = args.restore
+        if not os.path.exists(fname):
+            if os.path.exists(fname + ".npz"):
+                fname += ".npz"
+            else:
+                found = latest_step(fname)
+                if found is None:
+                    raise SystemExit(
+                        f"--restore: no checkpoint at {args.restore!r} (tried the "
+                        "exact path, with a .npz suffix, and as a step-tagged prefix)"
+                    )
+                fname = step_path(fname, found)
+        try:
+            params = restore(fname, params)
+        except KeyError as e:
+            raise SystemExit(
+                f"--restore: {fname} does not hold a bare model parameter tree "
+                f"({e}); full trainer-state checkpoints from launch/train.py "
+                "serve via their companion '<prefix>_model.npz' consensus file"
+            ) from None
+        print(f"restored params from {fname}")
 
     batch = {"tokens": jax.random.randint(key, (args.batch, S), 0, cfg.vocab_size)}
     if cfg.is_encdec:

@@ -21,6 +21,7 @@ __all__ = [
     "batch_pspecs",
     "cache_pspecs",
     "trainer_state_pspecs",
+    "node_shardings",
     "adgda_state_pspecs",  # deprecated alias
     "shardings",
 ]
@@ -195,6 +196,28 @@ def trainer_state_pspecs(state: Any, params_spec: Any, mesh: Mesh, node_axes: tu
         ),  # no node axis
         rng=P(),
     )
+
+
+def node_shardings(tree: Any, mesh: Mesh, num_nodes: int,
+                   node_axes: tuple[str, ...] = ("data",)) -> Any:
+    """NamedSharding tree that *places the node shards*: every stacked
+    ``[num_nodes, ...]`` leaf gets its leading axis on ``node_axes``,
+    everything else (scalar step counters, rng keys) is replicated.
+
+    This is the input placement the ppermute gossip backend
+    (core/exchange.py) expects when compiling a trainer step or a bare
+    ``choco_round`` with explicit ``in_shardings`` (see
+    benchmarks/bench_exchange.py); without it GSPMD may replicate the node
+    axis and the neighbor exchanges degenerate to local copies.
+    """
+    node = NamedSharding(mesh, P(node_axes))
+    repl = NamedSharding(mesh, P())
+
+    def pick(leaf):
+        shp = getattr(leaf, "shape", ())
+        return node if len(shp) >= 1 and shp[0] == num_nodes else repl
+
+    return jax.tree.map(pick, tree)
 
 
 # deprecated alias (pre-refactor name)

@@ -41,6 +41,9 @@ def make_trainer(
     track_average: bool = False,
     packed_gossip: bool = True,
     fused_gossip: bool = False,
+    gossip_backend: str = "rolled",
+    mesh=None,
+    node_axes="data",
     robust: bool = True,
     microbatches: int = 1,
     grad_accum_dtype: str = "float32",
@@ -71,6 +74,7 @@ def make_trainer(
         track_average=track_average,
         packed_gossip=packed_gossip,
         fused_gossip=fused_gossip,
+        gossip_backend=gossip_backend,
         robust=robust,
         microbatches=microbatches,
         grad_accum_dtype=grad_accum_dtype,
@@ -84,7 +88,7 @@ def make_trainer(
         nesterov=nesterov,
         spmd_axis_name=spmd_axis_name,
     )
-    return adgda_trainer(adgda_cfg, loss_fn)
+    return adgda_trainer(adgda_cfg, loss_fn, mesh=mesh, node_axes=node_axes)
 
 
 def make_prefill_step(cfg: ModelConfig, cache_len: int):

@@ -35,6 +35,7 @@ from repro.checkpoint import latest_step, restore, save, step_path
 from repro.configs import get_config
 from repro.data import node_token_stream
 from repro.launch import steps as st
+from repro.launch.mesh import make_node_mesh
 from repro.models import transformer as T
 
 
@@ -73,6 +74,13 @@ def main() -> None:
                     help="K local optimizer steps between gossip rounds (needs K x batch)")
     ap.add_argument("--fused-gossip", action="store_true",
                     help="single-pass Pallas gossip (requires a kq* compressor)")
+    ap.add_argument("--gossip-backend", choices=("rolled", "ppermute"), default="rolled",
+                    help="wire model: 'rolled' simulates the network on the "
+                         "stacked array (reference oracle); 'ppermute' runs "
+                         "the gossip under shard_map, exchanging only packed "
+                         "compressed payloads between graph neighbors via "
+                         "collective-permute (multi-device: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N on CPU)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--checkpoint", default=None, help="path prefix for npz checkpoints")
     ap.add_argument("--checkpoint-every", type=int, default=100,
@@ -93,6 +101,14 @@ def main() -> None:
     if cfg.ssm_state:
         seq = max(seq, cfg.ssm_chunk)
         seq -= seq % cfg.ssm_chunk
+
+    mesh = None
+    if args.gossip_backend == "ppermute":
+        # place the node shards: the data axis carries contiguous node blocks
+        # and the SPMD gossip's collective-permutes run between its devices
+        mesh = make_node_mesh(args.nodes)
+        print(f"gossip backend=ppermute over mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"({args.nodes // mesh.devices.shape[0]} node(s)/device)")
 
     trainer = st.make_trainer(
         cfg,
@@ -115,6 +131,8 @@ def main() -> None:
         nesterov=args.nesterov,
         local_steps=args.local_steps,
         fused_gossip=args.fused_gossip,
+        gossip_backend=args.gossip_backend,
+        mesh=mesh,
         track_average=False,
     )
 

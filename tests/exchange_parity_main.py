@@ -1,0 +1,248 @@
+"""ppermute-vs-rolled parity grid — run as a SUBPROCESS on a forced
+multi-device CPU host (the device count must be set before jax initializes):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python tests/exchange_parity_main.py [--quick]
+
+Exercised grid (the ISSUE-4 acceptance bar):
+
+* static ring/torus (2 nodes per device) and erdos_renyi (1 node per device)
+  x {identity, q4b packed+unpacked, kq4b packed, top25};
+* the fused single-pass Pallas path (kq4b), jitted-vs-jitted;
+* a dropout-masked time-varying schedule (roundrobin ring+torus) and a
+  one-peer matching schedule;
+* full AD-GDA trainer steps on both backends (dual gossip riding the
+  permutes), plus an eager (disable_jit) bit-identity check.
+
+Parity levels: kernel-format payload paths (kq4b packed / fused) and eager
+execution must be BIT-IDENTICAL; jitted f32 paths whose oracle is a dense
+matmul (or whose mul-add chains XLA may contract to FMA differently across
+the two programs) must agree to ~1 ULP per round (atol/rtol 2e-6 over 3
+rounds).  Invoked by tests/test_exchange.py and the CI parity smoke job.
+"""
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ADGDAConfig, adgda_trainer, gossip, topology
+from repro.core.compression import Identity, RandomQuantization, TopK
+from repro.core.exchange import mix_stacked_ppermute
+from repro.kernels.ops import KernelQuantization
+from repro.launch.mesh import make_cpu_mesh
+
+CHECKS = []
+
+
+def check(name, a, b, *, exact):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    worst = 0.0
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.shape == y.shape and x.dtype == y.dtype, name
+        worst = max(worst, float(np.abs(x.astype(np.float64) - y.astype(np.float64)).max()))
+    level = "EXACT" if exact else "~ULP "
+    ok = worst == 0.0 if exact else worst < 2e-6
+    CHECKS.append((name, level, worst, ok))
+    print(f"{'PASS' if ok else 'FAIL'} [{level}] {name}: worst |diff| = {worst:.3e}")
+    assert ok, f"{name}: parity violated (worst {worst:.3e}, wanted {level})"
+
+
+def gossip_grid(mesh, quick):
+    m_big, d = 8, 300
+    theta8 = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (m_big, d)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (m_big, 7)),
+    }
+    theta4 = jax.tree.map(lambda x: x[:4], theta8)
+
+    def run(theta, topo, comp, nrounds=3, **kw):
+        state = gossip.choco_init(theta)
+        f = jax.jit(lambda t, s, k: gossip.choco_round(t, s, topo, 0.25, comp, k, **kw))
+        t, s = theta, state
+        for i in range(nrounds):
+            t, s = f(t, s, jax.random.PRNGKey(10 + i))
+        return t, s
+
+    combos = [
+        ("identity", Identity(), dict(), False),
+        ("q4b-unpacked", RandomQuantization(bits=4), dict(packed=False), False),
+        ("q4b-packed", RandomQuantization(bits=4), dict(packed=True), False),
+        ("kq4b-packed", KernelQuantization(bits=4), dict(packed=True), True),
+        ("top25", TopK(fraction=0.25), dict(), True),
+        ("kq4b-fused", KernelQuantization(bits=4), dict(fused=True), True),
+    ]
+    torus_combos = combos if not quick else [
+        c for c in combos if c[0] in ("identity", "kq4b-packed", "kq4b-fused")
+    ]
+    topos = [("ring8", topology.ring(8), combos),
+             ("torus8", topology.torus_2d(8), torus_combos)]
+    for tname, topo, cs in topos:
+        for cname, comp, kw, exact in cs:
+            a = run(theta8, topo, comp, **kw)
+            b = run(theta8, topo, comp, **kw, backend="ppermute", mesh=mesh)
+            check(f"static/{tname}/{cname}", a, b, exact=exact)
+
+    # irregular graph: one node per device
+    er = topology.erdos_renyi(4, 0.6, seed=1)
+    for cname, comp, kw, _ in combos[:4]:
+        a = run(theta4, er, comp, **kw)
+        b = run(theta4, er, comp, **kw, backend="ppermute", mesh=mesh)
+        check(f"static/er4/{cname}", a, b, exact=False)
+
+
+def time_varying(mesh, quick):
+    m, d = 8, 200
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(2), (m, d))}
+    state = gossip.choco_init(theta)
+    sched = topology.make_topology_schedule("roundrobin:ring,torus", m)
+    topo0 = sched.topology_at(0)
+    mask = jnp.array([1.0, 0.0, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0])
+
+    for cname, comp in [("identity", Identity()), ("q4b", RandomQuantization(bits=4))]:
+        def oracle():
+            t, s = theta, state
+            f = jax.jit(lambda t, s, k, mx: gossip.choco_round(
+                t, s, topo0, 0.25, comp, k, mixing=mx, mask=mask))
+            for i in range(3):
+                t, s = f(t, s, jax.random.PRNGKey(20 + i), sched.mixing_at(jnp.int32(i), mask))
+            return t, s
+
+        def spmd():
+            t, s = theta, state
+            f = jax.jit(lambda t, s, k, st: gossip.choco_round(
+                t, s, topo0, 0.25, comp, k, mask=mask,
+                backend="ppermute", mesh=mesh, schedule=sched, step=st))
+            for i in range(3):
+                t, s = f(t, s, jax.random.PRNGKey(20 + i), jnp.int32(i))
+            return t, s
+
+        check(f"masked-roundrobin/{cname}", oracle(), spmd(), exact=False)
+
+    # one-peer matchings (irregular phases, one node per device)
+    m4 = 4
+    theta4 = {"w": jax.random.normal(jax.random.PRNGKey(3), (m4, d))}
+    state4 = gossip.choco_init(theta4)
+    msched = topology.make_topology_schedule("matching:3", m4, seed=0)
+    mt0 = msched.topology_at(0)
+    comp = RandomQuantization(bits=4)
+
+    def oracle_m():
+        t, s = theta4, state4
+        f = jax.jit(lambda t, s, k, mx: gossip.choco_round(t, s, mt0, 0.25, comp, k, mixing=mx))
+        for i in range(4):
+            t, s = f(t, s, jax.random.PRNGKey(30 + i), msched.mixing_at(jnp.int32(i), None))
+        return t, s
+
+    def spmd_m():
+        t, s = theta4, state4
+        f = jax.jit(lambda t, s, k, st: gossip.choco_round(
+            t, s, mt0, 0.25, comp, k, backend="ppermute", mesh=mesh,
+            schedule=msched, step=st))
+        for i in range(4):
+            t, s = f(t, s, jax.random.PRNGKey(30 + i), jnp.int32(i))
+        return t, s
+
+    check("matching/q4b", oracle_m(), spmd_m(), exact=False)
+
+
+def trainer_parity(mesh, quick):
+    def loss_fn(params, batch, rng):
+        x, y = batch
+        logits = x @ params["w"] + params["b"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return (logz - gold).mean()
+
+    m, dim, C = 8, 20, 3
+    params = {"w": jnp.zeros((dim, C)), "b": jnp.zeros((C,))}
+    batch = (
+        jax.random.normal(jax.random.PRNGKey(0), (m, 16, dim)),
+        jax.random.randint(jax.random.PRNGKey(1), (m, 16), 0, C),
+    )
+
+    def run(extra, mesh_arg=None, steps=5):
+        base = dict(num_nodes=m, topology="ring", compressor="q4b", alpha=0.05,
+                    eta_theta=0.3, eta_lambda=0.2)
+        base.update(extra)
+        tr = adgda_trainer(ADGDAConfig(**base), loss_fn, mesh=mesh_arg)
+        st = tr.init(params, jax.random.PRNGKey(42))
+        for _ in range(steps):
+            st, aux = tr.step(st, batch)
+        return st
+
+    variants = [("adgda-ring", {}),
+                ("fused-kq4b", dict(compressor="kq4b", fused_gossip=True))]
+    if not quick:
+        variants.append(
+            ("rr+drop", dict(topology_schedule="roundrobin:ring,torus", dropout=0.25))
+        )
+    for name, kw in variants:
+        a = run(kw)
+        b = run(dict(kw, gossip_backend="ppermute"), mesh_arg=mesh)
+        check(f"trainer/{name}", a, b, exact=False)
+
+
+def eager_bit_identity(mesh):
+    """disable_jit: both backends execute op-by-op — bit-identical even for
+    the paths whose jitted programs differ by FMA contraction."""
+    m, d = 4, 48
+    topo = topology.ring(m)
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(5), (m, d))}
+    state = gossip.choco_init(theta)
+    comp = RandomQuantization(bits=4)
+    with jax.disable_jit():
+        a = gossip.choco_round(theta, state, topo, 0.25, comp, jax.random.PRNGKey(9))
+        b = gossip.choco_round(theta, state, topo, 0.25, comp, jax.random.PRNGKey(9),
+                               backend="ppermute", mesh=mesh)
+    check("eager/ring4/q4b", a, b, exact=True)
+
+
+def wire_mix_parity(mesh):
+    topo = topology.ring(8)
+    lam = jax.random.normal(jax.random.PRNGKey(6), (8, 8))
+    a = jax.jit(lambda x: gossip.mix_stacked(x, topo))(lam)
+    b = jax.jit(lambda x: mix_stacked_ppermute(x, topo, mesh=mesh))(lam)
+    # jit-vs-jit: XLA may FMA-contract the standalone global mul-add chain
+    # but not the permute-broken one -> ~1 ULP (eager is bit-exact)
+    check("wire-mix/ring8", a, b, exact=False)
+
+
+def uneven_ratio_rejected(mesh):
+    """Across real devices, irregular graphs need one node per device."""
+    er = topology.erdos_renyi(8, 0.5, seed=0)  # block = 2 on 4 devices
+    theta = {"w": jnp.zeros((8, 16))}
+    state = gossip.choco_init(theta)
+    try:
+        gossip.choco_round(theta, state, er, 0.3, Identity(),
+                           jax.random.PRNGKey(0), backend="ppermute", mesh=mesh)
+    except ValueError as e:
+        assert "one node per device" in str(e)
+        print("PASS [ERROR] uneven-ratio irregular graph rejected")
+        return
+    raise AssertionError("block=2 irregular graph was not rejected")
+
+
+def main():
+    quick = "--quick" in sys.argv
+    ndev = len(jax.devices())
+    assert ndev >= 4, (
+        f"need >= 4 devices, found {ndev}: run with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4"
+    )
+    mesh = make_cpu_mesh(data=4)
+    uneven_ratio_rejected(mesh)
+    gossip_grid(mesh, quick)
+    time_varying(mesh, quick)
+    trainer_parity(mesh, quick)
+    wire_mix_parity(mesh)
+    eager_bit_identity(mesh)
+    exact = sum(1 for _, lv, _, _ in CHECKS if lv == "EXACT")
+    print(f"\nALL {len(CHECKS)} PARITY CHECKS PASSED ({exact} bit-exact)")
+
+
+if __name__ == "__main__":
+    main()

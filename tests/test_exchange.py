@@ -1,0 +1,167 @@
+"""SPMD neighbor-exchange backend (core/exchange.py).
+
+Two layers of coverage:
+
+* in-process tests on the default single-device mesh — the backend's code
+  path is identical (shard_map with a trivial node axis; shifts degenerate
+  to local rolls), so parity, dispatch and error contracts are exercised in
+  the tier-1 suite without touching the global jax device count;
+* the real multi-device parity grid lives in
+  ``tests/exchange_parity_main.py`` and must run in a SUBPROCESS because
+  ``--xla_force_host_platform_device_count`` is locked in at jax init —
+  ``test_multi_device_parity_grid`` spawns it on 4 forced host devices.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip, topology
+from repro.core.compression import Identity, RandomQuantization
+from repro.core.exchange import mix_stacked_ppermute, node_mesh_info
+from repro.core.trainer import ChocoConsensus
+from repro.kernels.ops import KernelQuantization
+from repro.launch.mesh import make_cpu_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mesh1():
+    return make_cpu_mesh(1, 1)
+
+
+def _worst(a, b):
+    return max(
+        float(np.abs(np.asarray(x, np.float64) - np.asarray(y, np.float64)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+@pytest.mark.parametrize(
+    "comp,exact",
+    [
+        (Identity(), False),
+        (RandomQuantization(bits=4), False),
+        (KernelQuantization(bits=4), True),
+    ],
+    ids=["identity", "q4b", "kq4b"],
+)
+def test_single_device_parity(comp, exact):
+    """Same backend code path on a (1, 1) mesh — tier-1-cheap parity."""
+    mesh = _mesh1()
+    topo = topology.ring(4)
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 96))}
+    state = gossip.choco_init(theta)
+    k = jax.random.PRNGKey(7)
+    a = jax.jit(lambda t, s: gossip.choco_round(t, s, topo, 0.3, comp, k))(theta, state)
+    b = jax.jit(
+        lambda t, s: gossip.choco_round(
+            t, s, topo, 0.3, comp, k, backend="ppermute", mesh=mesh
+        )
+    )(theta, state)
+    worst = _worst(a, b)
+    assert worst == 0.0 if exact else worst < 2e-6
+
+
+def test_single_device_masked_schedule_parity():
+    mesh = _mesh1()
+    sched = topology.make_topology_schedule("roundrobin:ring,torus", 8)
+    topo0 = sched.topology_at(0)
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(1), (8, 64))}
+    state = gossip.choco_init(theta)
+    mask = jnp.array([1, 1, 0, 1, 1, 1, 0, 1], jnp.float32)
+    comp = RandomQuantization(bits=4)
+    k = jax.random.PRNGKey(3)
+    step = jnp.int32(1)
+    a = gossip.choco_round(
+        theta, state, topo0, 0.25, comp, k,
+        mixing=sched.mixing_at(step, mask), mask=mask,
+    )
+    b = gossip.choco_round(
+        theta, state, topo0, 0.25, comp, k, mask=mask,
+        backend="ppermute", mesh=mesh, schedule=sched, step=step,
+    )
+    assert _worst(a, b) < 2e-6
+
+
+def test_wire_mix_matches_mix_stacked():
+    mesh = _mesh1()
+    topo = topology.ring(6)
+    lam = jax.random.normal(jax.random.PRNGKey(2), (6, 6))
+    a = gossip.mix_stacked(lam, topo)
+    b = mix_stacked_ppermute(lam, topo, mesh=mesh)
+    assert _worst(a, b) == 0.0
+
+
+def test_backend_dispatch_contracts():
+    topo = topology.ring(4)
+    theta = {"w": jnp.zeros((4, 8))}
+    state = gossip.choco_init(theta)
+    k = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="requires a mesh"):
+        gossip.choco_round(theta, state, topo, 0.3, Identity(), k, backend="ppermute")
+    with pytest.raises(ValueError, match="unknown gossip backend"):
+        gossip.choco_round(theta, state, topo, 0.3, Identity(), k, backend="nope")
+    with pytest.raises(ValueError, match="schedule/step/mask"):
+        gossip.choco_round(
+            theta, state, topo, 0.3, Identity(), k,
+            mixing=jnp.eye(4), backend="ppermute", mesh=_mesh1(),
+        )
+    with pytest.raises(ValueError, match="requires a mesh"):
+        ChocoConsensus(topo, Identity(), backend="ppermute")
+    with pytest.raises(ValueError, match="unknown gossip backend"):
+        ChocoConsensus(topo, Identity(), backend="nope")
+
+
+def test_node_mesh_info_divisibility():
+    mesh = _mesh1()
+    axes, ndev, block = node_mesh_info(mesh, "data", 6)
+    assert axes == ("data",) and ndev == 1 and block == 6
+    with pytest.raises(ValueError, match="no axes"):
+        node_mesh_info(mesh, ("pod",), 4)
+
+
+def test_irregular_single_device_parity():
+    """A single-device mesh has no wire: irregular graphs run their EdgeStep
+    permutes locally (the uneven-ratio rejection only applies across real
+    devices — that error is exercised in exchange_parity_main.py)."""
+    mesh = _mesh1()
+    er = topology.erdos_renyi(4, 0.6, seed=0)
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(4), (4, 64))}
+    state = gossip.choco_init(theta)
+    k = jax.random.PRNGKey(0)
+    a = gossip.choco_round(theta, state, er, 0.3, RandomQuantization(bits=4), k)
+    b = gossip.choco_round(
+        theta, state, er, 0.3, RandomQuantization(bits=4), k,
+        backend="ppermute", mesh=mesh,
+    )
+    assert _worst(a, b) < 2e-6
+
+
+@pytest.mark.parametrize("quick", [True], ids=["quick"])
+def test_multi_device_parity_grid(quick):
+    """The acceptance grid on 4 forced host devices (subprocess: the device
+    count is locked at jax init).  ~2-4 min of shard_map compiles."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(REPO, "src"), env.get("PYTHONPATH")] if p
+    )
+    cmd = [sys.executable, os.path.join(REPO, "tests", "exchange_parity_main.py")]
+    if quick:
+        cmd.append("--quick")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        pytest.fail(
+            f"parity grid failed (rc={proc.returncode}):\n"
+            f"{proc.stdout[-4000:]}\n{proc.stderr[-4000:]}"
+        )
+    assert "ALL" in proc.stdout and "PARITY CHECKS PASSED" in proc.stdout

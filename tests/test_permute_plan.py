@@ -1,0 +1,137 @@
+"""Permute-schedule compiler round-trips (core/topology.py).
+
+Every topology family and every ``TopologySchedule`` phase must round-trip
+adjacency -> permute schedule -> reconstructed mixing matrix EXACTLY
+(element-level weight copies / the factories' own circulant accumulation),
+and the dropout rescale computed the SPMD-local way (participation bits and
+degrees travelling the plan's own exchanges) must reproduce
+``masked_metropolis`` on the surviving subgraph.
+"""
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+FAMILY_CASES = [
+    ("ring", 3), ("ring", 8), ("ring", 2),
+    ("torus", 5), ("torus", 8), ("torus", 16),
+    ("mesh", 1), ("mesh", 2), ("mesh", 6),
+    ("star", 5), ("star", 9),
+    ("erdos_renyi", 6), ("erdos_renyi", 9),
+]
+
+
+def _plan_cases():
+    for name, m in FAMILY_CASES:
+        yield name, m, T.make_topology(name, m)
+
+
+@pytest.mark.parametrize("name,m,topo", list(_plan_cases()),
+                         ids=[f"{n}{m}" for n, m, _ in _plan_cases()])
+def test_factory_round_trip_exact(name, m, topo):
+    """adjacency -> permute plan -> mixing matrix, bit-exact."""
+    plan = T.compile_permute_plan(topo)
+    np.testing.assert_array_equal(plan.mixing_matrix(), topo.mixing)
+    # the op list covers the off-diagonal adjacency exactly once
+    cover = np.zeros((m, m))
+    for snd in plan.sender_maps():
+        for i, j in enumerate(snd):
+            if j >= 0:
+                assert cover[i, j] == 0, "edge delivered twice"
+                cover[i, j] = 1
+    np.testing.assert_array_equal(cover, topo.adjacency - np.eye(m))
+
+
+@pytest.mark.parametrize("name,m,topo", list(_plan_cases()),
+                         ids=[f"{n}{m}" for n, m, _ in _plan_cases()])
+def test_edge_steps_are_valid_permutes_in_sender_order(name, m, topo):
+    plan = T.compile_permute_plan(topo)
+    if plan.is_circulant:
+        assert plan.steps == () and plan.shifts == topo.shifts
+        return
+    received: dict[int, list[int]] = {i: [] for i in range(m)}
+    for step in plan.steps:
+        srcs = [s for s, _ in step.perm]
+        dsts = [d for _, d in step.perm]
+        assert len(set(srcs)) == len(srcs), "ppermute needs distinct sources"
+        assert len(set(dsts)) == len(dsts), "ppermute needs distinct destinations"
+        for s, d in step.perm:
+            assert step.weights[d] == topo.mixing[d, s]
+            received[d].append(s)
+    for i, senders in received.items():
+        assert senders == sorted(senders), (
+            "greedy scheduler must deliver each receiver's senders in "
+            "ascending id order (deterministic accumulation order)"
+        )
+
+
+@pytest.mark.parametrize(
+    "spec,m",
+    [("roundrobin:ring,torus", 8), ("matching:5", 8), ("matching:4", 7),
+     ("erdos_renyi", 6), ("roundrobin:ring,mesh,star", 6)],
+)
+def test_schedule_phases_round_trip_exact(spec, m):
+    sched = T.make_topology_schedule(spec, m, seed=3)
+    plans = T.compile_schedule_plans(sched)
+    assert len(plans) == sched.period
+    for plan, topo in zip(plans, sched.topologies):
+        np.testing.assert_array_equal(plan.mixing_matrix(), topo.mixing)
+
+
+@pytest.mark.parametrize("name,m", [("ring", 8), ("torus", 9), ("mesh", 5),
+                                    ("star", 6), ("erdos_renyi", 8)])
+def test_dropout_rescale_round_trip(name, m):
+    """Masked-Metropolis weights computed from permuted participation bits
+    (the SPMD-local form) == the dense masked_metropolis rescale."""
+    topo = T.make_topology(name, m)
+    plan = T.compile_permute_plan(topo)
+    rng = np.random.default_rng(0)
+    masks = [np.ones(m), np.zeros(m)]
+    masks += [(rng.random(m) > 0.4).astype(np.float64) for _ in range(4)]
+    for mask in masks:
+        ref = np.asarray(T.masked_metropolis(topo.adjacency, mask))
+        got = plan.masked_mixing_matrix(mask)
+        np.testing.assert_allclose(got, ref, atol=2e-7, rtol=1e-6)
+        # doubly stochastic for every mask
+        np.testing.assert_allclose(got.sum(axis=0), 1.0, atol=1e-5)
+        np.testing.assert_allclose(got.sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_schedule_phase_dropout_rescale():
+    sched = T.make_topology_schedule("matching:4", 6, dropout=0.3, seed=1)
+    plans = T.compile_schedule_plans(sched)
+    rng = np.random.default_rng(2)
+    for plan, topo in zip(plans, sched.topologies):
+        mask = (rng.random(6) > 0.3).astype(np.float64)
+        ref = np.asarray(T.masked_metropolis(topo.adjacency, mask))
+        np.testing.assert_allclose(plan.masked_mixing_matrix(mask), ref,
+                                   atol=2e-7, rtol=1e-6)
+
+
+def test_exchange_ops_align_with_sender_maps():
+    for _, _, topo in _plan_cases():
+        plan = T.compile_permute_plan(topo)
+        ops, maps = plan.exchange_ops(), plan.sender_maps()
+        assert len(ops) == len(maps)
+        m = plan.num_nodes
+        for (kind, arg), snd in zip(ops, maps):
+            if kind == "shift":
+                np.testing.assert_array_equal(snd, (np.arange(m) - arg) % m)
+            else:
+                expect = np.full(m, -1)
+                for s, d in arg:
+                    expect[d] = s
+                np.testing.assert_array_equal(snd, expect)
+
+
+def test_expected_and_realized_degree():
+    sched = T.make_topology_schedule("roundrobin:ring,torus", 16, dropout=0.3)
+    assert sched.max_degree == 4
+    assert sched.expected_degree == pytest.approx(3.0 * 0.49)
+    mask = np.ones(16)
+    mask[:4] = 0
+    assert sched.realized_degree(0, mask) == 2.0  # ring phase
+    assert sched.realized_degree(1, mask) == 4.0  # torus phase
+    topo = T.ring(8)
+    assert topo.expected_degree == topo.max_degree == 2
+    assert topo.realized_degree(0, np.zeros(8)) == 0.0
