@@ -152,7 +152,207 @@ def _child(quick: bool) -> list[dict]:
             f"not strictly below rolled {ro.wire_bytes(M):.0f} at m={M}"
         )
 
+    rows += _masked_round_rows(mesh, d, quick)
+    rows += _baseline_rows(mesh, d if quick else 1 << 14)
     rows += _train_step_rows(mesh, d if quick else 1 << 14)
+    return rows
+
+
+def _masked_round_rows(mesh, d: int, quick: bool) -> list[dict]:
+    """Time-varying rounds on the hat-delta wire: masked/scheduled ppermute
+    rounds must move compressed-payload bytes per union edge — NOT the f32
+    ``theta_hat`` public copies the pre-NeighborCache implementation shipped
+    (32 bits/element vs ~5 for kq4b: an ~6x regression if it ever comes
+    back).  Per-edge bytes are asserted <= 1.1x the static compressed
+    payload (the ISSUE-5 acceptance bar)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gossip
+    from repro.core.compression import make_compressor
+    from repro.core.topology import compile_schedule_plans, make_topology_schedule
+    from repro.core.wire import compile_union_wire
+    from repro.launch.hlo_cost import analyze_compiled
+    from repro.launch.sharding import node_shardings
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    repl = NamedSharding(mesh, P())
+    scenarios = [
+        ("masked-ring", "ring", 0.2, "kq4b"),
+        ("sched-rr", "roundrobin:ring,torus", 0.0, "kq4b"),
+        ("masked-rr", "roundrobin:ring,torus", 0.2, "kq4b"),
+    ]
+    if not quick:
+        scenarios += [("masked-matching", "matching:4", 0.2, "kq4b"),
+                      ("masked-ring-q4b", "ring", 0.2, "q4b")]
+
+    rows = []
+    for sname, spec, dropout, cspec in scenarios:
+        sched = make_topology_schedule(spec, M, dropout=dropout)
+        union = compile_union_wire(compile_schedule_plans(sched))
+        comp = make_compressor(cspec)
+        theta = {"w": jax.random.normal(jax.random.PRNGKey(0), (M, d))}
+        state = gossip.choco_init(theta, cache_ops=union.n_ops)
+        key = jax.random.PRNGKey(1)
+        topo0 = sched.topology_at(0)
+        masked = dropout > 0.0
+        stree = lambda t: node_shardings(t, mesh, M)
+
+        def fn(t, s, k, step, mask=None):
+            return gossip.choco_round(
+                t, s, topo0, 0.2, comp, k, mask=mask, backend="ppermute",
+                mesh=mesh, schedule=sched, step=step,
+            )
+
+        args = [theta, state, key, jnp.int32(1)]
+        shards = [stree(theta), stree(state), repl, repl]
+        if masked:
+            args.append(jnp.ones((M,), jnp.float32))
+            shards.append(stree(args[-1]))
+        compiled = (
+            jax.jit(fn, in_shardings=tuple(shards))
+            .lower(*args)
+            .compile()
+        )
+        cost = analyze_compiled(compiled)
+        cp = cost.coll["collective-permute"]
+        edges = union.max_out_degree
+        payload = _payload_bytes(cspec, d)
+        # alive + degree participation floats ride each union exchange when
+        # masked (two [block]-float messages per op — noise vs the payload)
+        overhead = 8.0 * union.n_ops if masked else 0.0
+        expect = edges * payload + overhead
+        rows.append({
+            "table": "X",
+            "scenario": f"choco_round_{sname}",
+            "topology": spec,
+            "compressor": cspec,
+            "backend": "ppermute",
+            "d": d,
+            "coll_permute_bytes": cp,
+            "all_gather_bytes": cost.coll["all-gather"],
+            "coll_operand_bytes": cost.coll_bytes,
+            "wire_bytes": cost.wire_bytes(M),
+            "expected_wire_bytes": expect,
+            "per_edge_bytes": cp / edges,
+            "per_edge_payload_bytes": payload,
+        })
+        assert cost.coll["all-gather"] == 0.0, (
+            f"{sname}: masked/scheduled ppermute round emitted all-gather "
+            f"bytes ({cost.coll['all-gather']:.0f})"
+        )
+        assert 0.9 * expect <= cp <= 1.6 * expect, (
+            f"{sname}: collective-permute bytes {cp:.0f} not ~ union-degree x "
+            f"compressed payload ({expect:.0f}) — f32 hat exchange regression?"
+        )
+        assert cp / edges <= 1.1 * payload, (
+            f"{sname}: per-edge bytes {cp / edges:.0f} exceed 1.1x the static "
+            f"compressed payload ({payload:.0f})"
+        )
+    return rows
+
+
+def _baseline_rows(mesh, d: int) -> list[dict]:
+    """Wire-honest baselines: the full DR-DSGD (ExactConsensus) and DRFA
+    (FedAvg) train steps compile under backend='ppermute' with zero
+    all-gather — DR-DSGD moves dense f32 models between ring neighbors via
+    collective-permute (that IS its algorithmic wire), DRFA aggregates with
+    one psum (ring all-reduce) and no permutes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.baselines import (
+        DRDSGDConfig, DRFAConfig, drdsgd_trainer, drfa_trainer,
+    )
+    from repro.launch.hlo_cost import analyze_compiled
+    from repro.launch.sharding import node_shardings
+
+    def loss_fn(params, batch, rng):
+        return (batch @ params["w"]).mean()
+
+    params = {"w": jnp.zeros((d,))}
+    rows = []
+
+    # ---- DR-DSGD: exact (dense f32) neighbor gossip over the ring --------
+    for backend in ("rolled", "ppermute"):
+        cfg = DRDSGDConfig(num_nodes=M, topology="ring", eta_theta=0.1,
+                           gossip_backend=backend, track_average=False)
+        trainer = drdsgd_trainer(
+            cfg, loss_fn, mesh=mesh if backend == "ppermute" else None
+        )
+        batch = jax.random.normal(jax.random.PRNGKey(2), (M, 4, d))
+        state = jax.eval_shape(trainer.init, params, jax.random.PRNGKey(0))
+        spec = node_shardings(state, mesh, M)
+        compiled = (
+            jax.jit(trainer.step_impl,
+                    in_shardings=(spec, node_shardings(batch, mesh, M)))
+            .lower(state, jax.ShapeDtypeStruct(batch.shape, batch.dtype))
+            .compile()
+        )
+        cost = analyze_compiled(compiled)
+        expect = 2 * 4.0 * d  # degree x dense f32 model
+        rows.append({
+            "table": "X", "scenario": "drdsgd_step", "topology": "ring",
+            "compressor": "identity", "backend": backend, "d": d,
+            "coll_permute_bytes": cost.coll["collective-permute"],
+            "all_gather_bytes": cost.coll["all-gather"],
+            "coll_operand_bytes": cost.coll_bytes,
+            "wire_bytes": cost.wire_bytes(M),
+            "expected_wire_bytes": expect,
+        })
+        if backend == "ppermute":
+            cp = cost.coll["collective-permute"]
+            assert cost.coll["all-gather"] == 0.0, (
+                f"drdsgd ppermute step emitted all-gather bytes "
+                f"({cost.coll['all-gather']:.0f})"
+            )
+            assert 0.9 * expect <= cp <= 1.3 * expect, (
+                f"drdsgd ppermute collective-permute bytes {cp:.0f} not ~ "
+                f"degree x f32 model ({expect:.0f})"
+            )
+
+    # ---- DRFA: server averaging as one psum ------------------------------
+    K = 2
+    for backend in ("rolled", "ppermute"):
+        cfg = DRFAConfig(num_nodes=M, local_steps=K, eta_theta=0.1,
+                         gossip_backend=backend, track_average=False)
+        trainer = drfa_trainer(
+            cfg, loss_fn, mesh=mesh if backend == "ppermute" else None
+        )
+        batch = jax.random.normal(jax.random.PRNGKey(3), (M, K, 4, d))
+        state = jax.eval_shape(trainer.init, params, jax.random.PRNGKey(0))
+        spec = node_shardings(state, mesh, M)
+        compiled = (
+            jax.jit(trainer.step_impl,
+                    in_shardings=(spec, node_shardings(batch, mesh, M)))
+            .lower(state, jax.ShapeDtypeStruct(batch.shape, batch.dtype))
+            .compile()
+        )
+        cost = analyze_compiled(compiled)
+        expect = 4.0 * d  # one model-sized all-reduce operand
+        rows.append({
+            "table": "X", "scenario": "drfa_step", "topology": "star",
+            "compressor": "identity", "backend": backend, "d": d,
+            "coll_permute_bytes": cost.coll["collective-permute"],
+            "all_gather_bytes": cost.coll["all-gather"],
+            "coll_operand_bytes": cost.coll_bytes,
+            "wire_bytes": cost.wire_bytes(M),
+            "expected_wire_bytes": expect,
+        })
+        if backend == "ppermute":
+            ar = cost.coll["all-reduce"]
+            # the dual ascent combines the node-sharded [m] loss vector with
+            # the replicated lambda — GSPMD gathers those m floats.  That is
+            # dual traffic (already billed: DRFA's lambda exchange), not a
+            # model-wire leak; anything above one m-float vector fails.
+            assert cost.coll["all-gather"] <= 4.0 * M, (
+                f"drfa ppermute step emitted model-scale all-gather bytes "
+                f"({cost.coll['all-gather']:.0f})"
+            )
+            assert 0.9 * expect <= ar <= 1.3 * expect, (
+                f"drfa ppermute all-reduce bytes {ar:.0f} not ~ one f32 "
+                f"model ({expect:.0f})"
+            )
     return rows
 
 

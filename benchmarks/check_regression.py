@@ -46,6 +46,39 @@ GATES = {
     "X": [("wire_bytes", "lower", None)],
 }
 
+# baseline-free invariants checked on every FRESH suite-X run (they also
+# self-assert inside the bench, but re-asserting here keeps the gate honest
+# even if someone relaxes the bench): masked/scheduled ppermute rounds must
+# stay at compressed-payload scale per edge — an f32 theta_hat exchange
+# regression is ~6x for kq4b and fails instantly.
+MASKED_EDGE_RATIO = 1.1
+
+
+def _invariant_failures(suite: str, fresh: dict) -> list:
+    if suite != "X":
+        return []
+    failures = []
+    for key, row in fresh.items():
+        scen = dict(key).get("scenario", "")
+        if row.get("backend") != "ppermute":
+            continue
+        if not (scen.startswith("choco_round_masked")
+                or scen.startswith("choco_round_sched")):
+            continue
+        per_edge = float(row["per_edge_bytes"])
+        payload = float(row["per_edge_payload_bytes"])
+        ok = per_edge <= MASKED_EDGE_RATIO * payload
+        print(f"{'ok' if ok else 'REGRESSION':10s} {scen}: per-edge "
+              f"{per_edge:.0f} B vs {MASKED_EDGE_RATIO:g}x payload "
+              f"{payload:.0f} B")
+        if not ok:
+            failures.append((key, "per_edge_bytes", payload, per_edge))
+        ag = float(row.get("all_gather_bytes", 0.0))
+        if ag > 0.0:
+            print(f"REGRESSION {scen}: all-gather bytes {ag:.0f} (wire leak)")
+            failures.append((key, "all_gather_bytes", 0.0, ag))
+    return failures
+
 
 def _key(row: dict) -> tuple:
     return tuple(
@@ -114,6 +147,7 @@ def check(suite: str, threshold: float, retries: int = 1) -> int:
     fresh = {_key(r): r for r in SUITES[suite].run(quick=True)}
 
     failures = _evaluate(suite, baseline, fresh, threshold, verbose=True)
+    failures += _invariant_failures(suite, fresh)
     attempt = 0
     while failures and attempt < retries:
         attempt += 1
@@ -123,6 +157,7 @@ def check(suite: str, threshold: float, retries: int = 1) -> int:
             suite, fresh, {_key(r): r for r in SUITES[suite].run(quick=True)}
         )
         failures = _evaluate(suite, baseline, fresh, threshold, verbose=True)
+        failures += _invariant_failures(suite, fresh)
 
     gone = [k for k in baseline if k not in fresh]
     for k in gone:

@@ -67,10 +67,14 @@ def train_trainer(trainer, init_params, data: HeterogeneousDataset, steps: int,
     gen = data.batches(batch, seed=seed)
     curve = []
     bits = float(trainer.bits_per_round(state))
+    bits_realized = None  # device-side accumulator of the jitted meter
     t0 = time.time()
     for t in range(steps):
         xb, yb = next(gen)
         state, aux = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
+        if "bits_realized" in aux:
+            br = aux["bits_realized"]
+            bits_realized = br if bits_realized is None else bits_realized + br
         if track_worst_loss and (t % max(steps // 50, 1) == 0):
             curve.append((t, float(aux["worst_loss"]), (t + 1) * bits))
     info = {
@@ -80,6 +84,11 @@ def train_trainer(trainer, init_params, data: HeterogeneousDataset, steps: int,
         "curve": curve,
         "state": state,
     }
+    if bits_realized is not None:
+        # measured traffic from the in-graph realized-bits meter — one host
+        # sync at the end, not per round
+        info["bits_realized_total"] = float(bits_realized)
+        info["bits_per_round_realized"] = float(bits_realized) / steps
     return trainer.network_mean(state), info
 
 

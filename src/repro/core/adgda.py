@@ -187,10 +187,12 @@ def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None, *,
         backend=config.gossip_backend, mesh=mesh, node_axes=node_axes,
     )
     # the dual's own gossip: a static schedule unwraps to its phase topology
-    # (plain mix_stacked fast path); a time-varying one is kept whole — the
-    # trainer threads the per-round dense W(t) into dual.update so the lambda
-    # gossip travels the same wire as the model.  On the ppermute backend the
-    # static lambda gossip rides the consensus's neighbor permutes.
+    # (plain mix_stacked fast path).  On the rolled backend a time-varying
+    # schedule is kept whole and the trainer threads the per-round dense
+    # W(t) into dual.update; on the ppermute backend the lambda gossip rides
+    # the consensus's wire_mix instead — static topologies reuse the model's
+    # neighbor permutes, time-varying rounds select their weights from the
+    # union wire's per-phase banks (no dense matrix anywhere).
     dual_topology = (
         topology.topology_at(0)
         if isinstance(topology, TopologySchedule) and topology.is_static

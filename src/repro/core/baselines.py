@@ -79,9 +79,14 @@ class DRDSGDConfig:
     eta_theta: float = 0.1
     lr_decay: float = 1.0
     momentum: float = 0.0
+    gossip_backend: str = "rolled"  # "rolled" | "ppermute" (wire-honest
+    # neighbor exchange of the dense f32 models — DR-DSGD's actual wire;
+    # requires the factory's mesh kwarg)
+    track_average: bool = True
 
 
-def drdsgd_trainer(config: DRDSGDConfig, loss_fn: LossFn, prior=None) -> DecentralizedTrainer:
+def drdsgd_trainer(config: DRDSGDConfig, loss_fn: LossFn, prior=None, *,
+                   mesh=None, node_axes="data") -> DecentralizedTrainer:
     """Compose DR-DSGD: closed-form KL dual × exact (uncompressed) gossip."""
     m = config.num_nodes
     topology = make_topology(config.topology, config.num_nodes)
@@ -92,8 +97,12 @@ def drdsgd_trainer(config: DRDSGDConfig, loss_fn: LossFn, prior=None) -> Decentr
         num_nodes=m,
         local=LocalUpdate(optimizer=sgd(sched, momentum=config.momentum), schedule=sched),
         dual=KLClosedForm(prior=prior, alpha=config.alpha),
-        consensus=ExactConsensus(topology),
+        consensus=ExactConsensus(
+            topology, backend=config.gossip_backend, mesh=mesh,
+            node_axes=node_axes,
+        ),
         prior=prior,
+        track_average=config.track_average,
         config=config,
     )
 
@@ -121,9 +130,14 @@ class DRFAConfig:
     eta_lambda: float = 0.1
     lr_decay: float = 1.0
     momentum: float = 0.0
+    gossip_backend: str = "rolled"  # "rolled" | "ppermute" (mesh-native
+    # server aggregation: per-device partial sums + one psum, zero
+    # all-gather; requires the factory's mesh kwarg)
+    track_average: bool = True
 
 
-def drfa_trainer(config: DRFAConfig, loss_fn: LossFn, prior=None) -> DecentralizedTrainer:
+def drfa_trainer(config: DRFAConfig, loss_fn: LossFn, prior=None, *,
+                 mesh=None, node_axes="data") -> DecentralizedTrainer:
     """Compose DRFA: K-local-step oracle × sampled dual ascent × server averaging.
 
     ``batch`` is stacked [m, K, ...]: K local micro-batches per client.  All
@@ -156,8 +170,12 @@ def drfa_trainer(config: DRFAConfig, loss_fn: LossFn, prior=None) -> Decentraliz
             local_steps=config.local_steps,
             num_sampled=num_sampled,
         ),
-        consensus=FedAvg(num_sampled),
+        consensus=FedAvg(
+            num_sampled, backend=config.gossip_backend, mesh=mesh,
+            node_axes=node_axes,
+        ),
         prior=prior,
+        track_average=config.track_average,
         config=config,
     )
 

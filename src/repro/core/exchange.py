@@ -17,11 +17,19 @@ payloads travel between actual graph neighbors* via ``jax.lax.ppermute``:
   :class:`~repro.core.topology.EdgeStep` barriers — per-edge partial
   permutations (one node per device required; see ROADMAP open items for the
   uneven-ratio generalization);
-* time-varying schedules select their phase's wire program with
-  ``lax.switch`` on the traced round index, and dropout-masked rounds
-  compute the masked-Metropolis weights *locally from permuted participation
-  bits* (alive bits travel the plan's own exchanges, then degrees do) — no
-  ``[m, m]`` matrix is ever materialized on the wire path.
+* time-varying schedules share ONE wire program — the
+  :class:`~repro.core.wire.UnionWirePlan` union of all phases' exchange ops
+  — whose per-phase mixing weights are gathered from banks by ``t % P``
+  (one ``dynamic_index`` per round; the old per-mix-site ``lax.switch`` over
+  whole phase programs is gone), and dropout-masked rounds compute the
+  masked-Metropolis weights *locally from permuted participation bits*
+  (alive bits travel the union's own exchanges, then degrees do) — no
+  ``[m, m]`` matrix is ever materialized on the wire path;
+* time-varying rounds run the memory-full CHOCO averaging against a
+  **NeighborCache** — per-op mirrors of each in-neighbor's ``theta_hat``
+  kept exact by the compressed hat-deltas that ride every union edge every
+  round — so masked/scheduled rounds put only compressed payload bytes on
+  the wire (the pre-refactor form shipped the f32 public copies).
 
 Numerics: the static circulant paths (unpacked, packed, fused-Pallas)
 replicate the rolled oracle's accumulation order operation-for-operation and
@@ -31,9 +39,6 @@ and agree to f32 rounding (~1 ULP per round) — tests/test_exchange.py pins
 both levels.
 """
 from __future__ import annotations
-
-import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +58,7 @@ from repro.core.topology import (
 __all__ = [
     "choco_round_ppermute",
     "mix_stacked_ppermute",
+    "server_average_ppermute",
     "node_mesh_info",
 ]
 
@@ -201,58 +207,69 @@ def _mix_payload_local(compressor, payload, shape, dtype, plan: PermutePlan,
     return out
 
 
-# ------------------------------------------------------- masked / per-phase
-def _masked_weights(plan: PermutePlan, alive, axes, ndev, block):
-    """Masked-Metropolis weights computed locally from permuted participation
-    bits (the distributed form of ``topology.masked_metropolis``): alive bits
-    travel the plan's exchanges, per-node degrees are summed on-device, then
-    degrees travel the same exchanges to form w_ij = a_i a_j / (1 + max(deg_i,
-    deg_j)).  Returns (self_w [block], per-op weight vectors)."""
-    ops = plan.exchange_ops()
+# --------------------------------------------------- time-varying wire layer
+# The union wire (repro.core.wire): every phase of a schedule shares ONE
+# program — the deduplicated union of all phases' exchange ops — and the
+# round's mixing weights come from per-phase banks gathered by t % P.  This
+# replaces the old per-mix-site ``lax.switch`` over whole phase programs
+# (ROADMAP phase-switch item: weights are now resolved ONCE per round, before
+# the per-leaf loop) and enables the NeighborCache: because the compressed
+# hat-delta travels every union edge every round, each device holds an exact
+# mirror of every in-neighbor's theta_hat and the memory-full averaging step
+# sum_j w_ij(t) theta_hat_j needs NOTHING on the wire — the f32 public-copy
+# exchange the old masked round shipped is gone.
+
+
+def _slice_bank(bank, phase, idx, block):
+    """Per-phase bank [P, ..., m] -> phase row, local [..., block] slice."""
+    row = bank[0] if bank.shape[0] == 1 else jax.lax.dynamic_index_in_dim(
+        bank, phase, 0, keepdims=False
+    )
+    return jax.lax.dynamic_slice_in_dim(row, idx * block, block, axis=row.ndim - 1)
+
+
+def _union_round_weights(union, phase, alive, masked: bool, axes, ndev, block, idx):
+    """This round's wire weights, resolved once per round.
+
+    Returns ``(self_w [block], ws list-of-[block], alive_nb list-or-None)``.
+    Unmasked rounds read the static phase banks; masked rounds recompute
+    masked-Metropolis weights locally from permuted participation bits (the
+    distributed form of ``topology.masked_metropolis``, restricted to the
+    phase's edges by the ``active`` bank): alive bits travel the union's own
+    exchanges, per-node surviving degrees are summed on-device, then degrees
+    travel the same exchanges to form w_ij = a_i a_j / (1 + max(deg_i,
+    deg_j)).  ``alive_nb`` (each sender's participation bit, per op) is also
+    what gates the receiver-side NeighborCache update.
+    """
+    ops = union.ops
+    if not masked:
+        wb = _slice_bank(jnp.asarray(union.w_bank, jnp.float32), phase, idx, block)
+        self_w = _slice_bank(jnp.asarray(union.self_bank, jnp.float32), phase, idx, block)
+        return self_w, [wb[k] for k in range(len(ops))], None
+    act = _slice_bank(jnp.asarray(union.active, jnp.float32), phase, idx, block)
     alive_nb = [_recv(alive, op, axes, ndev, block) for op in ops]
     deg = jnp.zeros_like(alive)
-    for nb in alive_nb:
-        deg = deg + alive * nb
+    for k, nb in enumerate(alive_nb):
+        deg = deg + act[k] * alive * nb
     deg_nb = [_recv(deg, op, axes, ndev, block) for op in ops]
     ws = [
-        alive * nb / (1.0 + jnp.maximum(deg, dnb))
-        for nb, dnb in zip(alive_nb, deg_nb)
+        act[k] * alive * nb / (1.0 + jnp.maximum(deg, dnb))
+        for k, (nb, dnb) in enumerate(zip(alive_nb, deg_nb))
     ]
     self_w = jnp.ones_like(alive)
     for w in ws:
         self_w = self_w - w
-    return self_w, ws
+    return self_w, ws, alive_nb
 
 
-def _phase_mix(x, alive, plan: PermutePlan, masked: bool, axes, ndev, block, idx):
-    """One phase's ``sum_j w_ij(t) x_j`` in f32: static phase weights when
-    unmasked, locally recomputed masked-Metropolis weights otherwise."""
+def _weighted_mix(x, self_w, ws, ops, axes, ndev, block):
+    """``sum_j w_ij(t) x_j`` in f32 with pre-resolved per-op weights — the
+    dense-format union mix (exact consensus, lambda gossip)."""
     xf = x.astype(jnp.float32)
-    if not masked:
-        return _mix_local(xf, plan, axes, ndev, block, idx)
-    self_w, ws = _masked_weights(plan, alive, axes, ndev, block)
     out = _bcast(self_w, x.ndim) * xf
-    for op, w in zip(plan.exchange_ops(), ws):
+    for op, w in zip(ops, ws):
         out = out + _bcast(w, x.ndim) * _recv(xf, op, axes, ndev, block)
     return out
-
-
-def _make_mix_t(plans, phase, alive, masked: bool, axes, ndev, block, idx):
-    """mix(x) = sum_j w_ij(t) x_j for the (traced) round phase."""
-    if len(plans) == 1:
-        return lambda x: _phase_mix(x, alive, plans[0], masked, axes, ndev, block, idx)
-
-    def mix(x):
-        branches = [
-            functools.partial(
-                _phase_mix, plan=p, masked=masked, axes=axes, ndev=ndev,
-                block=block, idx=idx,
-            )
-            for p in plans
-        ]
-        return jax.lax.switch(phase, branches, x, alive)
-
-    return mix
 
 
 # ------------------------------------------------------------- leaf rounds
@@ -302,26 +319,61 @@ def _fused_round_local(leaf, hat, s, key, plan, gamma, compressor,
     )
 
 
-def _round_leaf_masked_local(leaf, hat, s, key, mix_t, gamma,
-                             compressor: Compressor, alive, idx, block, m_global):
+def _round_leaf_cached(leaf, hat, s, key, caches, union, weights, gamma,
+                       compressor: Compressor, alive, masked: bool,
+                       use_payload: bool, axes, ndev, block, idx, m_global):
     """Time-varying / fault-tolerant round on the local block — the
-    memory-full CHOCO form of ``gossip._round_leaf_masked`` with the two
-    dense ``W(t)`` products replaced by neighbor exchanges (``mix_t``)."""
+    memory-full CHOCO form of ``gossip._round_leaf_masked`` executed against
+    the NeighborCache: the averaging step ``sum_j w_ij(t) theta_hat_j`` reads
+    each in-neighbor's hat from its local mirror (``caches``, one per union
+    op) instead of shipping f32 public copies, and the only model-sized wire
+    traffic is the compressed hat-delta payload — which each receiver both
+    mixes into ``s`` and applies to its mirror with the *same arithmetic the
+    sender applies to its own hat*, keeping every mirror bit-identical to the
+    sender's ``theta_hat`` (the invariant tests/test_wire_cache.py pins).
+
+    Dropped senders contribute a zero delta (their residual is masked before
+    encode) and the alive bit riding each exchange gates the mirror update,
+    so a mirror of a dead neighbor freezes exactly like the neighbor's own
+    hat does.
+    """
+    self_w, ws, alive_nb = weights
     inner_shape, dtype = leaf.shape[1:], leaf.dtype
+    hat32 = hat.astype(jnp.float32)
     ab = _bcast(alive, leaf.ndim)
-    s_cur = mix_t(hat.astype(jnp.float32))
-    theta_new = leaf + (ab * gamma).astype(dtype) * (s_cur - hat.astype(jnp.float32)).astype(dtype)
+    # averaging from cached neighbor hats — nothing on the wire
+    s_cur = _bcast(self_w, leaf.ndim) * hat32
+    for w, c in zip(ws, caches):
+        s_cur = s_cur + _bcast(w, leaf.ndim) * c.astype(jnp.float32)
+    theta_new = leaf + (ab * gamma).astype(dtype) * (s_cur - hat32).astype(dtype)
     resid = ((theta_new - hat).astype(jnp.float32)) * ab
+    payload = None
     if isinstance(compressor, Identity):
         q_self = resid
     else:
         node_keys = _local_slice(jax.random.split(key, m_global), idx, block)
         payload = jax.vmap(compressor.encode)(resid, node_keys)
         q_self = _vdecode(compressor, payload, inner_shape, jnp.float32) * ab
-    hat_new = (hat.astype(jnp.float32) + q_self).astype(hat.dtype)
-    s_post = s_cur + mix_t(q_self)
+    hat_new = (hat32 + q_self).astype(hat.dtype)
+    # the wire: one compressed hat-delta per union op (decode commutes with
+    # the permute, so decode-after-receive == receive-after-decode bitwise)
+    mix_q = _bcast(self_w, leaf.ndim) * q_self
+    new_caches = []
+    for k, op in enumerate(union.ops):
+        if use_payload and payload is not None:
+            recv_p = jax.tree.map(
+                lambda t: _recv(t, op, axes, ndev, block), payload
+            )
+            q_r = _vdecode(compressor, recv_p, inner_shape, jnp.float32)
+        else:
+            q_r = _recv(q_self, op, axes, ndev, block)
+        if masked:
+            q_r = q_r * _bcast(alive_nb[k], leaf.ndim)
+        new_caches.append((caches[k].astype(jnp.float32) + q_r).astype(caches[k].dtype))
+        mix_q = mix_q + _bcast(ws[k], leaf.ndim) * q_r
+    s_post = s_cur + mix_q
     s_new = (ab * s_post + (1.0 - ab) * s.astype(jnp.float32)).astype(s.dtype)
-    return theta_new, hat_new, s_new
+    return theta_new, hat_new, s_new, tuple(new_caches)
 
 
 # ------------------------------------------------------------------- rounds
@@ -341,21 +393,30 @@ def choco_round_ppermute(
     schedule: TopologySchedule | None = None,
     step=None,
     mask=None,
+    union=None,
 ):
     """One compressed-consensus round on the SPMD neighbor-exchange backend.
 
     Drop-in for ``gossip.choco_round`` (reached via its ``backend="ppermute"``
     dispatch): same state threading, same RNG stream, same scan-plan leaf
     chunking — but executed under ``shard_map`` over ``mesh``'s
-    ``node_axes``, with only packed compressed payloads (static rounds) or
-    public-copy/neighbor-q exchanges (time-varying rounds) on the wire.
+    ``node_axes``, with only compressed payloads on the wire: the static
+    packed/fused formats, or (time-varying rounds) the hat-delta format
+    applied against the NeighborCache.
 
     ``schedule`` + ``step`` + ``mask`` replace the rolled backend's dense
-    ``mixing`` argument: phases are compiled to per-phase
-    :class:`~repro.core.topology.PermutePlan` wire programs selected by
-    ``lax.switch``, and a participation mask triggers the locally-computed
-    masked-Metropolis weights.
+    ``mixing`` argument: all phases compile into ONE
+    :class:`~repro.core.wire.UnionWirePlan` wire program whose per-phase
+    mixing weights are gathered by ``step % P`` (no ``lax.switch``), and a
+    participation mask triggers the locally-computed masked-Metropolis
+    weights.  Time-varying rounds require the state's NeighborCache (one
+    ``theta_hat`` mirror per union op, allocated by
+    ``gossip.choco_init(theta, cache_ops=...)`` /
+    ``trainer.ChocoConsensus.init``): the averaging step reads the cached
+    mirrors and only the compressed hat-delta payload travels the wire.
     """
+    from repro.core.wire import compile_union_wire
+
     leaves, treedef = jax.tree_util.tree_flatten(theta_half)
     m = leaves[0].shape[0]
     axes, ndev, block = node_mesh_info(mesh, node_axes, m)
@@ -365,17 +426,31 @@ def choco_round_ppermute(
         schedule is not None and not getattr(schedule, "is_static", True)
     ) or mask is not None
     if time_varying:
-        if schedule is not None:
-            plans = compile_schedule_plans(schedule)
-        else:
-            plans = (compile_permute_plan(topology),)
-        _check_block(plans, block, ndev)
-        period = len(plans)
-        use_packed = use_fused = False
+        if union is None:
+            # standalone use; the consensus layer passes its precompiled
+            # plan (the same one that sized the state's cache) instead
+            if schedule is not None:
+                plans = compile_schedule_plans(schedule)
+            else:
+                plans = (compile_permute_plan(topology),)
+            union = compile_union_wire(plans)
+        _check_block(any(k == "perm" for k, _ in union.ops), block, ndev)
+        period = union.period
+        use_packed = packed and not isinstance(compressor, Identity)
+        use_fused = False
         plan = None
+        if len(state.cache) != union.n_ops:
+            raise ValueError(
+                "time-varying ppermute rounds keep a NeighborCache (one "
+                f"theta_hat mirror per union wire op; need {union.n_ops}, "
+                f"state has {len(state.cache)}) — initialize the state with "
+                "gossip.choco_init(theta, cache_ops=n) or let "
+                "trainer.ChocoConsensus.init size it from the schedule"
+            )
     else:
         plan = compile_permute_plan(topology)
-        _check_block((plan,), block, ndev)
+        _check_block(not plan.is_circulant, block, ndev)
+        union = None
         use_packed = packed and not isinstance(compressor, Identity)
         use_fused = (
             fused
@@ -414,15 +489,26 @@ def choco_round_ppermute(
             phase = (
                 jnp.zeros((), jnp.int32) if period == 1 else step_arg % period
             )
-            mix_t = _make_mix_t(plans, phase, alive_local, masked, axes, ndev, block, idx)
+            # the round's mixing weights, resolved ONCE — not per leaf, not
+            # per mix site, and with no lax.switch over phase programs
+            weights = _union_round_weights(
+                union, phase, alive_local, masked, axes, ndev, block, idx
+            )
+            cache_lv = [td.flatten_up_to(c) for c in st.cache]
+            extra = [
+                tuple(cache_lv[k][i] for k in range(union.n_ops))
+                for i in range(len(lv))
+            ]
 
-            def round_one(leaf, hat, s, k):
-                return _round_leaf_masked_local(
-                    leaf, hat, s, k, mix_t, gamma, compressor, alive_local,
-                    idx, block, m,
+            def round_one(leaf, hat, s, k, caches):
+                return _round_leaf_cached(
+                    leaf, hat, s, k, caches, union, weights, gamma,
+                    compressor, alive_local, masked, use_packed,
+                    axes, ndev, block, idx, m,
                 )
 
         else:
+            extra = None
 
             def round_one(leaf, hat, s, k):
                 return _round_leaf_local(
@@ -432,11 +518,20 @@ def choco_round_ppermute(
 
         # the chunk layout and per-chunk key stream come from the SAME driver
         # as the rolled backend — bit-parity of the two is structural
-        new_theta, new_hat, new_s = _round_leaves(
-            lv, hv, sv, keys, round_one, block_scan_elems
+        new_theta, new_hat, new_s, new_extra = _round_leaves(
+            lv, hv, sv, keys, round_one, block_scan_elems, extra_leaves=extra
         )
         unf = lambda ls: jax.tree_util.tree_unflatten(td, ls)
-        return unf(new_theta), CHOCOState(theta_hat=unf(new_hat), s=unf(new_s))
+        if time_varying:
+            cache_new = tuple(
+                unf([new_extra[i][k] for i in range(len(lv))])
+                for k in range(union.n_ops)
+            )
+        else:
+            cache_new = st.cache
+        return unf(new_theta), CHOCOState(
+            theta_hat=unf(new_hat), s=unf(new_s), cache=cache_new
+        )
 
     fn = shard_map(
         body, mesh, in_specs=tuple(specs), out_specs=(P(axes), P(axes)),
@@ -445,31 +540,118 @@ def choco_round_ppermute(
     return fn(*args)
 
 
-def mix_stacked_ppermute(tree, topology: Topology, *, mesh, node_axes="data"):
-    """Uncompressed gossip mix of a stacked pytree over the neighbor-exchange
-    wire — the SPMD counterpart of ``gossip.mix_stacked`` (the dual/lambda
-    gossip rides exactly these permutes when the ppermute backend is on)."""
+def mix_stacked_ppermute(tree, topology: Topology, *, mesh, node_axes="data",
+                         schedule: TopologySchedule | None = None,
+                         step=None, mask=None, union=None):
+    """Uncompressed (dense-format) gossip mix of a stacked pytree over the
+    neighbor-exchange wire — the SPMD counterpart of ``gossip.mix_stacked``
+    / ``mix_stacked_with``.  The dual/lambda gossip and
+    :class:`~repro.core.trainer.ExactConsensus` ride exactly these permutes
+    when the ppermute backend is on; ``schedule``/``step``/``mask`` select
+    the round's weights from the union wire's per-phase banks (dense [m, m]
+    matrices never exist on this path — dropped nodes degenerate to the
+    identity row locally, exactly like ``masked_metropolis``)."""
     leaves = jax.tree_util.tree_leaves(tree)
     m = leaves[0].shape[0]
     axes, ndev, block = node_mesh_info(mesh, node_axes, m)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    plan = compile_permute_plan(topology)
-    _check_block((plan,), block, ndev)
 
-    def body(t):
+    time_varying = (
+        schedule is not None and not getattr(schedule, "is_static", True)
+    ) or mask is not None
+    if not time_varying:
+        plan = compile_permute_plan(topology)
+        _check_block(not plan.is_circulant, block, ndev)
+
+        def body(t):
+            idx = _flat_axis_index(axes, sizes)
+            return jax.tree.map(
+                lambda x: _mix_local(x, plan, axes, ndev, block, idx), t
+            )
+
+        return shard_map(body, mesh, in_specs=P(axes), out_specs=P(axes), check_rep=False)(tree)
+
+    from repro.core.wire import compile_union_wire
+
+    if union is None:
+        if schedule is not None:
+            plans = compile_schedule_plans(schedule)
+        else:
+            plans = (compile_permute_plan(topology),)
+        union = compile_union_wire(plans)
+    _check_block(any(k == "perm" for k, _ in union.ops), block, ndev)
+    masked = mask is not None
+
+    args = [tree]
+    specs = [P(axes)]
+    if masked:
+        args.append(mask)
+        specs.append(P(axes))
+    step_arr = jnp.zeros((), jnp.int32) if step is None else jnp.asarray(step, jnp.int32)
+    args.append(step_arr)
+    specs.append(P())
+
+    def body_tv(t, *rest):
+        rest = list(rest)
+        alive = rest.pop(0) if masked else None
+        step_arg = rest.pop(0)
         idx = _flat_axis_index(axes, sizes)
+        alive_local = (
+            jnp.ones((block,), jnp.float32) if alive is None
+            else alive.astype(jnp.float32)
+        )
+        phase = (
+            jnp.zeros((), jnp.int32) if union.period == 1
+            else step_arg % union.period
+        )
+        self_w, ws, _ = _union_round_weights(
+            union, phase, alive_local, masked, axes, ndev, block, idx
+        )
         return jax.tree.map(
-            lambda x: _mix_local(x, plan, axes, ndev, block, idx), t
+            lambda x: _weighted_mix(
+                x, self_w, ws, union.ops, axes, ndev, block
+            ).astype(x.dtype),
+            t,
         )
 
-    return shard_map(body, mesh, in_specs=P(axes), out_specs=P(axes), check_rep=False)(tree)
+    return shard_map(
+        body_tv, mesh, in_specs=tuple(specs), out_specs=P(axes), check_rep=False
+    )(*args)
 
 
-def _check_block(plans: Sequence[PermutePlan], block: int, ndev: int) -> None:
-    """Irregular (non-circulant) graphs need one node per device: an EdgeStep
-    is a *device* permutation.  A single-device mesh is exempt — there is no
-    wire, and ``_recv`` executes the node permutation locally."""
-    if ndev > 1 and block > 1 and any(not p.is_circulant for p in plans):
+def server_average_ppermute(tree, sampled, *, mesh, node_axes="data"):
+    """Weighted server average of a stacked pytree — the mesh-native wire of
+    :class:`~repro.core.trainer.FedAvg`.  Each device reduces its local node
+    block, then one ``psum`` over the node axes aggregates and re-broadcasts:
+    the ring all-reduce realization of "|U| models up, one model down", with
+    zero all-gather traffic (the rolled form's ``sum(0)`` of the stacked
+    array lets GSPMD all-gather the whole model stack instead).  Output is
+    replicated (no node axis)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    axes, ndev, block = node_mesh_info(mesh, node_axes, m)
+
+    def body(t, sm):
+        sm = sm.astype(jnp.float32)
+        wsum = jax.lax.psum(sm.sum(), axes)
+
+        def avg(x):
+            part = (x.astype(jnp.float32) * _bcast(sm, x.ndim)).sum(0)
+            return (jax.lax.psum(part, axes) / wsum).astype(x.dtype)
+
+        return jax.tree.map(avg, t)
+
+    return shard_map(
+        body, mesh, in_specs=(P(axes), P(axes)), out_specs=P(), check_rep=False
+    )(tree, sampled)
+
+
+def _check_block(irregular: bool, block: int, ndev: int) -> None:
+    """Irregular (non-circulant) wire programs need one node per device: a
+    perm/EdgeStep exchange is a *device* permutation.  A single-device mesh
+    is exempt — there is no wire, and ``_recv`` executes the node
+    permutation locally."""
+    if ndev > 1 and block > 1 and irregular:
         raise ValueError(
             "the ppermute backend runs irregular (non-circulant) graphs with "
             "exactly one node per device; got a block of "

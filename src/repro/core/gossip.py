@@ -26,7 +26,7 @@ decodes first (identical numerics, used as a cross-check oracle).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -42,17 +42,32 @@ __all__ = [
     "mix_stacked",
     "mix_stacked_with",
     "payload_bits",
+    "payload_total_bits",
 ]
 
 
 class CHOCOState(NamedTuple):
     theta_hat: object  # pytree, leaves [m, ...]
     s: object  # pytree, leaves [m, ...]
+    # NeighborCache (time-varying ppermute wire only): tuple over union wire
+    # ops of theta_hat-shaped mirrors of each in-neighbor's public copy —
+    # see repro.core.wire.  () for every other configuration.
+    cache: Any = ()
 
 
-def choco_init(theta_stacked) -> CHOCOState:
+def choco_init(theta_stacked, *, cache_ops: int = 0) -> CHOCOState:
+    """Fresh CHOCO trackers.  ``cache_ops > 0`` additionally allocates the
+    NeighborCache for a time-varying ppermute wire (one ``theta_hat`` mirror
+    per union exchange op — ``ChocoConsensus.init`` sizes this from its
+    compiled :class:`~repro.core.wire.UnionWirePlan`)."""
+    from repro.core.wire import init_neighbor_cache
+
     zeros = jax.tree.map(jnp.zeros_like, theta_stacked)
-    return CHOCOState(theta_hat=zeros, s=jax.tree.map(jnp.zeros_like, theta_stacked))
+    return CHOCOState(
+        theta_hat=zeros,
+        s=jax.tree.map(jnp.zeros_like, theta_stacked),
+        cache=init_neighbor_cache(theta_stacked, cache_ops) if cache_ops else (),
+    )
 
 
 def _mix_leaf(x: jax.Array, topology: Topology) -> jax.Array:
@@ -246,6 +261,7 @@ def choco_round(
     node_axes="data",
     schedule=None,
     step=None,
+    union=None,
 ):
     """One compressed-consensus round over all leaves of a stacked pytree.
 
@@ -292,11 +308,11 @@ def choco_round(
             theta_half, state, topology, gamma, compressor, key,
             mesh=mesh, node_axes=node_axes, packed=packed, fused=fused,
             block_scan_elems=block_scan_elems, schedule=schedule, step=step,
-            mask=mask,
+            mask=mask, union=union,
         )
     if backend != "rolled":
         raise ValueError(f"unknown gossip backend {backend!r}; choose rolled or ppermute")
-    if schedule is not None or step is not None:
+    if schedule is not None or step is not None or union is not None:
         raise ValueError(
             "backend='rolled' does not consume schedule/step — resolve the "
             "round's dense matrix yourself and pass mixing="
@@ -326,24 +342,38 @@ def choco_round(
         return _round_leaf(leaf, hat, s, k, topology, gamma, compressor,
                            use_packed, use_fused)
 
-    new_theta, new_hat, new_s = _round_leaves(
+    new_theta, new_hat, new_s, _ = _round_leaves(
         leaves, hat_leaves, s_leaves, keys, round_one, block_scan_elems
     )
     unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
-    return unf(new_theta), CHOCOState(theta_hat=unf(new_hat), s=unf(new_s))
+    # the rolled backend never consumes the NeighborCache (its time-varying
+    # oracle re-mixes the full hats); pass it through so state shapes are
+    # stable across backends
+    return unf(new_theta), CHOCOState(
+        theta_hat=unf(new_hat), s=unf(new_s), cache=state.cache
+    )
 
 
 def _round_leaves(leaves, hat_leaves, s_leaves, keys, round_one,
-                  block_scan_elems: int):
+                  block_scan_elems: int, extra_leaves=None):
     """Apply ``round_one(leaf, hat, s, key)`` to every stacked leaf, scanning
     large leaves in _scan_plan chunks.  Shared by the rolled backend above
     and the SPMD backend (core/exchange.py): the chunk layout and the
     per-chunk key stream are part of the bit-parity contract between them —
     ``_scan_plan`` reads only the inner dims, which a device-local shard
     shares with the global leaf.
+
+    ``extra_leaves`` (SPMD cached wire only): per-leaf tuples of extra
+    leaf-shaped arrays (the NeighborCache mirrors) chunked alongside; the
+    callback then has the signature ``round_one(leaf, hat, s, key, extras)
+    -> (theta, hat, s, extras)``.  Returns ``(theta, hat, s, extras)`` leaf
+    lists, with ``extras`` ``None`` when no extra leaves were passed.
     """
+    has_extra = extra_leaves is not None
     new_theta, new_hat, new_s = [], [], []
-    for leaf, hat, s, k in zip(leaves, hat_leaves, s_leaves, keys):
+    new_extra = [] if has_extra else None
+    for i, (leaf, hat, s, k) in enumerate(zip(leaves, hat_leaves, s_leaves, keys)):
+        extras = extra_leaves[i] if has_extra else ()
         inner_elems = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
         plan = _scan_plan(leaf.shape, inner_elems, block_scan_elems)
         if plan is not None:
@@ -357,38 +387,64 @@ def _round_leaves(leaves, hat_leaves, s_leaves, keys, round_one,
             else:  # split the last axis: [..., L] -> [..., chunks, L/chunks]
                 reshape = lambda x: x.reshape(x.shape[:-1] + (chunks, rows))
             lc, hc, sc = reshape(leaf), reshape(hat), reshape(s)
+            ec = tuple(reshape(e) for e in extras)
             bk = jax.random.split(k, chunks)
 
-            def body(_, xs, lc=lc, hc=hc, sc=sc, axis=axis):
+            def body(_, xs, lc=lc, hc=hc, sc=sc, ec=ec, axis=axis):
                 i, kb = xs
                 take = lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=axis, keepdims=False)
-                return None, round_one(take(lc), take(hc), take(sc), kb)
+                if has_extra:
+                    out = round_one(take(lc), take(hc), take(sc), kb,
+                                    tuple(take(e) for e in ec))
+                else:
+                    out = round_one(take(lc), take(hc), take(sc), kb)
+                return None, out
 
-            _, (tn, hn, sn) = jax.lax.scan(body, None, (jnp.arange(chunks), bk))
+            _, ys = jax.lax.scan(body, None, (jnp.arange(chunks), bk))
 
             def unshape(x, axis=axis, shape=leaf.shape):
                 # ys: [chunks, <leaf dims without the chunk axis position>]
                 x = jnp.moveaxis(x, 0, axis)
                 return x.reshape(shape)
 
-            theta_new, hat_new, s_new = unshape(tn), unshape(hn), unshape(sn)
+            out = jax.tree.map(unshape, ys)
         else:
-            theta_new, hat_new, s_new = round_one(leaf, hat, s, k)
+            out = round_one(leaf, hat, s, k, extras) if has_extra else round_one(leaf, hat, s, k)
+        if has_extra:
+            theta_new, hat_new, s_new, ex_new = out
+            new_extra.append(ex_new)
+        else:
+            theta_new, hat_new, s_new = out
         new_theta.append(theta_new)
         new_hat.append(hat_new)
         new_s.append(s_new)
-    return new_theta, new_hat, new_s
+    return new_theta, new_hat, new_s, new_extra
 
 
-def payload_bits(compressor: Compressor, theta_template, topology, *,
-                 mode: str = "max", step: int | None = None, mask=None) -> float:
-    """Bits transmitted per round by the busiest node (degree x payload).
+def payload_total_bits(compressor: Compressor, theta_template) -> float:
+    """Per-neighbor payload bits of one full model message.
 
     ``theta_template`` leaves are *stacked* [m, ...]: the per-node payload of
     a leaf is its inner size prod(shape[1:]).  A 1-D stacked leaf [m] is one
     scalar per node (d = 1), not m elements — billing shape[0] there inflated
-    every scalar leaf's bit count by m x.  ``topology`` is anything with a
-    ``max_degree`` (a :class:`Topology` or a ``TopologySchedule``).
+    every scalar leaf's bit count by m x.
+    """
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(theta_template):
+        d = int(np.prod(leaf.shape[1:]))
+        total += compressor.bits_per_element(d) * d
+    return total
+
+
+def payload_bits(compressor: Compressor, theta_template, topology, *,
+                 mode: str = "max", step: int | None = None, mask=None,
+                 degree: float | None = None) -> float:
+    """Bits transmitted per round by the busiest node (degree x payload).
+
+    ``topology`` is anything with a ``max_degree`` (a :class:`Topology` or a
+    ``TopologySchedule``); an explicit ``degree`` overrides the topology's
+    (the cached union wire bills its own out-degree — see
+    :class:`repro.core.wire.UnionWirePlan`).
 
     ``mode`` picks the degree the payload is billed against:
 
@@ -400,18 +456,17 @@ def payload_bits(compressor: Compressor, theta_template, topology, *,
     * ``"realized"`` — the actual active links of round ``step`` under the
       concrete participation ``mask``.
     """
-    total = 0.0
-    for leaf in jax.tree_util.tree_leaves(theta_template):
-        d = int(np.prod(leaf.shape[1:]))
-        total += compressor.bits_per_element(d) * d
+    if mode not in ("max", "expected", "realized"):
+        raise ValueError(f"unknown bits mode {mode!r}; choose max/expected/realized")
+    total = payload_total_bits(compressor, theta_template)
+    if degree is not None:
+        return total * degree
     if mode == "max":
         degree = topology.max_degree
     elif mode == "expected":
         degree = topology.expected_degree
-    elif mode == "realized":
+    else:
         if mask is None:
             raise ValueError("mode='realized' needs the round's participation mask")
         degree = topology.realized_degree(0 if step is None else step, mask)
-    else:
-        raise ValueError(f"unknown bits mode {mode!r}; choose max/expected/realized")
     return total * degree

@@ -109,6 +109,19 @@ class Topology:
         off = self.adjacency - np.eye(self.num_nodes)
         return float((alive * (off * alive[None, :]).sum(axis=1)).max())
 
+    def realized_degree_traced(self, t, mask):
+        """Jittable :meth:`realized_degree` — a traced scalar the trainer
+        threads into its per-round ``bits_realized`` aux."""
+        import jax.numpy as jnp
+
+        off = jnp.asarray(
+            self.adjacency - np.eye(self.num_nodes), jnp.float32
+        )
+        if mask is None:
+            return jnp.float32(self.max_degree)
+        alive = mask.astype(jnp.float32)
+        return (alive * (off @ alive)).max()
+
     def consensus_step_size(self, delta: float) -> float:
         """Theorem 4.1/4.3 consensus step size gamma for compression factor delta."""
         return _theorem_gamma(self.spectral_gap, self.beta, delta)
@@ -357,6 +370,18 @@ class TopologySchedule:
         """Busiest node's realized active links in round ``t``'s phase under
         a concrete participation mask."""
         return self.topology_at(t).realized_degree(t, mask)
+
+    def realized_degree_traced(self, t, mask):
+        """Jittable :meth:`realized_degree`: gathers round ``t``'s phase
+        adjacency from the bank and counts surviving links in-graph."""
+        import jax.numpy as jnp
+
+        m = self.num_nodes
+        off = self.adjacency_at(t) * (1.0 - jnp.eye(m, dtype=jnp.float32))
+        if mask is None:
+            return off.sum(axis=1).max()
+        alive = mask.astype(jnp.float32)
+        return (alive * (off @ alive)).max()
 
     def consensus_step_size(self, delta: float) -> float:
         """Theorem 4.1 gamma, evaluated conservatively for the schedule.

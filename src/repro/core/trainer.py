@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.core import dro
 from repro.core.compression import Compressor, Identity
+from repro.core import wire
 from repro.core.gossip import (
     BLOCK_SCAN_ELEMS,
     CHOCOState,
@@ -62,8 +63,9 @@ from repro.core.gossip import (
     mix_stacked,
     mix_stacked_with,
     payload_bits,
+    payload_total_bits,
 )
-from repro.core.topology import Topology, TopologySchedule
+from repro.core.topology import Topology, TopologySchedule, compile_schedule_plans
 from repro.optim import Optimizer, OptState, Schedule
 
 __all__ = [
@@ -279,11 +281,14 @@ class DualUpdate:
 
     def update(self, lam: jax.Array, losses: jax.Array, ctx, *,
                mixing: jax.Array | None = None,
-               mask: jax.Array | None = None) -> jax.Array:
+               mask: jax.Array | None = None,
+               step=None) -> jax.Array:
         """Advance lambda.  Under a time-varying/fault-tolerant consensus the
-        trainer passes the round's dense ``mixing`` matrix and participation
-        ``mask`` so dual gossip travels the same wire as the model; duals
-        that don't gossip ignore them."""
+        trainer passes the round index ``step``, the participation ``mask``,
+        and — on the rolled backend only — the round's dense ``mixing``
+        matrix, so dual gossip travels the same wire as the model (the
+        ppermute backend has no dense matrix: the dual rides the union-wire
+        ``mix_fn`` instead); duals that don't gossip ignore them."""
         raise NotImplementedError
 
     def bits_per_round(self) -> float:
@@ -301,12 +306,13 @@ class ProjectedAscent(DualUpdate):
     The lambda gossip is uncompressed — m floats per neighbor, negligible
     next to the model payload but accounted in :meth:`bits_per_round`.
 
-    ``mix_fn`` overrides how the static lambda gossip travels: the factories
-    set it to the consensus's :meth:`ChocoConsensus.wire_mix` when the
-    ppermute backend is on, so the dual rides the same neighbor permutes as
-    the model instead of a stacked-array roll.  (Time-varying rounds receive
-    the dense W(t) from the trainer either way — lambda is [m, m], wire cost
-    negligible.)
+    ``mix_fn`` overrides how the lambda gossip travels: the factories set it
+    to the consensus's :meth:`ChocoConsensus.wire_mix` when the ppermute
+    backend is on, so the dual rides the same neighbor permutes as the model
+    instead of a stacked-array roll — including time-varying rounds, where
+    ``wire_mix`` selects the round's weights from the union wire's banks via
+    ``step``/``mask``.  (Rolled time-varying rounds receive the dense W(t)
+    from the trainer instead — lambda is [m, m], wire cost negligible.)
     """
 
     prior: jax.Array
@@ -322,7 +328,7 @@ class ProjectedAscent(DualUpdate):
     def grad_weights(self, lam, losses):
         return (jnp.diagonal(lam) / self.prior).astype(jnp.float32)
 
-    def update(self, lam, losses, ctx, *, mixing=None, mask=None):
+    def update(self, lam, losses, ctx, *, mixing=None, mask=None, step=None):
         m = lam.shape[0]
         node_ids = jnp.arange(m)
         dual_grads = jax.vmap(
@@ -336,7 +342,7 @@ class ProjectedAscent(DualUpdate):
         if mixing is not None:
             return mix_stacked_with(lam_half, mixing)
         if self.mix_fn is not None:
-            return self.mix_fn(lam_half)
+            return self.mix_fn(lam_half, step=step, mask=mask)
         return mix_stacked(lam_half, self.topology)
 
     def bits_per_round(self) -> float:
@@ -441,12 +447,57 @@ class Consensus:
             step=None, mask=None, mixing=None):
         raise NotImplementedError
 
+    @property
+    def wire_format(self) -> wire.WireFormat:
+        """Byte format of one per-edge message (see repro.core.wire)."""
+        return wire.DENSE
+
     def bits_per_round(self, theta_template, *, mode: str = "max",
                        step=None, mask=None) -> float:
         """Busiest-node bits per round.  ``mode``: "max" (upper bound,
         default), "expected" (participation-aware phase average), or
         "realized" (actual links of round ``step`` under ``mask``)."""
         raise NotImplementedError
+
+    def bits_realized(self, theta_template, step, mask):
+        """This round's realized wire bits as a *traced* scalar — the jitted
+        form of ``bits_per_round(mode="realized")`` the trainer threads into
+        ``aux["bits_realized"]`` so long faulty runs report measured traffic
+        without host-side masks.  Default: the max-degree constant (exact for
+        static full-participation wires)."""
+        return jnp.float32(self.bits_per_round(theta_template, mode="max"))
+
+
+def _resolve_wire_backend(backend: str, mesh, schedule):
+    """Shared ctor validation for the ``backend`` knob: checks the name,
+    requires a mesh for ppermute, and compiles the union wire program when
+    the wire is time-varying (one plan per consensus instance — the same
+    object then sizes the NeighborCache, selects round weights, and bills
+    bits, so they cannot drift)."""
+    if backend not in ("rolled", "ppermute"):
+        raise ValueError(f"unknown gossip backend {backend!r}; choose rolled or ppermute")
+    if backend == "ppermute" and mesh is None:
+        raise ValueError("backend='ppermute' requires a mesh (see launch.mesh.make_node_mesh)")
+    if backend == "ppermute" and schedule is not None:
+        return wire.compile_union_wire(
+            compile_schedule_plans(schedule), name=schedule.name
+        )
+    return None
+
+
+def _union_degree(union, schedule, mode: str, mask) -> float:
+    """Billing degree of the union wire: every union edge carries one
+    message every round, dropped only when the sender itself is dead (a
+    dead receiver's messages are deferred re-sync traffic, not avoided)."""
+    if mode == "max":
+        return float(union.max_out_degree)
+    if mode == "expected":
+        return union.max_out_degree * (1.0 - schedule.dropout_rate)
+    if mode == "realized":
+        if mask is None:
+            raise ValueError("mode='realized' needs the round's participation mask")
+        return union.realized_out_degree(mask)
+    raise ValueError(f"unknown bits mode {mode!r}; choose max/expected/realized")
 
 
 def _split_schedule(topology):
@@ -481,10 +532,6 @@ class ChocoConsensus(Consensus):
                  gamma: float | str | None = None, *, packed: bool = True,
                  fused: bool = False, backend: str = "rolled", mesh=None,
                  node_axes="data"):
-        if backend not in ("rolled", "ppermute"):
-            raise ValueError(f"unknown gossip backend {backend!r}; choose rolled or ppermute")
-        if backend == "ppermute" and mesh is None:
-            raise ValueError("backend='ppermute' requires a mesh (see launch.mesh.make_node_mesh)")
         self.topology, self.schedule, self._gamma_topology = _split_schedule(topology)
         self.compressor = compressor
         self.gamma_spec = gamma
@@ -493,6 +540,9 @@ class ChocoConsensus(Consensus):
         self.backend = backend
         self.mesh = mesh
         self.node_axes = node_axes
+        # the time-varying ppermute wire: one union program for every phase,
+        # and a NeighborCache sized to its op count (see repro.core.wire)
+        self.union = _resolve_wire_backend(backend, mesh, self.schedule)
         # provisional gamma until init()/mix() see the real leaf sizes
         self.gamma = self._resolve_gamma(4096)
 
@@ -545,7 +595,10 @@ class ChocoConsensus(Consensus):
         # keep ``.gamma`` introspectable for the actual model; mix() re-resolves
         # at trace time so a step traced without init() still gets the right value
         self.gamma = self._resolve_gamma(self._encode_dim(theta_stacked))
-        return choco_init(theta_stacked)
+        return choco_init(
+            theta_stacked,
+            cache_ops=self.union.n_ops if self.union is not None else 0,
+        )
 
     def mix(self, theta_half, state, key, ctx, *, step=None, mask=None, mixing=None):
         gamma = self._resolve_gamma(self._encode_dim(theta_half))
@@ -557,7 +610,7 @@ class ChocoConsensus(Consensus):
                 theta_half, state, self.topology, gamma, self.compressor, key,
                 packed=self.packed, fused=self.fused, mask=mask,
                 backend="ppermute", mesh=self.mesh, node_axes=self.node_axes,
-                schedule=self.schedule, step=step,
+                schedule=self.schedule, step=step, union=self.union,
             )
         if self.schedule is not None and mixing is None:
             # standalone use (no trainer threading): resolve W(t) here
@@ -567,25 +620,50 @@ class ChocoConsensus(Consensus):
             packed=self.packed, fused=self.fused, mixing=mixing, mask=mask,
         )
 
-    def wire_mix(self, tree):
-        """Uncompressed gossip of a stacked tree over this consensus's wire —
-        the dual/lambda gossip rides the same permutes as the model on the
-        ppermute backend (static topologies; time-varying duals get the dense
-        W(t) from the trainer)."""
+    def wire_mix(self, tree, *, step=None, mask=None):
+        """Uncompressed (dense-format) gossip of a stacked tree over this
+        consensus's wire — the dual/lambda gossip rides the same permutes as
+        the model on the ppermute backend.  Time-varying rounds select their
+        weights from the union wire's per-phase banks via ``step``/``mask``;
+        the rolled backend's time-varying duals get the dense W(t) from the
+        trainer instead and never reach here."""
         if self.backend == "ppermute":
             from repro.core.exchange import mix_stacked_ppermute
 
             return mix_stacked_ppermute(
-                tree, self.topology, mesh=self.mesh, node_axes=self.node_axes
+                tree, self.topology, mesh=self.mesh, node_axes=self.node_axes,
+                schedule=self.schedule, step=step, mask=mask, union=self.union,
             )
         return mix_stacked(tree, self.topology)
 
+    @property
+    def wire_format(self) -> wire.WireFormat:
+        if isinstance(self.compressor, Identity) or not self.packed:
+            return wire.DENSE
+        return wire.HAT_DELTA if self.union is not None else wire.PAYLOAD
+
     def bits_per_round(self, theta_template, *, mode: str = "max",
                        step=None, mask=None) -> float:
+        if self.union is not None:
+            # cached union wire: every union edge carries one hat-delta
+            # payload every round (that is what keeps the mirrors exact), so
+            # the honest degree is the union out-degree
+            return payload_bits(
+                self.compressor, theta_template, self.schedule,
+                degree=_union_degree(self.union, self.schedule, mode, mask),
+            )
         return payload_bits(
             self.compressor, theta_template, self.schedule or self.topology,
             mode=mode, step=step, mask=mask,
         )
+
+    def bits_realized(self, theta_template, step, mask):
+        total = payload_total_bits(self.compressor, theta_template)
+        if self.union is not None:
+            return total * self.union.realized_out_degree_traced(mask)
+        if self.schedule is not None:
+            return total * self.schedule.realized_degree_traced(step, mask)
+        return total * self.topology.realized_degree_traced(step, mask)
 
 
 class ExactConsensus(Consensus):
@@ -594,12 +672,37 @@ class ExactConsensus(Consensus):
     Accepts a :class:`TopologySchedule` too: the round then mixes with the
     schedule's dense W(t) and dropped nodes (identity row/column) hold their
     model until they rejoin.
+
+    ``backend="ppermute"`` executes the mix on the neighbor-exchange
+    substrate: dense-format f32 messages (this *is* the algorithm's wire —
+    DR-DSGD sends uncompressed models) travel only between actual graph
+    neighbors via ``lax.ppermute``, with zero all-gather; time variation
+    rides the union wire's weight banks like the CHOCO consensus.
     """
 
-    def __init__(self, topology: Topology | TopologySchedule):
+    def __init__(self, topology: Topology | TopologySchedule, *,
+                 backend: str = "rolled", mesh=None, node_axes="data"):
         self.topology, self.schedule, _ = _split_schedule(topology)
+        self.backend = backend
+        self.mesh = mesh
+        self.node_axes = node_axes
+        self.union = _resolve_wire_backend(backend, mesh, self.schedule)
 
     def mix(self, theta_half, state, key, ctx, *, step=None, mask=None, mixing=None):
+        if self.backend == "ppermute":
+            if mixing is not None:
+                raise ValueError(
+                    "backend='ppermute' takes step/mask, not a dense mixing "
+                    "matrix — the wire program is compiled from the schedule"
+                )
+            from repro.core.exchange import mix_stacked_ppermute
+
+            mixed = mix_stacked_ppermute(
+                theta_half, self.topology, mesh=self.mesh,
+                node_axes=self.node_axes, schedule=self.schedule,
+                step=step, mask=mask, union=self.union,
+            )
+            return mixed, state
         if self.schedule is not None and mixing is None:
             mixing = self.schedule.mixing_at(0 if step is None else step, mask)
         if mixing is not None:
@@ -608,10 +711,28 @@ class ExactConsensus(Consensus):
 
     def bits_per_round(self, theta_template, *, mode: str = "max",
                        step=None, mask=None) -> float:
+        if self.union is not None:
+            # time-varying ppermute wire: the union mix sends a dense f32
+            # message on every union op every round (inactive-phase ops
+            # carry zero receive weight but the bytes still move) — bill
+            # what actually travels, like the cached CHOCO wire does.  A
+            # per-phase wire program that skips inactive edges is a ROADMAP
+            # item (no cache forces the union here, unlike CHOCO).
+            return payload_bits(
+                Identity(), theta_template, self.schedule,
+                degree=_union_degree(self.union, self.schedule, mode, mask),
+            )
         return payload_bits(
             Identity(), theta_template, self.schedule or self.topology,
             mode=mode, step=step, mask=mask,
         )
+
+    def bits_realized(self, theta_template, step, mask):
+        total = payload_total_bits(Identity(), theta_template)
+        if self.union is not None:
+            return total * self.union.realized_out_degree_traced(mask)
+        topo = self.schedule or self.topology
+        return total * topo.realized_degree_traced(step, mask)
 
 
 class FedAvg(Consensus):
@@ -620,18 +741,37 @@ class FedAvg(Consensus):
     Input is the stacked local models [m, ...]; output is the single server
     model (no node axis) — the trainer re-broadcasts it next round.  With no
     sampling ctx every client is averaged (plain FedAvg).
+
+    ``backend="ppermute"`` aggregates mesh-native: per-device partial sums
+    + one ``psum`` over the node axes (the ring all-reduce realization of
+    "|U| models up, one model down") — zero all-gather, vs. the rolled form
+    whose stacked ``sum(0)`` GSPMD may lower to an all-gather of the whole
+    model stack.  ``bits_per_round`` keeps billing the server-star wire
+    model (2|U|·d·f32) in every mode — that is the *algorithm's* traffic.
     """
 
     federated = True
 
-    def __init__(self, num_sampled: int):
+    def __init__(self, num_sampled: int, *, backend: str = "rolled",
+                 mesh=None, node_axes="data"):
+        _resolve_wire_backend(backend, mesh, None)
         self.num_sampled = num_sampled
+        self.backend = backend
+        self.mesh = mesh
+        self.node_axes = node_axes
 
     def mix(self, theta_locals, state, key, ctx, *, step=None, mask=None, mixing=None):
         m = jax.tree_util.tree_leaves(theta_locals)[0].shape[0]
         sampled = ctx  # SampledAscent's per-round client mask (None = all)
         if sampled is None:
             sampled = jnp.ones((m,), jnp.float32)
+        if self.backend == "ppermute":
+            from repro.core.exchange import server_average_ppermute
+
+            theta_new = server_average_ppermute(
+                theta_locals, sampled, mesh=self.mesh, node_axes=self.node_axes
+            )
+            return theta_new, state
         wsum = sampled.sum()
         theta_new = jax.tree.map(
             lambda x: (
@@ -645,7 +785,10 @@ class FedAvg(Consensus):
     def bits_per_round(self, theta_template, *, mode: str = "max",
                        step=None, mask=None) -> float:
         """Busiest node = the server: |U| models down + |U| models up, f32.
-        The sample count is fixed, so every mode bills the same."""
+        The sample count is fixed, so every mode bills the same.
+        ``theta_template`` is the federated trainer's *server* model (no
+        node axis — federated state.theta never carries one), so the full
+        prod(shape) is the per-model element count."""
         d = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(theta_template))
         return 2.0 * self.num_sampled * d * 32.0
 
@@ -781,8 +924,16 @@ class DecentralizedTrainer:
         node_keys = keys[idx:]
 
         # --- time-varying wire: participation mask + this round's W(t) ------
+        # the dense [m, m] matrix only exists for the rolled backend; the
+        # ppermute backend compiles its own union wire program and the dual
+        # gossip rides it through mix_fn (wire_mix) instead
+        wire_native = getattr(self.consensus, "backend", "rolled") == "ppermute"
         mask = schedule.mask_at(mask_key, state.step) if needs_mask else None
-        mixing = schedule.mixing_at(state.step, mask) if schedule is not None else None
+        mixing = (
+            schedule.mixing_at(state.step, mask)
+            if schedule is not None and not wire_native
+            else None
+        )
 
         ctx = self.dual.begin(state.lam, dual_key)
 
@@ -800,7 +951,9 @@ class DecentralizedTrainer:
             opt_new = _select_nodes(mask, opt_new, state.opt, m)
 
         # --- dual update ----------------------------------------------------
-        lam_new = self.dual.update(state.lam, losses, ctx, mixing=mixing, mask=mask)
+        lam_new = self.dual.update(
+            state.lam, losses, ctx, mixing=mixing, mask=mask, step=state.step
+        )
 
         # --- consensus ------------------------------------------------------
         theta_new, cons_new = self.consensus.mix(
@@ -833,6 +986,11 @@ class DecentralizedTrainer:
             aux["consensus_err"] = _consensus_error(theta_new)
         if mask is not None:
             aux["participation"] = mask
+        # jitted realized-bits meter: this round's measured wire traffic
+        # (model payload + the dual's constant), no host-side masks needed
+        aux["bits_realized"] = self.consensus.bits_realized(
+            state.theta, state.step, mask
+        ) + jnp.float32(self.dual.bits_per_round())
 
         new_state = TrainerState(
             step=state.step + 1,

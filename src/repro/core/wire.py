@@ -1,0 +1,217 @@
+"""The wire layer: what bytes a consensus round puts on an edge, and the
+neighbor-cache machinery that lets time-varying rounds ship only those bytes.
+
+Two first-class objects factor every consensus implementation's traffic:
+
+* :class:`WireFormat` — the byte format of one edge message: the packed
+  compressed ``payload`` (static CHOCO rounds), a ``dense`` f32 tensor
+  (exact/uncompressed gossip, the unpacked cross-check paths), or a
+  ``hat-delta`` (the compressed residual that doubles as an incremental
+  update to the receiver's mirror of the sender's public copy).
+
+* :class:`UnionWirePlan` — the single wire program shared by *every* phase
+  of a :class:`~repro.core.topology.TopologySchedule`: the union of all
+  phases' exchange ops (deduplicated), plus per-phase weight banks indexed
+  by ``t % P``.  Selecting a round's mixing weights becomes one
+  ``dynamic_index`` into the banks instead of a ``lax.switch`` over
+  whole per-phase wire programs at every mix site (the ROADMAP
+  phase-switch-hoisting item), and — crucially — a receiver can keep a
+  **NeighborCache** (one mirror of the sender's ``theta_hat`` per union op)
+  that stays exact across phase changes, because every union edge carries
+  the sender's compressed hat-delta every round.
+
+Why the union, not per-phase re-sync: a cache that only covers the current
+phase's in-neighbors must be re-synced with a full f32 hat exchange whenever
+the phase changes — for a round-robin schedule that is *every round*, which
+is exactly the f32 traffic this layer exists to remove.  Shipping the
+(compressed, tiny) delta on every union edge instead keeps all mirrors
+bit-identical to the sender's own ``theta_hat`` with no re-sync ever, at the
+cost of the union degree rather than the phase degree.  Per *edge* the cost
+is unchanged: one compressed payload.
+
+The cache state itself is plain data — a tuple (one entry per union op) of
+pytrees shaped exactly like ``theta_hat`` — stored in
+:class:`~repro.core.gossip.CHOCOState` and threaded through checkpoints and
+shardings like any other stacked state.  The executing side lives in
+``repro.core.exchange`` (``choco_round_ppermute``'s time-varying path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core.topology import PermutePlan
+
+__all__ = [
+    "WireFormat",
+    "PAYLOAD",
+    "DENSE",
+    "HAT_DELTA",
+    "UnionWirePlan",
+    "compile_union_wire",
+    "init_neighbor_cache",
+]
+
+
+# ================================================================ WireFormat
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """The byte format of one per-edge message in a consensus round.
+
+    ``kind`` is one of:
+
+    * ``"payload"`` — the compressor's encoded representation (packed levels
+      + signs + norms for the quantizers), the static CHOCO wire;
+    * ``"dense"`` — the raw f32 tensor (exact consensus, federated model
+      up/downloads, and the unpacked cross-check paths);
+    * ``"hat-delta"`` — the compressed residual ``Q(theta - theta_hat)``
+      shipped on every union edge of a time-varying round: the same bytes
+      as ``payload``, but semantically an *increment* the receiver applies
+      to its cached mirror of the sender's public copy.
+
+    This is a dispatch/label tag; the bits each format puts on an edge are
+    billed by ``gossip.payload_bits`` (algorithmic payload accounting) and
+    measured by suite X (compiled-HLO collective bytes) — deliberately NOT
+    duplicated here, where a third copy could drift from both.
+    """
+
+    kind: str
+
+    def __str__(self) -> str:  # row/label friendly
+        return self.kind
+
+
+PAYLOAD = WireFormat("payload")
+DENSE = WireFormat("dense")
+HAT_DELTA = WireFormat("hat-delta")
+
+
+# ============================================================= UnionWirePlan
+@dataclasses.dataclass(frozen=True, eq=False)
+class UnionWirePlan:
+    """One wire program for all phases of a topology schedule.
+
+    ``ops`` is the deduplicated union of every phase's
+    :meth:`~repro.core.topology.PermutePlan.exchange_ops`; ``senders`` the
+    matching sender maps (``senders[k][i]`` = node whose value node ``i``
+    receives on op ``k``, −1 when none).  The per-phase banks are indexed by
+    ``t % period``:
+
+    * ``w_bank[p, k, i]`` — the static phase-``p`` receive weight
+      ``W_p[i, senders[k][i]]`` (0 when op ``k`` is not part of phase ``p``);
+    * ``self_bank[p, i]`` — ``W_p[i, i]``;
+    * ``active[p, k, i]`` — 1.0 iff node ``i`` receives on op ``k`` in phase
+      ``p`` (the edge-membership mask the masked-Metropolis reweighting runs
+      over — identical edge set to ``masked_metropolis`` on the phase
+      adjacency).
+    """
+
+    name: str
+    num_nodes: int
+    period: int
+    ops: tuple[tuple[str, object], ...]
+    senders: tuple[np.ndarray, ...]
+    w_bank: np.ndarray  # [P, n_ops, m] f32
+    self_bank: np.ndarray  # [P, m] f32
+    active: np.ndarray  # [P, n_ops, m] f32
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.ops)
+
+    @property
+    def out_degree(self) -> np.ndarray:
+        """[m] hat-delta payloads each node *sends* per round: one per
+        (op, receiver) slot it feeds.  Every union edge carries a delta
+        every round — that is what keeps the caches exact — so this is the
+        honest per-round send count, including the rare duplicate pair that
+        two matching phases share through distinct ops."""
+        out = np.zeros((self.num_nodes,), np.int64)
+        for snd in self.senders:
+            js = snd[snd >= 0]
+            np.add.at(out, js, 1)
+        return out
+
+    @property
+    def max_out_degree(self) -> int:
+        """Busiest sender's per-round payload count (bits accounting)."""
+        return int(self.out_degree.max()) if self.n_ops else 0
+
+    def realized_out_degree(self, mask) -> float:
+        """Busiest *alive* sender's payload count under a participation
+        mask: dead nodes send nothing (their residual is zero and the alive
+        bit that rides each exchange tells receivers to skip the update)."""
+        alive = np.asarray(mask, np.float64).reshape(-1)
+        return float((alive * self.out_degree).max())
+
+    def realized_out_degree_traced(self, mask):
+        """The jittable form of :meth:`realized_out_degree` — used by the
+        trainer's per-round ``bits_realized`` aux without host-side masks."""
+        import jax.numpy as jnp
+
+        out = jnp.asarray(self.out_degree, jnp.float32)
+        if mask is None:
+            return out.max()
+        return (mask.astype(jnp.float32) * out).max()
+
+
+def compile_union_wire(plans: Sequence[PermutePlan], name: str | None = None) -> UnionWirePlan:
+    """Union of per-phase :class:`~repro.core.topology.PermutePlan` wire
+    programs (``compile_schedule_plans`` output) into one
+    :class:`UnionWirePlan`.  Ops are deduplicated by their exchange key
+    (normalized shift value, or the exact (src, dst) pair set), first-seen
+    order — so a single-phase schedule round-trips to its own plan ops."""
+    plans = tuple(plans)
+    if not plans:
+        raise ValueError("compile_union_wire needs at least one phase plan")
+    m = plans[0].num_nodes
+    if any(p.num_nodes != m for p in plans):
+        raise ValueError("all phase plans must share num_nodes")
+
+    ops: list[tuple[str, object]] = []
+    senders: list[np.ndarray] = []
+    index: dict = {}
+    phase_ops: list[list[int]] = []
+    for plan in plans:
+        idxs = []
+        for op, snd in zip(plan.exchange_ops(), plan.sender_maps()):
+            key = (op[0], op[1] if op[0] == "shift" else tuple(op[1]))
+            if key not in index:
+                index[key] = len(ops)
+                ops.append(op)
+                senders.append(np.asarray(snd, np.int64))
+            idxs.append(index[key])
+        phase_ops.append(idxs)
+
+    period, n = len(plans), len(ops)
+    w_bank = np.zeros((period, n, m), np.float32)
+    self_bank = np.zeros((period, m), np.float32)
+    active = np.zeros((period, n, m), np.float32)
+    for p, plan in enumerate(plans):
+        w_full = plan.mixing_matrix()
+        self_bank[p] = np.diag(w_full).astype(np.float32)
+        for k in phase_ops[p]:
+            snd = senders[k]
+            i = np.nonzero(snd >= 0)[0]
+            active[p, k, i] = 1.0
+            w_bank[p, k, i] = w_full[i, snd[i]].astype(np.float32)
+    return UnionWirePlan(
+        name or "+".join(p.name for p in plans), m, period,
+        tuple(ops), tuple(senders), w_bank, self_bank, active,
+    )
+
+
+def init_neighbor_cache(theta_hat: Any, n_ops: int) -> tuple:
+    """Fresh NeighborCache state: one zero mirror of ``theta_hat`` per union
+    op.  Exact at init because ``theta_hat`` itself initializes to zeros, and
+    kept exact thereafter by applying each received hat-delta with the same
+    arithmetic the sender applies to its own hat (see
+    ``exchange._round_leaf_cached``)."""
+    import jax
+    import jax.numpy as jnp
+
+    return tuple(
+        jax.tree.map(jnp.zeros_like, theta_hat) for _ in range(n_ops)
+    )

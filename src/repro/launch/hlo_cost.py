@@ -354,8 +354,11 @@ def analyze_hlo(text: str) -> Cost:
             elif op in _ARITH:
                 e, _ = _shape_elems_bytes(inst.shape)
                 c.flops += e
+            # async pairs: count the -start (its operand is the sent buffer),
+            # skip the -done (its operand is the start's result — counting
+            # both would double every async collective's bytes)
             kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
-            if kind is not None:
+            if kind is not None and not op.endswith("-done"):
                 ob = sum(_shape_elems_bytes(shapes.get(o, ""))[1] for o in _operand_names(inst.rest))
                 if ob == 0:
                     _, ob = _shape_elems_bytes(inst.shape)

@@ -187,8 +187,14 @@ def trainer_state_pspecs(state: Any, params_spec: Any, mesh: Mesh, node_axes: tu
             nu=params_spec if state.opt.nu != () else (),
         ),
         consensus=(
-            CHOCOState(theta_hat=params_spec, s=params_spec)
-            if state.consensus != ()
+            CHOCOState(
+                theta_hat=params_spec,
+                s=params_spec,
+                # NeighborCache mirrors are theta_hat-shaped ([m, ...]) —
+                # one per union wire op, sharded like the params
+                cache=tuple(params_spec for _ in state.consensus.cache),
+            )
+            if isinstance(state.consensus, CHOCOState)
             else ()
         ),
         theta_avg=(

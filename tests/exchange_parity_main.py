@@ -10,9 +10,12 @@ Exercised grid (the ISSUE-4 acceptance bar):
   x {identity, q4b packed+unpacked, kq4b packed, top25};
 * the fused single-pass Pallas path (kq4b), jitted-vs-jitted;
 * a dropout-masked time-varying schedule (roundrobin ring+torus) and a
-  one-peer matching schedule;
+  one-peer matching schedule — now on the NeighborCache hat-delta wire,
+  with the mirror invariant (cache bit-identical to sender hats) re-checked
+  on real devices after every scenario;
 * full AD-GDA trainer steps on both backends (dual gossip riding the
-  permutes), plus an eager (disable_jit) bit-identity check.
+  permutes), wire-honest DR-DSGD/DRFA baselines (ExactConsensus dense
+  permutes / FedAvg psum), plus an eager (disable_jit) bit-identity check.
 
 Parity levels: kernel-format payload paths (kq4b packed / fused) and eager
 execution must be BIT-IDENTICAL; jitted f32 paths whose oracle is a dense
@@ -94,11 +97,39 @@ def gossip_grid(mesh, quick):
         check(f"static/er4/{cname}", a, b, exact=False)
 
 
+def _shared(t, s):
+    """(theta, hat, s): the fields both backends carry — the rolled oracle
+    has no NeighborCache."""
+    return t, s.theta_hat, s.s
+
+
+def _cache_invariant(name, state, union):
+    """The NeighborCache invariant: after ANY prefix of masked/scheduled
+    rounds, every mirror is BIT-IDENTICAL to the sender's theta_hat."""
+    hats = jax.tree_util.tree_leaves(state.theta_hat)
+    worst_bad = 0
+    for k, snd in enumerate(union.senders):
+        for hat, cleaf in zip(hats, jax.tree_util.tree_leaves(state.cache[k])):
+            hat, cleaf = np.asarray(hat), np.asarray(cleaf)
+            for i in range(hat.shape[0]):
+                if snd[i] >= 0 and not (cleaf[i] == hat[snd[i]]).all():
+                    worst_bad += 1
+    ok = worst_bad == 0
+    CHECKS.append((name, "EXACT", float(worst_bad), ok))
+    print(f"{'PASS' if ok else 'FAIL'} [EXACT] {name}: {worst_bad} stale mirror rows")
+    assert ok, f"{name}: NeighborCache diverged from sender hats"
+
+
 def time_varying(mesh, quick):
+    from repro.core.topology import compile_schedule_plans
+    from repro.core.wire import compile_union_wire
+
     m, d = 8, 200
     theta = {"w": jax.random.normal(jax.random.PRNGKey(2), (m, d))}
     state = gossip.choco_init(theta)
     sched = topology.make_topology_schedule("roundrobin:ring,torus", m)
+    union = compile_union_wire(compile_schedule_plans(sched))
+    state_c = gossip.choco_init(theta, cache_ops=union.n_ops)
     topo0 = sched.topology_at(0)
     mask = jnp.array([1.0, 0.0, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0])
 
@@ -112,7 +143,7 @@ def time_varying(mesh, quick):
             return t, s
 
         def spmd():
-            t, s = theta, state
+            t, s = theta, state_c
             f = jax.jit(lambda t, s, k, st: gossip.choco_round(
                 t, s, topo0, 0.25, comp, k, mask=mask,
                 backend="ppermute", mesh=mesh, schedule=sched, step=st))
@@ -120,13 +151,18 @@ def time_varying(mesh, quick):
                 t, s = f(t, s, jax.random.PRNGKey(20 + i), jnp.int32(i))
             return t, s
 
-        check(f"masked-roundrobin/{cname}", oracle(), spmd(), exact=False)
+        to, so = oracle()
+        tp, sp = spmd()
+        check(f"masked-roundrobin/{cname}", _shared(to, so), _shared(tp, sp), exact=False)
+        _cache_invariant(f"cache-invariant/masked-roundrobin/{cname}", sp, union)
 
     # one-peer matchings (irregular phases, one node per device)
     m4 = 4
     theta4 = {"w": jax.random.normal(jax.random.PRNGKey(3), (m4, d))}
     state4 = gossip.choco_init(theta4)
     msched = topology.make_topology_schedule("matching:3", m4, seed=0)
+    munion = compile_union_wire(compile_schedule_plans(msched))
+    state4_c = gossip.choco_init(theta4, cache_ops=munion.n_ops)
     mt0 = msched.topology_at(0)
     comp = RandomQuantization(bits=4)
 
@@ -138,7 +174,7 @@ def time_varying(mesh, quick):
         return t, s
 
     def spmd_m():
-        t, s = theta4, state4
+        t, s = theta4, state4_c
         f = jax.jit(lambda t, s, k, st: gossip.choco_round(
             t, s, mt0, 0.25, comp, k, backend="ppermute", mesh=mesh,
             schedule=msched, step=st))
@@ -146,7 +182,10 @@ def time_varying(mesh, quick):
             t, s = f(t, s, jax.random.PRNGKey(30 + i), jnp.int32(i))
         return t, s
 
-    check("matching/q4b", oracle_m(), spmd_m(), exact=False)
+    to, so = oracle_m()
+    tp, sp = spmd_m()
+    check("matching/q4b", _shared(to, so), _shared(tp, sp), exact=False)
+    _cache_invariant("cache-invariant/matching/q4b", sp, munion)
 
 
 def trainer_parity(mesh, quick):
@@ -174,6 +213,14 @@ def trainer_parity(mesh, quick):
             st, aux = tr.step(st, batch)
         return st
 
+    def strip_cache(st):
+        # the ppermute backend's consensus state carries the NeighborCache;
+        # the rolled oracle has none — compare the shared fields
+        cons = st.consensus
+        if hasattr(cons, "cache"):
+            cons = (cons.theta_hat, cons.s)
+        return st._replace(consensus=cons)
+
     variants = [("adgda-ring", {}),
                 ("fused-kq4b", dict(compressor="kq4b", fused_gossip=True))]
     if not quick:
@@ -183,7 +230,56 @@ def trainer_parity(mesh, quick):
     for name, kw in variants:
         a = run(kw)
         b = run(dict(kw, gossip_backend="ppermute"), mesh_arg=mesh)
-        check(f"trainer/{name}", a, b, exact=False)
+        check(f"trainer/{name}", strip_cache(a), strip_cache(b), exact=False)
+
+
+def baselines_parity(mesh, quick):
+    """Wire-honest baselines: ExactConsensus (DR-DSGD) and FedAvg (DRFA)
+    under backend='ppermute' reproduce their rolled oracles — every trainer
+    in bench_comparison can now run mesh-native."""
+    from repro.core.baselines import (
+        DRDSGDConfig, DRFAConfig, drdsgd_trainer, drfa_trainer,
+    )
+
+    def loss_fn(params, batch, rng):
+        x, y = batch
+        logits = x @ params["w"] + params["b"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return (logz - gold).mean()
+
+    m, dim, C = 8, 12, 3
+    params = {"w": jnp.zeros((dim, C)), "b": jnp.zeros((C,))}
+
+    def run(make, steps=4, drfa=False):
+        tr = make()
+        st = tr.init(params, jax.random.PRNGKey(7))
+        if drfa:  # stacked layout: [m, K, b, ...]
+            batch = (
+                jax.random.normal(jax.random.PRNGKey(0), (m, 3, 8, dim)),
+                jax.random.randint(jax.random.PRNGKey(1), (m, 3, 8), 0, C),
+            )
+        else:
+            batch = (
+                jax.random.normal(jax.random.PRNGKey(0), (m, 8, dim)),
+                jax.random.randint(jax.random.PRNGKey(1), (m, 8), 0, C),
+            )
+        for _ in range(steps):
+            st, _ = tr.step(st, batch)
+        return st
+
+    dcfg = dict(num_nodes=m, eta_theta=0.2, alpha=6.0)
+    a = run(lambda: drdsgd_trainer(DRDSGDConfig(**dcfg), loss_fn))
+    b = run(lambda: drdsgd_trainer(
+        DRDSGDConfig(**dcfg, gossip_backend="ppermute"), loss_fn, mesh=mesh))
+    check("baseline/drdsgd", a, b, exact=False)
+
+    fcfg = dict(num_nodes=m, local_steps=3, eta_theta=0.2, eta_lambda=0.1)
+    a = run(lambda: drfa_trainer(DRFAConfig(**fcfg), loss_fn), drfa=True)
+    b = run(lambda: drfa_trainer(
+        DRFAConfig(**fcfg, gossip_backend="ppermute"), loss_fn, mesh=mesh),
+        drfa=True)
+    check("baseline/drfa", a, b, exact=False)
 
 
 def eager_bit_identity(mesh):
@@ -238,6 +334,7 @@ def main():
     gossip_grid(mesh, quick)
     time_varying(mesh, quick)
     trainer_parity(mesh, quick)
+    baselines_parity(mesh, quick)
     wire_mix_parity(mesh)
     eager_bit_identity(mesh)
     exact = sum(1 for _, lv, _, _ in CHECKS if lv == "EXACT")

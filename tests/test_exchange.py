@@ -26,7 +26,9 @@ import jax.numpy as jnp
 from repro.core import gossip, topology
 from repro.core.compression import Identity, RandomQuantization
 from repro.core.exchange import mix_stacked_ppermute, node_mesh_info
+from repro.core.topology import compile_schedule_plans
 from repro.core.trainer import ChocoConsensus
+from repro.core.wire import compile_union_wire
 from repro.kernels.ops import KernelQuantization
 from repro.launch.mesh import make_cpu_mesh
 
@@ -73,9 +75,10 @@ def test_single_device_parity(comp, exact):
 def test_single_device_masked_schedule_parity():
     mesh = _mesh1()
     sched = topology.make_topology_schedule("roundrobin:ring,torus", 8)
+    union = compile_union_wire(compile_schedule_plans(sched))
     topo0 = sched.topology_at(0)
     theta = {"w": jax.random.normal(jax.random.PRNGKey(1), (8, 64))}
-    state = gossip.choco_init(theta)
+    state = gossip.choco_init(theta, cache_ops=union.n_ops)
     mask = jnp.array([1, 1, 0, 1, 1, 1, 0, 1], jnp.float32)
     comp = RandomQuantization(bits=4)
     k = jax.random.PRNGKey(3)
@@ -88,7 +91,26 @@ def test_single_device_masked_schedule_parity():
         theta, state, topo0, 0.25, comp, k, mask=mask,
         backend="ppermute", mesh=mesh, schedule=sched, step=step,
     )
-    assert _worst(a, b) < 2e-6
+    # theta / hat / s agree with the rolled memory-full oracle (the oracle
+    # has no NeighborCache — compare the shared fields only)
+    a_cmp = (a[0], a[1].theta_hat, a[1].s)
+    b_cmp = (b[0], b[1].theta_hat, b[1].s)
+    assert _worst(a_cmp, b_cmp) < 2e-6
+
+
+def test_time_varying_requires_cache():
+    """A time-varying ppermute round without the NeighborCache is rejected
+    (silently zero-initializing mid-run would break the mirror invariant)."""
+    mesh = _mesh1()
+    sched = topology.make_topology_schedule("roundrobin:ring,torus", 8)
+    theta = {"w": jnp.zeros((8, 16))}
+    state = gossip.choco_init(theta)  # no cache_ops
+    with pytest.raises(ValueError, match="NeighborCache"):
+        gossip.choco_round(
+            theta, state, sched.topology_at(0), 0.25, Identity(),
+            jax.random.PRNGKey(0), backend="ppermute", mesh=mesh,
+            schedule=sched, step=jnp.int32(0),
+        )
 
 
 def test_wire_mix_matches_mix_stacked():

@@ -1,0 +1,344 @@
+"""NeighborCache / union-wire invariants (core/wire.py + the cached
+time-varying round in core/exchange.py).
+
+The contract that makes the hat-delta wire sound:
+
+* **mirror invariant** — after ANY prefix of masked/scheduled rounds, every
+  cache entry is BIT-IDENTICAL to the sender's own ``theta_hat`` (the
+  receiver applies the decoded delta with the same arithmetic the sender
+  applies), across schedule specs, dropout masks, and payload formats;
+* **oracle parity** — the cached round reproduces the rolled *memory-full*
+  f32 oracle (``gossip._round_leaf_masked``: dense W(t) products over the
+  full public copies) to f32 rounding, while shipping only compressed bytes;
+* **format equivalence** — packed payload wire vs dense-q wire are
+  bit-identical (decode commutes with the permute);
+* **bank round-trip** — the union wire's per-phase weight banks reconstruct
+  each phase's dense mixing matrix exactly.
+
+All on the single-device mesh (same backend code path as the multi-device
+grid in exchange_parity_main.py, which re-checks the invariant on 4 real
+devices), so this runs in the tier-1 suite.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip, topology
+from repro.core.compression import Identity, RandomQuantization
+from repro.core.topology import compile_schedule_plans
+from repro.core.wire import DENSE, HAT_DELTA, PAYLOAD, compile_union_wire
+from repro.kernels.ops import KernelQuantization
+from repro.launch.mesh import make_cpu_mesh
+
+SCHEDULES = [
+    ("ring+drop", "ring", 0.4),
+    ("rr+drop", "roundrobin:ring,torus", 0.25),
+    ("rr-sched", "roundrobin:ring,torus", 0.0),
+    ("matching", "matching:4", 0.3),
+]
+COMPRESSORS = [
+    ("identity", lambda: Identity(), True),
+    ("q4b", lambda: RandomQuantization(bits=4), True),
+    ("q4b-unpacked", lambda: RandomQuantization(bits=4), False),
+    ("kq4b", lambda: KernelQuantization(bits=4), True),
+]
+
+
+def _mesh1():
+    return make_cpu_mesh(1, 1)
+
+
+def _masks(sched, m, rounds, seed):
+    """Per-round participation masks the way the trainer draws them."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), rounds)
+    return [sched.mask_at(k, t) for t, k in enumerate(keys)]
+
+
+def _run_ppermute(theta, sched, comp, packed, masks, mesh):
+    union = compile_union_wire(compile_schedule_plans(sched))
+    topo0 = sched.topology_at(0)
+    state = gossip.choco_init(theta, cache_ops=union.n_ops)
+    masked = masks[0] is not None
+
+    @jax.jit
+    def step(t, s, k, st, mk=None):
+        return gossip.choco_round(
+            t, s, topo0, 0.3, comp, k, packed=packed, mask=mk,
+            backend="ppermute", mesh=mesh, schedule=sched, step=st,
+        )
+
+    t = theta
+    for i, mask in enumerate(masks):
+        kw = dict(mk=mask) if masked else {}
+        t, state = step(t, state, jax.random.PRNGKey(100 + i), jnp.int32(i), **kw)
+    return t, state, union
+
+
+def _run_rolled_oracle(theta, sched, comp, masks):
+    topo0 = sched.topology_at(0)
+    state = gossip.choco_init(theta)
+    masked = masks[0] is not None
+
+    @jax.jit
+    def step(t, s, k, mx, mk=None):
+        return gossip.choco_round(
+            t, s, topo0, 0.3, comp, k, mixing=mx, mask=mk,
+        )
+
+    t = theta
+    for i, mask in enumerate(masks):
+        kw = dict(mk=mask) if masked else {}
+        t, state = step(t, state, jax.random.PRNGKey(100 + i),
+                        sched.mixing_at(jnp.int32(i), mask), **kw)
+    return t, state
+
+
+def _assert_cache_invariant(state, union):
+    hats = jax.tree_util.tree_leaves(state.theta_hat)
+    for k, snd in enumerate(union.senders):
+        for hat, mirror in zip(hats, jax.tree_util.tree_leaves(state.cache[k])):
+            hat, mirror = np.asarray(hat), np.asarray(mirror)
+            for i in range(hat.shape[0]):
+                if snd[i] >= 0:
+                    assert (mirror[i] == hat[snd[i]]).all(), (
+                        f"op {k} node {i}: mirror diverged from sender "
+                        f"{snd[i]}'s theta_hat"
+                    )
+
+
+def _worst(a, b):
+    return max(
+        float(np.abs(np.asarray(x, np.float64) - np.asarray(y, np.float64)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+@pytest.mark.parametrize("cname,make_comp,packed", COMPRESSORS,
+                         ids=[c[0] for c in COMPRESSORS])
+@pytest.mark.parametrize("sname,spec,dropout", SCHEDULES,
+                         ids=[s[0] for s in SCHEDULES])
+def test_cache_invariant_and_oracle_parity(sname, spec, dropout, cname,
+                                           make_comp, packed):
+    m, d, rounds = 8, 96, 4
+    mesh = _mesh1()
+    sched = topology.make_topology_schedule(spec, m, dropout=dropout, seed=1)
+    theta = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (m, d)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (m, 5)),
+    }
+    masks = _masks(sched, m, rounds, seed=3)
+    comp = make_comp()
+
+    tp, sp, union = _run_ppermute(theta, sched, comp, packed, masks, mesh)
+    # 1. mirror invariant: bit-identical to sender hats after any prefix
+    _assert_cache_invariant(sp, union)
+    # 2. parity with the rolled memory-full f32 oracle
+    to, so = _run_rolled_oracle(theta, sched, comp, masks)
+    worst = _worst((to, so.theta_hat, so.s), (tp, sp.theta_hat, sp.s))
+    assert worst < 3e-6, f"hat-delta round diverged from oracle: {worst:.3e}"
+
+
+def test_packed_and_dense_wire_bit_identical():
+    """decode(recv(payload)) == recv(decode(payload)): the hat-delta payload
+    wire and the dense-q cross-check wire are the same numbers, bitwise."""
+    m = 8
+    mesh = _mesh1()
+    sched = topology.make_topology_schedule("roundrobin:ring,torus", m, dropout=0.3, seed=0)
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(2), (m, 64))}
+    masks = _masks(sched, m, 3, seed=5)
+    comp = RandomQuantization(bits=4)
+    a = _run_ppermute(theta, sched, comp, True, masks, mesh)[:2]
+    b = _run_ppermute(theta, sched, comp, False, masks, mesh)[:2]
+    assert _worst(a, b) == 0.0
+
+
+def test_union_bank_roundtrip_exact():
+    """w_bank/self_bank/senders reconstruct every phase's dense W exactly."""
+    for spec in ("ring", "roundrobin:ring,torus", "matching:4", "erdos_renyi"):
+        sched = topology.make_topology_schedule(spec, 8, seed=2)
+        plans = compile_schedule_plans(sched)
+        union = compile_union_wire(plans)
+        for p in range(union.period):
+            w = np.zeros((8, 8))
+            np.fill_diagonal(w, union.self_bank[p])
+            for k, snd in enumerate(union.senders):
+                i = np.nonzero(snd >= 0)[0]
+                w[i, snd[i]] += union.w_bank[p, k, i] * union.active[p, k, i]
+            assert np.allclose(w, sched.topologies[p].mixing, atol=1e-7), (
+                f"{spec} phase {p}: bank does not reconstruct W"
+            )
+
+
+def test_union_dedup_and_out_degree():
+    sched = topology.make_topology_schedule("roundrobin:ring,torus", 8)
+    union = compile_union_wire(compile_schedule_plans(sched))
+    # ring shares its ±1 shifts with the torus phase: union is 4 ops, not 6
+    assert union.n_ops == 4
+    assert union.max_out_degree == 4
+    assert union.realized_out_degree(np.array([1, 0, 1, 1, 1, 1, 1, 1])) == 4.0
+    # single-phase round-trips to its own plan
+    static = compile_union_wire(compile_schedule_plans(
+        topology.make_topology_schedule("ring", 8)))
+    assert static.n_ops == 2 and static.max_out_degree == 2
+
+
+def test_wire_formats_and_bits_accounting():
+    from repro.core.compression import make_compressor
+    from repro.core.trainer import ChocoConsensus, ExactConsensus, FedAvg
+
+    mesh = _mesh1()
+    ring = topology.ring(8)
+    sched = topology.make_topology_schedule("ring", 8, dropout=0.2)
+    comp = make_compressor("q4b")
+    theta = {"w": jnp.zeros((8, 100))}
+
+    static = ChocoConsensus(ring, comp, 0.3)
+    assert static.wire_format is PAYLOAD
+    cached = ChocoConsensus(sched, comp, 0.3, backend="ppermute", mesh=mesh)
+    assert cached.wire_format is HAT_DELTA
+    assert ExactConsensus(ring).wire_format is DENSE
+    assert FedAvg(4).wire_format is DENSE
+
+    # the cached union wire bills its out-degree; ring union degree == 2, so
+    # max-mode bits match the static upper bound (per-edge cost unchanged)
+    assert cached.bits_per_round(theta, mode="max") == static.bits_per_round(theta, mode="max")
+    # expected: sender-survival only (a dead receiver's deltas are deferred
+    # re-sync traffic, not avoided traffic)
+    assert cached.bits_per_round(theta, mode="expected") == pytest.approx(
+        0.8 * static.bits_per_round(theta, mode="max")
+    )
+    mask = jnp.array([1, 1, 1, 0, 1, 1, 1, 1], jnp.float32)
+    assert cached.bits_per_round(theta, mode="realized", mask=mask) == (
+        static.bits_per_round(theta, mode="max")
+    )
+    # traced accumulator agrees with the host-side accounting
+    traced = float(cached.bits_realized(theta, jnp.int32(0), mask))
+    assert traced == pytest.approx(
+        cached.bits_per_round(theta, mode="realized", mask=mask)
+    )
+
+
+def test_trainer_bits_realized_aux():
+    """The jitted realized-bits meter: static runs report the constant;
+    masked runs report the round's measured traffic."""
+    from benchmarks.common import make_adgda
+    from repro.data import rotated_minority_classification
+
+    m = 6
+    data = rotated_minority_classification(num_nodes=m, seed=0)
+    trainer, init_fn, _ = make_adgda("logistic", m, compressor="q4b", dropout=0.3)
+    state = trainer.init(init_fn(data.dim, data.num_classes), jax.random.PRNGKey(0))
+    xb, yb = next(data.batches(20, seed=0))
+    prev_step = int(state.step)
+    state, aux = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
+    want = trainer.bits_per_round(
+        state, mode="realized", step=prev_step, mask=aux["participation"]
+    )
+    assert float(aux["bits_realized"]) == pytest.approx(want)
+
+    trainer2, init_fn, _ = make_adgda("logistic", m, compressor="q4b")
+    state2 = trainer2.init(init_fn(data.dim, data.num_classes), jax.random.PRNGKey(0))
+    state2, aux2 = trainer2.step(state2, (jnp.asarray(xb), jnp.asarray(yb)))
+    assert float(aux2["bits_realized"]) == pytest.approx(trainer2.bits_per_round(state2))
+
+
+def test_baselines_ppermute_parity_single_device():
+    """ExactConsensus (DR-DSGD) and FedAvg (DRFA) under backend='ppermute'
+    reproduce their rolled oracles on the single-device mesh (the real
+    4-device wire runs in exchange_parity_main.py)."""
+    from repro.core.baselines import (
+        DRDSGDConfig, DRFAConfig, drdsgd_trainer, drfa_trainer,
+    )
+
+    mesh = _mesh1()
+    m, dim, C = 6, 10, 3
+
+    def loss_fn(params, batch, rng):
+        x, y = batch
+        logits = x @ params["w"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return (logz - gold).mean()
+
+    params = {"w": jnp.zeros((dim, C))}
+
+    def run(tr, stacked_k=None, steps=3):
+        st = tr.init(params, jax.random.PRNGKey(4))
+        if stacked_k:
+            batch = (
+                jax.random.normal(jax.random.PRNGKey(0), (m, stacked_k, 6, dim)),
+                jax.random.randint(jax.random.PRNGKey(1), (m, stacked_k, 6), 0, C),
+            )
+        else:
+            batch = (
+                jax.random.normal(jax.random.PRNGKey(0), (m, 6, dim)),
+                jax.random.randint(jax.random.PRNGKey(1), (m, 6), 0, C),
+            )
+        for _ in range(steps):
+            st, _ = tr.step(st, batch)
+        return st
+
+    dcfg = dict(num_nodes=m, eta_theta=0.2)
+    a = run(drdsgd_trainer(DRDSGDConfig(**dcfg), loss_fn))
+    b = run(drdsgd_trainer(DRDSGDConfig(**dcfg, gossip_backend="ppermute"),
+                           loss_fn, mesh=mesh))
+    assert _worst(a, b) < 2e-6
+
+    fcfg = dict(num_nodes=m, local_steps=2, eta_theta=0.2, eta_lambda=0.1)
+    a = run(drfa_trainer(DRFAConfig(**fcfg), loss_fn), stacked_k=2)
+    b = run(drfa_trainer(DRFAConfig(**fcfg, gossip_backend="ppermute"),
+                         loss_fn, mesh=mesh), stacked_k=2)
+    assert _worst(a, b) < 2e-6
+
+
+def test_hypothesis_random_masks_keep_invariant():
+    """Property test: arbitrary alive/dead patterns over arbitrary phase
+    offsets never break the mirror invariant or the oracle parity."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    m = 6
+    mesh = _mesh1()
+    sched = topology.make_topology_schedule("roundrobin:ring,torus", m, dropout=0.5)
+    union = compile_union_wire(compile_schedule_plans(sched))
+    topo0 = sched.topology_at(0)
+    comp = RandomQuantization(bits=4)
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(8), (m, 32))}
+
+    @jax.jit
+    def step_p(t, s, k, st, mk):
+        return gossip.choco_round(
+            t, s, topo0, 0.3, comp, k, mask=mk, backend="ppermute",
+            mesh=mesh, schedule=sched, step=st,
+        )
+
+    @jax.jit
+    def step_o(t, s, k, mx, mk):
+        return gossip.choco_round(t, s, topo0, 0.3, comp, k, mixing=mx, mask=mk)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        bits=st.lists(st.integers(0, (1 << m) - 1), min_size=1, max_size=3),
+        step0=st.integers(0, 5),
+    )
+    def prop(bits, step0):
+        masks = [
+            jnp.array([(b >> i) & 1 for i in range(m)], jnp.float32)
+            for b in bits
+        ]
+        state_p = gossip.choco_init(theta, cache_ops=union.n_ops)
+        state_o = gossip.choco_init(theta)
+        tp = to = theta
+        for i, mask in enumerate(masks):
+            step = jnp.int32(step0 + i)
+            tp, state_p = step_p(tp, state_p, jax.random.PRNGKey(50 + i), step, mask)
+            to, state_o = step_o(to, state_o, jax.random.PRNGKey(50 + i),
+                                 sched.mixing_at(step, mask), mask)
+        _assert_cache_invariant(state_p, union)
+        assert _worst((to, state_o.theta_hat), (tp, state_p.theta_hat)) < 3e-6
+
+    prop()
