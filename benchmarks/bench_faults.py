@@ -1,12 +1,21 @@
 """Fault-tolerance suite — worst-node accuracy and consensus error under
-time-varying topologies and Bernoulli node dropout (ISSUE 3 tentpole).
+time-varying topologies, Bernoulli node dropout, and injected wire faults
+(ISSUE 3 tentpole; fault axis from ISSUE 6).
 
 Scenario grid: wire schedule (static ring / round-robin ring+torus / random
-one-peer matchings) x per-round dropout rate.  Validates the failure-mode
-story end-to-end: the masked Metropolis rescale keeps W(t) doubly stochastic
-on the surviving subgraph, dropped nodes rejoin without resetting CHOCO
-trackers, and robustness (worst-node accuracy) degrades gracefully — not
-catastrophically — as participation drops.
+one-peer matchings) x per-round node-dropout rate x wire fault spec.
+Validates the failure-mode story end-to-end: the masked Metropolis rescale
+keeps W(t) doubly stochastic on the surviving subgraph, dropped nodes rejoin
+without resetting CHOCO trackers, digests catch every silently diverged
+mirror and the staleness-bounded resync heals it, and robustness
+(worst-node accuracy) degrades gracefully — not catastrophically — as
+participation drops or messages are lost.
+
+Key naming is shared verbatim by the persisted BENCH_FT.json rows, the
+printed table, the check_regression.py FT gate, and the README fault table:
+``dropout`` is the announced node-dropout probability, ``fault_spec`` is the
+wire-fault spec string ("none" when faults are off), ``faults_detected`` /
+``resyncs`` are the run's network-total digest detections and dense resyncs.
 """
 from __future__ import annotations
 
@@ -26,6 +35,15 @@ def _consensus_err(theta_stacked) -> float:
     return err
 
 
+def _fault_telemetry(state) -> tuple[float, float]:
+    """Network-total (digest detections, dense resyncs) — 0.0 when unfaulted."""
+    fault = getattr(state.consensus, "fault", None)
+    if fault is None or not hasattr(fault, "detected"):
+        return 0.0, 0.0
+    return (float(np.asarray(fault.detected).sum()),
+            float(np.asarray(fault.resyncs).sum()))
+
+
 def run(quick: bool = True, seeds=(0, 1)) -> list[dict]:
     m = 10
     steps = 400 if quick else 2000
@@ -34,14 +52,23 @@ def run(quick: bool = True, seeds=(0, 1)) -> list[dict]:
         ("rr-ring-torus", {"topology_schedule": "roundrobin:ring,torus"}),
         ("matching", {"topology_schedule": "matching:8"}),
     ]
+    # (dropout, fault_spec) axes: the announced-dropout sweep stays
+    # fault-free; the wire-fault sweep runs on the full graph so the FT gate
+    # can band each faulted row against its fault-free twin.
+    scenarios = [(d, "none") for d in (0.0, 0.1, 0.3)]
+    scenarios += [(0.0, "drop:0.1,stale:2"), (0.0, "corrupt:0.05,stale:2")]
     rows = []
     for sched_name, sched_kw in schedules:
-        for dropout in (0.0, 0.1, 0.3):
+        for dropout, fault_spec in scenarios:
+            kw = dict(sched_kw)
+            if fault_spec != "none":
+                kw["fault_spec"] = fault_spec
             worst_accs, cons_errs, realized = [], [], []
+            detected, resyncs = [], []
             for seed in seeds:
                 data = rotated_minority_classification(num_nodes=m, seed=seed)
                 trainer, init_fn, apply_fn = make_adgda(
-                    "logistic", m, compressor="q4b", dropout=dropout, **sched_kw,
+                    "logistic", m, compressor="q4b", dropout=dropout, **kw,
                 )
                 params, info = train_trainer(
                     trainer, init_fn(data.dim, data.num_classes), data, steps,
@@ -51,19 +78,25 @@ def run(quick: bool = True, seeds=(0, 1)) -> list[dict]:
                 worst_accs.append(w)
                 cons_errs.append(_consensus_err(info["state"].theta))
                 realized.append(info["bits_per_round_realized"])
+                det, res = _fault_telemetry(info["state"])
+                detected.append(det)
+                resyncs.append(res)
             rows.append({
                 "table": "FT",
                 "schedule": sched_name,
                 "dropout": dropout,
+                "fault_spec": fault_spec,
                 "steps": steps,
                 "worst_acc": sum(worst_accs) / len(worst_accs),
                 "consensus_err": sum(cons_errs) / len(cons_errs),
+                "faults_detected": sum(detected) / len(detected),
+                "resyncs": sum(resyncs) / len(resyncs),
                 # upper bound (busiest phase, everyone alive), the
                 # participation-aware expectation, and the run's MEASURED
                 # traffic from the jitted realized-bits meter (the per-round
                 # busiest-node realization — lands between the expectation
-                # and the bound; the gap to the bound is the dropout
-                # dividend)
+                # and the bound on masked rounds; under faults it also
+                # carries the digest lane and any dense resync payloads)
                 "bits_per_round": info["bits_per_round"],
                 "bits_per_round_expected": float(
                     trainer.bits_per_round(info["state"], mode="expected")

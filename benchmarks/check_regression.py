@@ -19,6 +19,13 @@ across machines:
 * suite **X** — ``wire_bytes`` of the ppermute backend (a property of the
   compiled HLO, deterministic per jax/XLA version).  Fails when the wire
   bytes *grow* more than ``threshold`` above the baseline.
+* suite **FT** — ``worst_acc`` per (schedule, dropout, fault_spec) row, plus
+  baseline-free fault-mode invariants re-checked on every fresh run: under
+  the ``drop:0.1`` wire-fault spec worst-node accuracy must stay within a
+  fixed band of the fault-free twin row, every faulted row's consensus
+  error must stay within 2x of fault-free (the ISSUE-6 acceptance bar),
+  and the digest layer must have detected (and resynced) at least one
+  divergence — a silent fault injector fails the gate.
 
 Rows present in only one side are reported but do not fail the gate (suites
 grow across PRs); a metric regression does.
@@ -44,6 +51,7 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 GATES = {
     "G": [("speedup_fused_vs_packed", "higher", 1.5)],
     "X": [("wire_bytes", "lower", None)],
+    "FT": [("worst_acc", "higher", None)],
 }
 
 # baseline-free invariants checked on every FRESH suite-X run (they also
@@ -53,8 +61,53 @@ GATES = {
 # regression is ~6x for kq4b and fails instantly.
 MASKED_EDGE_RATIO = 1.1
 
+# suite-FT fault-mode smoke (baseline-free, per fresh run): a `drop:0.1`
+# wire-fault row's worst-node accuracy must land within this fixed band of
+# its fault-free twin (same schedule, same node-dropout), and ANY faulted
+# row's consensus error must stay within FAULT_CONSENSUS_RATIO x fault-free.
+# Key names (`dropout`, `fault_spec`, `faults_detected`, `resyncs`) match
+# bench_faults.py / BENCH_FT.json / the README fault table verbatim.
+FAULT_ACC_BAND = 0.05
+FAULT_CONSENSUS_RATIO = 2.0
+
+
+def _ft_invariant_failures(fresh: dict) -> list:
+    failures = []
+    rows = [dict(r) for r in fresh.values()]
+    clean = {(r["schedule"], r["dropout"]): r
+             for r in rows if r.get("fault_spec", "none") == "none"}
+    for row in rows:
+        spec = row.get("fault_spec", "none")
+        if spec == "none":
+            continue
+        scen = f"{row['schedule']}+{spec}"
+        twin = clean.get((row["schedule"], row["dropout"]))
+        if twin is None:
+            print(f"REGRESSION {scen}: no fault-free twin row to band against")
+            failures.append(((("scenario", scen),), "fault_free_twin", 1.0, 0.0))
+            continue
+        checks = [
+            ("consensus_err", float(row["consensus_err"]),
+             FAULT_CONSENSUS_RATIO * float(twin["consensus_err"]), "<="),
+            ("faults_detected", float(row["faults_detected"]), 0.0, ">"),
+            ("resyncs", float(row["resyncs"]), 0.0, ">"),
+        ]
+        if spec.startswith("drop:0.1"):
+            checks.append(("worst_acc", float(row["worst_acc"]),
+                           float(twin["worst_acc"]) - FAULT_ACC_BAND, ">="))
+        for metric, got, bound, op in checks:
+            ok = got <= bound if op == "<=" else (
+                got > bound if op == ">" else got >= bound)
+            print(f"{'ok' if ok else 'REGRESSION':10s} {scen}: "
+                  f"{metric} {got:.4g} (must be {op} {bound:.4g})")
+            if not ok:
+                failures.append(((("scenario", scen),), metric, bound, got))
+    return failures
+
 
 def _invariant_failures(suite: str, fresh: dict) -> list:
+    if suite == "FT":
+        return _ft_invariant_failures(fresh)
     if suite != "X":
         return []
     failures = []
@@ -80,9 +133,17 @@ def _invariant_failures(suite: str, fresh: dict) -> list:
     return failures
 
 
+# scenario-axis fields that happen to be floats (so the generic "non-numeric
+# fields are the key" rule would silently collapse a sweep onto one row):
+# the node-dropout rate of suite FT.  `fault_spec` is a string and needs no
+# exemption — keep any new fault axis a string for the same reason.
+AXIS_FIELDS = {"dropout"}
+
+
 def _key(row: dict) -> tuple:
     return tuple(
-        (k, v) for k, v in sorted(row.items()) if not isinstance(v, float)
+        (k, v) for k, v in sorted(row.items())
+        if not isinstance(v, float) or k in AXIS_FIELDS
     )
 
 

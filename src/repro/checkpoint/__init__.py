@@ -1,3 +1,17 @@
-from repro.checkpoint.npz import latest_step, restore, save, step_path
+from repro.checkpoint.npz import (
+    all_steps,
+    latest_step,
+    restore,
+    restore_latest,
+    save,
+    step_path,
+)
 
-__all__ = ["latest_step", "restore", "save", "step_path"]
+__all__ = [
+    "all_steps",
+    "latest_step",
+    "restore",
+    "restore_latest",
+    "save",
+    "step_path",
+]

@@ -8,9 +8,14 @@ kill-and-resume.  Arrays are pulled to host (fully addressable) before
 writing — on a real multi-pod run wrap with
 ``jax.experimental.multihost_utils.process_allgather`` first.
 
-Writes are atomic: the payload lands in ``<file>.tmp`` and is ``os.replace``d
-into place, so a run killed mid-save never leaves a truncated checkpoint
-where ``latest_step`` would find it.
+Writes are atomic *and durable*: the payload lands in ``<file>.tmp``, is
+``fsync``ed, ``os.replace``d into place, and the containing directory is
+``fsync``ed too — so a run killed mid-save never leaves a truncated
+checkpoint where ``latest_step`` would find it, and a completed save
+survives power loss.  :func:`restore_latest` is the defensive entry point
+for ``--resume``: it walks the step-tagged files newest-first and falls
+back past any unreadable one (e.g. written by an older non-atomic tool) to
+the last *complete* checkpoint, reporting what it skipped.
 """
 from __future__ import annotations
 
@@ -20,7 +25,14 @@ import re
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "step_path"]
+__all__ = [
+    "save",
+    "restore",
+    "restore_latest",
+    "latest_step",
+    "all_steps",
+    "step_path",
+]
 
 _SEP = "|"
 
@@ -68,11 +80,29 @@ def save(path: str, tree, step: int | None = None) -> str:
     try:
         with open(tmp, "wb") as f:
             np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())  # durable before it becomes visible
         os.replace(tmp, fname)
+        _fsync_dir(os.path.dirname(fname) or ".")  # the rename itself
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)
     return fname
+
+
+def _fsync_dir(dirname: str) -> None:
+    """fsync a directory so a just-completed rename survives power loss.
+    Best-effort: some filesystems refuse O_RDONLY fsync on directories."""
+    try:
+        fd = os.open(dirname, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def restore(fname: str, tree_like):
@@ -98,8 +128,8 @@ def restore(fname: str, tree_like):
     return jax.tree_util.tree_unflatten(tdef, leaves)
 
 
-def latest_step(path: str) -> int | None:
-    """Largest step among `<path>_<step>.npz` files, or None.
+def all_steps(path: str) -> list[int]:
+    """All steps with a `<path>_<step>.npz` file, ascending (may be empty).
 
     Accepts the same ``path`` spelling as :func:`save` (a trailing ``.npz``
     is ignored) and skips in-flight ``.tmp`` files from interrupted saves.
@@ -109,4 +139,32 @@ def latest_step(path: str) -> int | None:
     base = os.path.basename(path)
     pat = re.compile(re.escape(base) + r"_(\d{8})\.npz$")
     steps = [int(m.group(1)) for f in os.listdir(d) if (m := pat.match(f))] if os.path.isdir(d) else []
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(path: str) -> int | None:
+    """Largest step among `<path>_<step>.npz` files, or None."""
+    steps = all_steps(path)
+    return steps[-1] if steps else None
+
+
+def restore_latest(path: str, tree_like, *, log=print):
+    """Restore the newest *loadable* step-tagged checkpoint under ``path``.
+
+    Returns ``(tree, step)``, or ``(None, None)`` when no checkpoint loads.
+    The atomic+fsync :func:`save` never leaves a truncated file under the
+    final name, but checkpoints written by older tools (or copied around)
+    can still be damaged — a corrupt/truncated/mismatched file is reported
+    via ``log`` and skipped, falling back to the last complete one instead
+    of crashing the resume.
+    """
+    for step in reversed(all_steps(path)):
+        fname = step_path(path, step)
+        try:
+            return restore(fname, tree_like), step
+        except Exception as e:  # BadZipFile / KeyError / ValueError / OSError
+            log(
+                f"checkpoint {fname} is unreadable ({type(e).__name__}: {e}); "
+                f"falling back to the previous complete checkpoint"
+            )
+    return None, None

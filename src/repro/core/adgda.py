@@ -106,6 +106,12 @@ class ADGDAConfig:
     # Batch leaves must carry K x the per-node samples.  Composes with any
     # optimizer/momentum (the optimizer state is carried in the trainer
     # state); still mutually exclusive with microbatches > 1.
+    fault_spec: str | None = None  # wire-fault injection, e.g.
+    # "drop:0.05,corrupt:0.01,stale:2" (repro.core.faults.parse_fault_spec):
+    # per-(edge, round) message drop/corrupt/dup/delay at the exchange
+    # boundary, with digest-based divergence detection and staleness-bounded
+    # self-healing resync.  None (or an all-zero spec) keeps today's perfect
+    # wire bit-identically.
     spmd_axis_name: tuple | str | None = None  # mesh axes the node vmap maps
     # to — lets sharding constraints inside the model (context-parallel
     # attention) apply under the per-node vmap
@@ -185,6 +191,7 @@ def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None, *,
         topology, compressor, config.gamma,
         packed=config.packed_gossip, fused=config.fused_gossip,
         backend=config.gossip_backend, mesh=mesh, node_axes=node_axes,
+        faults=config.fault_spec,
     )
     # the dual's own gossip: a static schedule unwraps to its phase topology
     # (plain mix_stacked fast path).  On the rolled backend a time-varying
@@ -199,13 +206,16 @@ def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None, *,
         else topology
     )
     if config.robust:
+        # faults also route the dual through wire_mix: the lambda gossip
+        # rides the same physical (faulted) messages as the model
+        wire_dual = config.gossip_backend == "ppermute" or consensus.faults is not None
         dual = ProjectedAscent(
             prior=prior,
             alpha=config.alpha,
             eta_lambda=config.eta_lambda,
             regularizer=dro.make_regularizer(config.regularizer),
             topology=dual_topology,
-            mix_fn=consensus.wire_mix if config.gossip_backend == "ppermute" else None,
+            mix_fn=consensus.wire_mix if wire_dual else None,
         )
     else:
         dual = FrozenPrior(prior=prior)

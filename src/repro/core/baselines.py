@@ -82,6 +82,10 @@ class DRDSGDConfig:
     gossip_backend: str = "rolled"  # "rolled" | "ppermute" (wire-honest
     # neighbor exchange of the dense f32 models — DR-DSGD's actual wire;
     # requires the factory's mesh kwarg)
+    fault_spec: str | None = None  # wire-fault injection (repro.core.faults):
+    # DR-DSGD's dense wire is memoryless, so a faulted edge is simply cut
+    # from the round's mix (no mirror to heal) and the meter bills only
+    # delivered messages
     track_average: bool = True
 
 
@@ -99,7 +103,7 @@ def drdsgd_trainer(config: DRDSGDConfig, loss_fn: LossFn, prior=None, *,
         dual=KLClosedForm(prior=prior, alpha=config.alpha),
         consensus=ExactConsensus(
             topology, backend=config.gossip_backend, mesh=mesh,
-            node_axes=node_axes,
+            node_axes=node_axes, faults=config.fault_spec,
         ),
         prior=prior,
         track_average=config.track_average,

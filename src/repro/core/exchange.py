@@ -40,13 +40,30 @@ both levels.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compression import Compressor, Identity
-from repro.core.gossip import BLOCK_SCAN_ELEMS, CHOCOState, _round_leaves, _vdecode
+from repro.core.faults import (
+    digest,
+    garble,
+    receiver_maps,
+    sample_events,
+    update_fault_state,
+)
+from repro.core.gossip import (
+    BLOCK_SCAN_ELEMS,
+    CHOCOState,
+    _round_leaves,
+    _scan_plan,
+    _vdecode,
+    payload_total_bits,
+)
 from repro.core.topology import (
     PermutePlan,
     Topology,
@@ -57,7 +74,9 @@ from repro.core.topology import (
 
 __all__ = [
     "choco_round_ppermute",
+    "choco_round_cached_local",
     "mix_stacked_ppermute",
+    "mix_stacked_faulted_local",
     "server_average_ppermute",
     "node_mesh_info",
 ]
@@ -228,7 +247,8 @@ def _slice_bank(bank, phase, idx, block):
     return jax.lax.dynamic_slice_in_dim(row, idx * block, block, axis=row.ndim - 1)
 
 
-def _union_round_weights(union, phase, alive, masked: bool, axes, ndev, block, idx):
+def _union_round_weights(union, phase, alive, masked: bool, axes, ndev, block,
+                         idx, usable=None):
     """This round's wire weights, resolved once per round.
 
     Returns ``(self_w [block], ws list-of-[block], alive_nb list-or-None)``.
@@ -240,13 +260,23 @@ def _union_round_weights(union, phase, alive, masked: bool, axes, ndev, block, i
     travel the same exchanges to form w_ij = a_i a_j / (1 + max(deg_i,
     deg_j)).  ``alive_nb`` (each sender's participation bit, per op) is also
     what gates the receiver-side NeighborCache update.
+
+    ``usable`` ([n_ops, block] f32, faulted wires) additionally masks each
+    receiver's in-edges — an edge whose mirror diverged past the staleness
+    bound is cut from the mix and its weight redistributed by the same
+    surviving-subgraph rescale.  Usability is receiver-side knowledge, so
+    under asymmetric faults W(t) is row- but not column-stochastic (the
+    self-healing layer's documented bias/availability tradeoff; the digest
+    layer bounds how long it persists).
     """
     ops = union.ops
-    if not masked:
+    if not masked and usable is None:
         wb = _slice_bank(jnp.asarray(union.w_bank, jnp.float32), phase, idx, block)
         self_w = _slice_bank(jnp.asarray(union.self_bank, jnp.float32), phase, idx, block)
         return self_w, [wb[k] for k in range(len(ops))], None
     act = _slice_bank(jnp.asarray(union.active, jnp.float32), phase, idx, block)
+    if usable is not None:
+        act = act * usable
     alive_nb = [_recv(alive, op, axes, ndev, block) for op in ops]
     deg = jnp.zeros_like(alive)
     for k, nb in enumerate(alive_nb):
@@ -270,6 +300,93 @@ def _weighted_mix(x, self_w, ws, ops, axes, ndev, block):
     for op, w in zip(ops, ws):
         out = out + _bcast(w, x.ndim) * _recv(xf, op, axes, ndev, block)
     return out
+
+
+# ----------------------------------------------------------- faulted wire
+def _inv_op(op):
+    """The reverse exchange of a union op: moves a receiver-side value to its
+    sender.  The resync-request lane — one ``want`` bit travels *against*
+    each union edge so the sender knows to ship (and bill) the dense hat."""
+    kind, arg = op
+    if kind == "shift":
+        return (kind, -arg)
+    return (kind, tuple((d, s) for (s, d) in arg))
+
+
+def _wire_msg_bits(compressor, theta_template, block_scan_elems):
+    """Static per-message bit sizes on a faulted wire:
+    ``(payload, digest, dense)``.
+
+    ``payload`` — one compressed hat-delta for the whole tree (what every
+    union edge carries every round); ``digest`` — 32 bits per leaf chunk (the
+    chunking is ``_scan_plan``'s, so the lane is billed exactly as it is
+    computed); ``dense`` — the full hat at its own dtype (the resync
+    payload, shipped only on requested edges).
+    """
+    payload = payload_total_bits(compressor, theta_template)
+    dense = dig = 0.0
+    for leaf in jax.tree_util.tree_leaves(theta_template):
+        d = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+        dense += float(d) * leaf.dtype.itemsize * 8.0
+        plan = _scan_plan(leaf.shape, d, block_scan_elems)
+        dig += 32.0 * (plan[1] if plan is not None else 1)
+    return payload, dig, dense
+
+
+class _FaultCtx(NamedTuple):
+    """One round's resolved fault picture on the local node block: the
+    receiver-side message gates (``[n_ops, block]``) plus the sender-side
+    realized-bits meter (``[block]``).  One draw gates the whole message —
+    the hat-delta, its digest, and any resync payload sharing the edge."""
+
+    arrived: jax.Array  # bool: the message landed this round (vs drop/delay)
+    corrupt: jax.Array  # bool: landed garbled — the digest will discard it
+    want: jax.Array  # bool: receiver requests a full-hat resync this round
+    bits: jax.Array  # f32: wire bits this node's own sends realize
+
+
+def _fault_context(faults, fault_key, union, fstate, alive_local, alive_nb,
+                   msg_bits, axes, ndev, block, idx, m):
+    """Sample the round's message events and resolve them into receiver-side
+    gates and sender-side billing.
+
+    Events are drawn on the *global* ``[n_ops, m]`` edge set from the
+    replicated fault key, so every device (and both backends, and a test
+    reconstructing ground truth) classifies the same draw identically; each
+    device then slices its receiver block.  Faults only exist on live edges:
+    a slot with no sender (``senders[k][i] < 0``) or a masked-out sender
+    carries no message to fault — its ``arrived`` is vacuously True so the
+    recovery state machine never ages an edge that had nothing to deliver.
+
+    Billing is *delivered* bits, credited to the sender: drops bill zero,
+    duplicates twice, corrupt/late deliveries once (the bytes moved; the
+    digest just refuses to apply them).  Receiver-indexed event lanes reach
+    the sender through the static receiver maps — no wire traffic to meter
+    the wire — while the ``want`` bit travels the reverse exchange, and a
+    requested resync adds the dense hat to that edge's message.
+    """
+    ev = sample_events(faults, fault_key, union.n_ops, m)
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * block, block, axis=1)
+    exist = sl(jnp.asarray(
+        np.stack([np.asarray(s) >= 0 for s in union.senders]), bool
+    ))
+    live = exist
+    if alive_nb is not None:
+        live = live & (jnp.stack(alive_nb) > 0.0)
+    arrived = jnp.where(live, ~(sl(ev.drop) | sl(ev.delay)), True)
+    corrupt = sl(ev.corrupt) & live
+    want = live & (fstate.stale.T > faults.stale) & (fstate.wait.T <= 0)
+    payload_b, digest_b, dense_b = msg_bits
+    mult = jnp.where(ev.drop, 0.0, jnp.where(ev.dup, 2.0, 1.0))
+    bits = jnp.zeros((block,), jnp.float32)
+    for k, (op, rcv) in enumerate(zip(union.ops, receiver_maps(union))):
+        rcv_l = _local_slice(jnp.asarray(rcv, jnp.int32), idx, block)
+        mult_k = jnp.where(rcv_l >= 0, mult[k][jnp.clip(rcv_l, 0)], 0.0)
+        want_sent = _recv(
+            want[k].astype(jnp.float32), _inv_op(op), axes, ndev, block
+        )
+        bits = bits + mult_k * (payload_b + digest_b + want_sent * dense_b)
+    return _FaultCtx(arrived, corrupt, want, bits * alive_local)
 
 
 # ------------------------------------------------------------- leaf rounds
@@ -321,7 +438,8 @@ def _fused_round_local(leaf, hat, s, key, plan, gamma, compressor,
 
 def _round_leaf_cached(leaf, hat, s, key, caches, union, weights, gamma,
                        compressor: Compressor, alive, masked: bool,
-                       use_payload: bool, axes, ndev, block, idx, m_global):
+                       use_payload: bool, axes, ndev, block, idx, m_global,
+                       fctx=None):
     """Time-varying / fault-tolerant round on the local block — the
     memory-full CHOCO form of ``gossip._round_leaf_masked`` executed against
     the NeighborCache: the averaging step ``sum_j w_ij(t) theta_hat_j`` reads
@@ -336,6 +454,16 @@ def _round_leaf_cached(leaf, hat, s, key, caches, union, weights, gamma,
     encode) and the alive bit riding each exchange gates the mirror update,
     so a mirror of a dead neighbor freezes exactly like the neighbor's own
     hat does.
+
+    ``fctx`` (a :class:`_FaultCtx`) switches the wire to the faulted regime:
+    corrupt messages are garbled in flight, the sender's hat digest rides
+    every message, and the receiver verifies ``digest(mirror + delta)``
+    against it *before* committing — a missing or garbled delta leaves the
+    mirror untouched (and out of this round's ``s`` increment, so the
+    tracker stays consistent with what the mirrors actually did).  A
+    requested resync ships the sender's post-round hat dense on the same
+    message, subject to the same draw.  Returns a fifth element, the
+    ``[2, n_ops, block]`` (delta-ok, resync-ok) verdict for this chunk.
     """
     self_w, ws, alive_nb = weights
     inner_shape, dtype = leaf.shape[1:], leaf.dtype
@@ -355,10 +483,12 @@ def _round_leaf_cached(leaf, hat, s, key, caches, union, weights, gamma,
         payload = jax.vmap(compressor.encode)(resid, node_keys)
         q_self = _vdecode(compressor, payload, inner_shape, jnp.float32) * ab
     hat_new = (hat32 + q_self).astype(hat.dtype)
+    dig_self = digest(hat_new) if fctx is not None else None
     # the wire: one compressed hat-delta per union op (decode commutes with
     # the permute, so decode-after-receive == receive-after-decode bitwise)
     mix_q = _bcast(self_w, leaf.ndim) * q_self
     new_caches = []
+    d_oks, r_oks = [], []
     for k, op in enumerate(union.ops):
         if use_payload and payload is not None:
             recv_p = jax.tree.map(
@@ -369,14 +499,134 @@ def _round_leaf_cached(leaf, hat, s, key, caches, union, weights, gamma,
             q_r = _recv(q_self, op, axes, ndev, block)
         if masked:
             q_r = q_r * _bcast(alive_nb[k], leaf.ndim)
-        new_caches.append((caches[k].astype(jnp.float32) + q_r).astype(caches[k].dtype))
-        mix_q = mix_q + _bcast(ws[k], leaf.ndim) * q_r
+        if fctx is None:
+            new_caches.append(
+                (caches[k].astype(jnp.float32) + q_r).astype(caches[k].dtype)
+            )
+            mix_q = mix_q + _bcast(ws[k], leaf.ndim) * q_r
+            continue
+        cb = _bcast(fctx.corrupt[k], leaf.ndim)
+        q_r = jnp.where(cb, garble(q_r), q_r)
+        cand = (caches[k].astype(jnp.float32) + q_r).astype(caches[k].dtype)
+        dig_nb = _recv(dig_self, op, axes, ndev, block)
+        ok_d = fctx.arrived[k] & (digest(cand) == dig_nb)
+        hat_recv = _recv(hat_new, op, axes, ndev, block)
+        hat_recv = jnp.where(cb, garble(hat_recv), hat_recv)
+        ok_r = fctx.want[k] & fctx.arrived[k] & (digest(hat_recv) == dig_nb)
+        okd_b, okr_b = _bcast(ok_d, leaf.ndim), _bcast(ok_r, leaf.ndim)
+        new_caches.append(
+            jnp.where(okr_b, hat_recv, jnp.where(okd_b, cand, caches[k]))
+        )
+        # only committed deltas enter the tracker increment (a jnp.where,
+        # not a multiply — a garbled q_r may carry NaN bit patterns)
+        mix_q = mix_q + _bcast(ws[k], leaf.ndim) * jnp.where(okd_b, q_r, 0.0)
+        d_oks.append(ok_d)
+        r_oks.append(ok_r)
     s_post = s_cur + mix_q
     s_new = (ab * s_post + (1.0 - ab) * s.astype(jnp.float32)).astype(s.dtype)
-    return theta_new, hat_new, s_new, tuple(new_caches)
+    if fctx is None:
+        return theta_new, hat_new, s_new, tuple(new_caches)
+    verdict = jnp.stack([jnp.stack(d_oks), jnp.stack(r_oks)])
+    return theta_new, hat_new, s_new, tuple(new_caches), verdict
 
 
 # ------------------------------------------------------------------- rounds
+def _cached_round_body(theta, st, key, alive, step_arg, fault_key, *, union,
+                       gamma, compressor, use_packed, masked, faults,
+                       msg_bits, axes, ndev, block, idx, m,
+                       block_scan_elems):
+    """One cached union-wire round on a local node block — the body both
+    backends execute: ``choco_round_ppermute`` shard_maps it over the mesh's
+    node axes; ``choco_round_cached_local`` runs it with the whole node axis
+    as one block (``ndev == 1``).  Sharing the body makes rolled/ppermute
+    bit-parity under faults *structural* rather than something numerics have
+    to deliver."""
+    lv, td = jax.tree_util.tree_flatten(theta)
+    hv = td.flatten_up_to(st.theta_hat)
+    sv = td.flatten_up_to(st.s)
+    keys = jax.random.split(key, len(lv))
+    alive_local = (
+        jnp.ones((block,), jnp.float32) if alive is None
+        else alive.astype(jnp.float32)
+    )
+    phase = (
+        jnp.zeros((), jnp.int32) if union.period == 1
+        else step_arg % union.period
+    )
+    fstate = st.fault
+    usable = None
+    if faults is not None:
+        # an edge past the staleness bound leaves the mix (its weight
+        # redistributes by the surviving-subgraph rescale) until resync lands
+        usable = (fstate.stale.T <= faults.stale).astype(jnp.float32)
+    # the round's mixing weights, resolved ONCE — not per leaf, not per mix
+    # site, and with no lax.switch over phase programs
+    weights = _union_round_weights(
+        union, phase, alive_local, masked, axes, ndev, block, idx, usable
+    )
+    fctx = None
+    if faults is not None:
+        fctx = _fault_context(
+            faults, fault_key, union, fstate, alive_local, weights[2],
+            msg_bits, axes, ndev, block, idx, m,
+        )
+    cache_lv = [td.flatten_up_to(c) for c in st.cache]
+    extra = [
+        tuple(cache_lv[k][i] for k in range(union.n_ops))
+        for i in range(len(lv))
+    ]
+
+    def round_one(leaf, hat, s, k, caches):
+        return _round_leaf_cached(
+            leaf, hat, s, k, caches, union, weights, gamma, compressor,
+            alive_local, masked, use_packed, axes, ndev, block, idx, m,
+            fctx=fctx,
+        )
+
+    verdict_init = (
+        jnp.ones((2, union.n_ops, block), bool) if faults is not None else None
+    )
+    # the chunk layout and per-chunk key stream come from the SAME driver
+    # as the static rolled backend — bit-parity across backends is structural
+    new_theta, new_hat, new_s, new_extra, verdict = _round_leaves(
+        lv, hv, sv, keys, round_one, block_scan_elems,
+        extra_leaves=extra, verdict_init=verdict_init,
+    )
+    unf = lambda ls: jax.tree_util.tree_unflatten(td, ls)
+    cache_new = tuple(
+        unf([new_extra[i][k] for i in range(len(lv))])
+        for k in range(union.n_ops)
+    )
+    fault_new = fstate
+    if faults is not None:
+        fault_new = update_fault_state(
+            fstate, verdict[0], verdict[1], fctx.want, faults, fctx.bits
+        )
+    return unf(new_theta), CHOCOState(
+        theta_hat=unf(new_hat), s=unf(new_s), cache=cache_new,
+        fault=fault_new,
+    )
+
+
+def _check_fault_state(state, faults, fault_key, union):
+    if faults is None:
+        return
+    if fault_key is None:
+        raise ValueError(
+            "faulted rounds need the round's fault_key — one PRNG key per "
+            "round, split from the trainer's per-step stream so kill-and-"
+            "resume replays the same events"
+        )
+    if (not hasattr(state.fault, "stale")
+            or state.fault.stale.shape[-1] != union.n_ops):
+        raise ValueError(
+            "faulted rounds keep a per-edge FaultState in CHOCOState.fault "
+            f"(need one for {union.n_ops} union ops) — initialize the state "
+            "with gossip.choco_init(theta, cache_ops=n, fault_ops=n) or let "
+            "trainer.ChocoConsensus.init size it from the fault spec"
+        )
+
+
 def choco_round_ppermute(
     theta_half,
     state: CHOCOState,
@@ -394,6 +644,8 @@ def choco_round_ppermute(
     step=None,
     mask=None,
     union=None,
+    faults=None,
+    fault_key=None,
 ):
     """One compressed-consensus round on the SPMD neighbor-exchange backend.
 
@@ -414,6 +666,11 @@ def choco_round_ppermute(
     ``gossip.choco_init(theta, cache_ops=...)`` /
     ``trainer.ChocoConsensus.init``): the averaging step reads the cached
     mirrors and only the compressed hat-delta payload travels the wire.
+
+    ``faults`` (a :class:`~repro.core.faults.FaultSpec`) + ``fault_key``
+    switch the wire to the faulted regime — always the cached union path,
+    even for a static topology, because only the NeighborCache form has a
+    mirror to verify and heal.
     """
     from repro.core.wire import compile_union_wire
 
@@ -423,8 +680,10 @@ def choco_round_ppermute(
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     time_varying = (
-        schedule is not None and not getattr(schedule, "is_static", True)
-    ) or mask is not None
+        (schedule is not None and not getattr(schedule, "is_static", True))
+        or mask is not None
+        or faults is not None
+    )
     if time_varying:
         if union is None:
             # standalone use; the consensus layer passes its precompiled
@@ -435,7 +694,6 @@ def choco_round_ppermute(
                 plans = (compile_permute_plan(topology),)
             union = compile_union_wire(plans)
         _check_block(any(k == "perm" for k, _ in union.ops), block, ndev)
-        period = union.period
         use_packed = packed and not isinstance(compressor, Identity)
         use_fused = False
         plan = None
@@ -447,6 +705,7 @@ def choco_round_ppermute(
                 "gossip.choco_init(theta, cache_ops=n) or let "
                 "trainer.ChocoConsensus.init size it from the schedule"
             )
+        _check_fault_state(state, faults, fault_key, union)
     else:
         plan = compile_permute_plan(topology)
         _check_block(not plan.is_circulant, block, ndev)
@@ -457,9 +716,13 @@ def choco_round_ppermute(
             and plan.is_circulant
             and getattr(compressor, "supports_fused_round", False)
         )
-        period = 1
 
     masked = mask is not None
+    faulted = faults is not None
+    msg_bits = (
+        _wire_msg_bits(compressor, theta_half, block_scan_elems)
+        if faulted else None
+    )
     args = [theta_half, state, key]
     specs = [P(axes), P(axes), P()]
     if masked:
@@ -469,68 +732,46 @@ def choco_round_ppermute(
         step_arr = jnp.zeros((), jnp.int32) if step is None else jnp.asarray(step, jnp.int32)
         args.append(step_arr)
         specs.append(P())
+    if faulted:
+        args.append(fault_key)
+        specs.append(P())
 
     def body(theta, st, key, *rest):
         rest = list(rest)
         alive = rest.pop(0) if masked else None
         step_arg = rest.pop(0) if time_varying else None
+        fkey = rest.pop(0) if faulted else None
         idx = _flat_axis_index(axes, sizes)
+
+        if time_varying:
+            return _cached_round_body(
+                theta, st, key, alive, step_arg, fkey, union=union,
+                gamma=gamma, compressor=compressor, use_packed=use_packed,
+                masked=masked, faults=faults, msg_bits=msg_bits,
+                axes=axes, ndev=ndev, block=block, idx=idx, m=m,
+                block_scan_elems=block_scan_elems,
+            )
+
         lv, td = jax.tree_util.tree_flatten(theta)
         hv = td.flatten_up_to(st.theta_hat)
         sv = td.flatten_up_to(st.s)
         keys = jax.random.split(key, len(lv))
 
-        if time_varying:
-            alive_local = (
-                jnp.ones((block,), jnp.float32)
-                if alive is None
-                else alive.astype(jnp.float32)
+        def round_one(leaf, hat, s, k):
+            return _round_leaf_local(
+                leaf, hat, s, k, plan, gamma, compressor, use_packed,
+                use_fused, axes, ndev, block, idx, m,
             )
-            phase = (
-                jnp.zeros((), jnp.int32) if period == 1 else step_arg % period
-            )
-            # the round's mixing weights, resolved ONCE — not per leaf, not
-            # per mix site, and with no lax.switch over phase programs
-            weights = _union_round_weights(
-                union, phase, alive_local, masked, axes, ndev, block, idx
-            )
-            cache_lv = [td.flatten_up_to(c) for c in st.cache]
-            extra = [
-                tuple(cache_lv[k][i] for k in range(union.n_ops))
-                for i in range(len(lv))
-            ]
-
-            def round_one(leaf, hat, s, k, caches):
-                return _round_leaf_cached(
-                    leaf, hat, s, k, caches, union, weights, gamma,
-                    compressor, alive_local, masked, use_packed,
-                    axes, ndev, block, idx, m,
-                )
-
-        else:
-            extra = None
-
-            def round_one(leaf, hat, s, k):
-                return _round_leaf_local(
-                    leaf, hat, s, k, plan, gamma, compressor, use_packed,
-                    use_fused, axes, ndev, block, idx, m,
-                )
 
         # the chunk layout and per-chunk key stream come from the SAME driver
         # as the rolled backend — bit-parity of the two is structural
-        new_theta, new_hat, new_s, new_extra = _round_leaves(
-            lv, hv, sv, keys, round_one, block_scan_elems, extra_leaves=extra
+        new_theta, new_hat, new_s, _, _ = _round_leaves(
+            lv, hv, sv, keys, round_one, block_scan_elems
         )
         unf = lambda ls: jax.tree_util.tree_unflatten(td, ls)
-        if time_varying:
-            cache_new = tuple(
-                unf([new_extra[i][k] for i in range(len(lv))])
-                for k in range(union.n_ops)
-            )
-        else:
-            cache_new = st.cache
         return unf(new_theta), CHOCOState(
-            theta_hat=unf(new_hat), s=unf(new_s), cache=cache_new
+            theta_hat=unf(new_hat), s=unf(new_s), cache=st.cache,
+            fault=st.fault,
         )
 
     fn = shard_map(
@@ -540,9 +781,97 @@ def choco_round_ppermute(
     return fn(*args)
 
 
+def choco_round_cached_local(
+    theta_half,
+    state: CHOCOState,
+    gamma: float,
+    compressor: Compressor,
+    key: jax.Array,
+    *,
+    union=None,
+    packed: bool = True,
+    block_scan_elems: int = BLOCK_SCAN_ELEMS,
+    schedule: TopologySchedule | None = None,
+    topology: Topology | None = None,
+    step=None,
+    mask=None,
+    faults=None,
+    fault_key=None,
+):
+    """The cached union-wire round without a mesh: the whole node axis is one
+    local block (``ndev == 1``), every exchange a local roll/permute.  This
+    is how the rolled backend (``gossip.choco_round``) runs faulted rounds —
+    the *same* ``_cached_round_body`` the ppermute backend shard_maps, so the
+    two backends agree bit-for-bit under faults by construction."""
+    from repro.core.wire import compile_union_wire
+
+    leaves = jax.tree_util.tree_leaves(theta_half)
+    m = leaves[0].shape[0]
+    if union is None:
+        if schedule is not None:
+            plans = compile_schedule_plans(schedule)
+        else:
+            plans = (compile_permute_plan(topology),)
+        union = compile_union_wire(plans)
+    if len(state.cache) != union.n_ops:
+        raise ValueError(
+            "cached union-wire rounds keep a NeighborCache (one theta_hat "
+            f"mirror per union wire op; need {union.n_ops}, state has "
+            f"{len(state.cache)}) — initialize the state with "
+            "gossip.choco_init(theta, cache_ops=n) or let "
+            "trainer.ChocoConsensus.init size it from the schedule"
+        )
+    _check_fault_state(state, faults, fault_key, union)
+    msg_bits = (
+        _wire_msg_bits(compressor, theta_half, block_scan_elems)
+        if faults is not None else None
+    )
+    use_packed = packed and not isinstance(compressor, Identity)
+    step_arr = jnp.zeros((), jnp.int32) if step is None else jnp.asarray(step, jnp.int32)
+    return _cached_round_body(
+        theta_half, state, key, mask, step_arr, fault_key, union=union,
+        gamma=gamma, compressor=compressor, use_packed=use_packed,
+        masked=mask is not None, faults=faults, msg_bits=msg_bits,
+        axes=(), ndev=1, block=m, idx=0, m=m,
+        block_scan_elems=block_scan_elems,
+    )
+
+
+def _dense_msg_bits(tree) -> float:
+    """Bits of one dense-format message (the whole tree at leaf dtype) plus
+    its 32-bit-per-leaf digest lane — what a faulted memoryless mix bills
+    per delivered edge."""
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        d = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+        total += float(d) * leaf.dtype.itemsize * 8.0 + 32.0
+    return total
+
+
+def _memoryless_fault(faults, fault_key, union, dense_msg, axes, ndev, block,
+                      idx, m):
+    """Memoryless fault resolution for the dense-format union mix (exact
+    consensus, lambda gossip): there is no mirror to heal, so a message that
+    dropped / garbled / arrived late simply leaves this round's mix — the
+    digest vets delivery, the masked-Metropolis rescale redistributes the
+    weight, and next round the edge is fresh again.  Returns
+    ``(usable [n_ops, block] f32, bits [block] f32)`` — usability for the
+    weight recompute, delivered bits (dup bills twice) for the meter."""
+    ev = sample_events(faults, fault_key, union.n_ops, m)
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * block, block, axis=1)
+    usable = sl(~(ev.drop | ev.corrupt | ev.delay)).astype(jnp.float32)
+    mult = jnp.where(ev.drop, 0.0, jnp.where(ev.dup, 2.0, 1.0))
+    bits = jnp.zeros((block,), jnp.float32)
+    for k, rcv in enumerate(receiver_maps(union)):
+        rcv_l = _local_slice(jnp.asarray(rcv, jnp.int32), idx, block)
+        bits = bits + jnp.where(rcv_l >= 0, mult[k][jnp.clip(rcv_l, 0)], 0.0)
+    return usable, bits * dense_msg
+
+
 def mix_stacked_ppermute(tree, topology: Topology, *, mesh, node_axes="data",
                          schedule: TopologySchedule | None = None,
-                         step=None, mask=None, union=None):
+                         step=None, mask=None, union=None,
+                         faults=None, fault_key=None):
     """Uncompressed (dense-format) gossip mix of a stacked pytree over the
     neighbor-exchange wire — the SPMD counterpart of ``gossip.mix_stacked``
     / ``mix_stacked_with``.  The dual/lambda gossip and
@@ -550,15 +879,21 @@ def mix_stacked_ppermute(tree, topology: Topology, *, mesh, node_axes="data",
     when the ppermute backend is on; ``schedule``/``step``/``mask`` select
     the round's weights from the union wire's per-phase banks (dense [m, m]
     matrices never exist on this path — dropped nodes degenerate to the
-    identity row locally, exactly like ``masked_metropolis``)."""
+    identity row locally, exactly like ``masked_metropolis``).
+
+    ``faults`` + ``fault_key`` run the memoryless faulted regime (see
+    :func:`_memoryless_fault`); the call then returns ``(mixed, bits)`` with
+    ``bits`` the [m] per-sender delivered-bits meter."""
     leaves = jax.tree_util.tree_leaves(tree)
     m = leaves[0].shape[0]
     axes, ndev, block = node_mesh_info(mesh, node_axes, m)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     time_varying = (
-        schedule is not None and not getattr(schedule, "is_static", True)
-    ) or mask is not None
+        (schedule is not None and not getattr(schedule, "is_static", True))
+        or mask is not None
+        or faults is not None
+    )
     if not time_varying:
         plan = compile_permute_plan(topology)
         _check_block(not plan.is_circulant, block, ndev)
@@ -581,6 +916,10 @@ def mix_stacked_ppermute(tree, topology: Topology, *, mesh, node_axes="data",
         union = compile_union_wire(plans)
     _check_block(any(k == "perm" for k, _ in union.ops), block, ndev)
     masked = mask is not None
+    faulted = faults is not None
+    if faulted and fault_key is None:
+        raise ValueError("faulted mixes need the round's fault_key")
+    dense_msg = _dense_msg_bits(tree) if faulted else 0.0
 
     args = [tree]
     specs = [P(axes)]
@@ -590,11 +929,15 @@ def mix_stacked_ppermute(tree, topology: Topology, *, mesh, node_axes="data",
     step_arr = jnp.zeros((), jnp.int32) if step is None else jnp.asarray(step, jnp.int32)
     args.append(step_arr)
     specs.append(P())
+    if faulted:
+        args.append(fault_key)
+        specs.append(P())
 
     def body_tv(t, *rest):
         rest = list(rest)
         alive = rest.pop(0) if masked else None
         step_arg = rest.pop(0)
+        fkey = rest.pop(0) if faulted else None
         idx = _flat_axis_index(axes, sizes)
         alive_local = (
             jnp.ones((block,), jnp.float32) if alive is None
@@ -604,19 +947,68 @@ def mix_stacked_ppermute(tree, topology: Topology, *, mesh, node_axes="data",
             jnp.zeros((), jnp.int32) if union.period == 1
             else step_arg % union.period
         )
+        usable, bits = None, None
+        if faulted:
+            usable, bits = _memoryless_fault(
+                faults, fkey, union, dense_msg, axes, ndev, block, idx, m
+            )
+            bits = bits * alive_local
         self_w, ws, _ = _union_round_weights(
-            union, phase, alive_local, masked, axes, ndev, block, idx
+            union, phase, alive_local, masked, axes, ndev, block, idx, usable
         )
-        return jax.tree.map(
+        mixed = jax.tree.map(
             lambda x: _weighted_mix(
                 x, self_w, ws, union.ops, axes, ndev, block
             ).astype(x.dtype),
             t,
         )
+        return (mixed, bits) if faulted else mixed
 
+    out_specs = (P(axes), P(axes)) if faulted else P(axes)
     return shard_map(
-        body_tv, mesh, in_specs=tuple(specs), out_specs=P(axes), check_rep=False
+        body_tv, mesh, in_specs=tuple(specs), out_specs=out_specs, check_rep=False
     )(*args)
+
+
+def mix_stacked_faulted_local(tree, *, union=None, topology=None,
+                              schedule=None, step=None, mask=None,
+                              faults, fault_key):
+    """The memoryless faulted mix without a mesh (rolled backend): the whole
+    node axis is one local block, same code path as the ppermute body — the
+    two agree bit-for-bit by construction.  Returns ``(mixed, bits)``."""
+    from repro.core.wire import compile_union_wire
+
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    if union is None:
+        if schedule is not None:
+            plans = compile_schedule_plans(schedule)
+        else:
+            plans = (compile_permute_plan(topology),)
+        union = compile_union_wire(plans)
+    if fault_key is None:
+        raise ValueError("faulted mixes need the round's fault_key")
+    alive = (
+        jnp.ones((m,), jnp.float32) if mask is None
+        else mask.astype(jnp.float32)
+    )
+    step_arr = jnp.zeros((), jnp.int32) if step is None else jnp.asarray(step, jnp.int32)
+    phase = (
+        jnp.zeros((), jnp.int32) if union.period == 1
+        else step_arr % union.period
+    )
+    usable, bits = _memoryless_fault(
+        faults, fault_key, union, _dense_msg_bits(tree), (), 1, m, 0, m
+    )
+    bits = bits * alive
+    self_w, ws, _ = _union_round_weights(
+        union, phase, alive, mask is not None, (), 1, m, 0, usable
+    )
+    mixed = jax.tree.map(
+        lambda x: _weighted_mix(x, self_w, ws, union.ops, (), 1, m).astype(x.dtype),
+        tree,
+    )
+    return mixed, bits
 
 
 def server_average_ppermute(tree, sampled, *, mesh, node_axes="data"):

@@ -1,0 +1,339 @@
+"""Message-level wire faults and the self-healing machinery that survives them.
+
+The NeighborCache contract (repro.core.wire) assumes every compressed
+hat-delta arrives intact on every union edge every round — one lost or
+garbled payload silently diverges the receiver's mirror of the sender's
+``theta_hat`` forever, and the memory-full averaging then gossips against a
+phantom neighbor (the same biased-fixed-point failure mode PR 3 eliminated
+for time-varying W).  This module makes that failure injectable, detectable
+and recoverable:
+
+* :class:`FaultSpec` — the seeded fault model: per-edge per-round i.i.d.
+  message events (``drop`` / ``corrupt`` / ``dup`` / ``delay``), the bounded
+  staleness ``stale`` (S) a diverged mirror is still mixed for, and the
+  exponential resync backoff.  Parsed from the CLI syntax
+  ``"drop:0.05,corrupt:0.01,stale:2"``.
+
+* :func:`sample_events` — one uniform draw per (union op, receiver) per
+  round, classified into the event lanes.  The draw is a pure function of
+  the round's fault key, so both exchange backends (and a test
+  reconstructing ground truth) see byte-identical events.
+
+* :func:`digest` — the detection primitive: a 32-bit wraparound sum of the
+  tensor's integer-bitcast bits.  Integer addition commutes and wraps
+  identically everywhere, so ``digest(x) == digest(y)`` iff the byte content
+  matches (up to the 2^-32 collision budget) regardless of evaluation order
+  or backend.  The sender's per-leaf-chunk digest of its post-round
+  ``theta_hat`` rides every union edge (32 bits per chunk — the digest
+  lane); the receiver verifies ``digest(mirror + delta)`` against it
+  *before* committing the delta, so divergence is detected the round it
+  happens and garbage is never applied.
+
+* :class:`FaultState` — the per-edge recovery state machine, stored inside
+  :class:`~repro.core.gossip.CHOCOState` so kill-and-resume mid-faulted-run
+  is bit-identical: synced flags, staleness counters, resync wait/backoff,
+  and the realized-bits meter (delivered payloads + resync traffic + digest
+  lane — what ``bits_realized`` bills).
+
+Event semantics (whole-message: one draw gates the delta, its digest, and
+any resync payload sharing the edge that round):
+
+========  ==========================  =================================
+event     wire effect                 receiver outcome (digest-verified)
+========  ==========================  =================================
+drop      nothing arrives             mirror misses the delta -> diverged
+corrupt   payload garbled in flight   digest mismatch -> discarded -> diverged
+dup       two copies arrive           1st verifies and applies, 2nd fails
+                                      the digest (mirror already advanced)
+                                      -> deduplicated; bills 2x
+delay     arrives after the round     discarded as stale on arrival ==
+                                      drop for state; bills 1x
+========  ==========================  =================================
+
+Recovery: a diverged mirror is still a *valid past value* of the neighbor's
+hat, so it stays in the masked-Metropolis mix for up to S further rounds
+(bounded staleness).  Beyond S the edge is dropped from the mix (PR 3's
+surviving-subgraph rescale redistributes its weight) and the receiver
+requests a full-hat resync — the sender ships its current ``theta_hat``
+dense at the hat dtype (a lossy compressed resync would re-diverge the
+mirror by the compression error forever; this is the documented departure
+from the issue's "compressed full-hat", mirroring PR 5's exactness
+argument).  Resync deliveries ride the same faulty wire: a failed attempt
+doubles the per-edge backoff (capped), a verified one restores the mirror
+bit-exact and resets the edge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FaultSpec",
+    "FaultState",
+    "FaultEvents",
+    "WireBits",
+    "parse_fault_spec",
+    "sample_events",
+    "digest",
+    "garble",
+    "init_fault_state",
+    "update_fault_state",
+    "receiver_maps",
+]
+
+
+# ================================================================= FaultSpec
+_RATE_KEYS = ("drop", "corrupt", "dup", "delay")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded message-fault model for the union wire.
+
+    ``drop``/``corrupt``/``dup``/``delay`` are per-edge per-round i.i.d.
+    event probabilities (mutually exclusive lanes of one uniform draw);
+    ``stale`` is the bounded-staleness budget S — how many rounds a diverged
+    mirror may still be mixed before the edge is cut and resync starts;
+    ``backoff_base``/``backoff_cap`` shape the exponential resync retry
+    schedule (wait = base^k rounds after the k-th failed attempt, capped).
+    """
+
+    drop: float = 0.0
+    corrupt: float = 0.0
+    dup: float = 0.0
+    delay: float = 0.0
+    stale: int = 2
+    backoff_base: int = 2
+    backoff_cap: int = 32
+
+    def __post_init__(self):
+        for k in _RATE_KEYS:
+            v = getattr(self, k)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"fault rate {k}={v} must be in [0, 1]")
+        if sum(getattr(self, k) for k in _RATE_KEYS) > 1.0:
+            raise ValueError("fault rates must sum to <= 1 (one event per message)")
+        if self.stale < 0:
+            raise ValueError(f"stale bound must be >= 0, got {self.stale}")
+        if self.backoff_base < 1 or self.backoff_cap < 1:
+            raise ValueError("backoff base/cap must be >= 1")
+
+    @property
+    def active(self) -> bool:
+        """Whether any fault lane can fire — inactive specs must leave every
+        code path byte-identical to ``faults=None``."""
+        return any(getattr(self, k) > 0.0 for k in _RATE_KEYS)
+
+    def __str__(self) -> str:
+        parts = [f"{k}:{getattr(self, k):g}" for k in _RATE_KEYS if getattr(self, k) > 0]
+        parts.append(f"stale:{self.stale}")
+        return ",".join(parts)
+
+
+def parse_fault_spec(spec) -> FaultSpec | None:
+    """``"drop:0.05,corrupt:0.01,stale:2"`` -> :class:`FaultSpec`.
+
+    Accepts an existing spec (returned as-is), None/"" (no faults), the rate
+    keys, ``stale`` and ``backoff``/``backoff_cap``.  A spec whose rates are
+    all zero parses to None — "no faults configured" and "faults at rate 0"
+    are the same program, and tests pin that equivalence.
+    """
+    if spec is None or isinstance(spec, FaultSpec):
+        return spec if spec is None or spec.active else None
+    text = str(spec).strip()
+    if not text:
+        return None
+    kw: dict[str, Any] = {}
+    for item in text.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if ":" not in item:
+            raise ValueError(
+                f"bad fault-spec item {item!r}; expected key:value pairs like "
+                "'drop:0.05,corrupt:0.01,stale:2'"
+            )
+        k, v = (s.strip() for s in item.split(":", 1))
+        if k in _RATE_KEYS:
+            kw[k] = float(v)
+        elif k == "stale":
+            kw["stale"] = int(v)
+        elif k in ("backoff", "backoff_base"):
+            kw["backoff_base"] = int(v)
+        elif k == "backoff_cap":
+            kw["backoff_cap"] = int(v)
+        else:
+            raise ValueError(
+                f"unknown fault-spec key {k!r}; valid: "
+                f"{', '.join(_RATE_KEYS + ('stale', 'backoff', 'backoff_cap'))}"
+            )
+    out = FaultSpec(**kw)
+    return out if out.active else None
+
+
+# ============================================================== fault events
+class FaultEvents(NamedTuple):
+    """One round's classified message events, [n_ops, m] each (global node
+    axis — every device derives the same arrays from the replicated fault
+    key, so receiver-side gating and sender-side billing agree by
+    construction)."""
+
+    drop: jax.Array  # bool: nothing arrives
+    corrupt: jax.Array  # bool: arrives garbled, digest discards it
+    dup: jax.Array  # bool: arrives twice, second copy deduplicated
+    delay: jax.Array  # bool: arrives too late, discarded == drop
+
+
+def sample_events(spec: FaultSpec, key: jax.Array, n_ops: int, m: int) -> FaultEvents:
+    """Classify one uniform draw per (op, receiver) into the event lanes.
+
+    Pure function of ``key`` — the rolled and ppermute backends (and tests
+    reconstructing ground truth) call this with the same round key and get
+    byte-identical events.
+    """
+    u = jax.random.uniform(key, (n_ops, m))
+    t0 = spec.drop
+    t1 = t0 + spec.corrupt
+    t2 = t1 + spec.dup
+    t3 = t2 + spec.delay
+    return FaultEvents(
+        drop=u < t0,
+        corrupt=(u >= t0) & (u < t1),
+        dup=(u >= t1) & (u < t2),
+        delay=(u >= t2) & (u < t3),
+    )
+
+
+# ==================================================================== digest
+def digest(x: jax.Array, axis_start: int = 1) -> jax.Array:
+    """32-bit wraparound checksum of the raw bits, reduced over the inner
+    dims: [block, ...] -> [block] int32.
+
+    Bitcast to the same-width integer type, widen to int32, sum (int32
+    addition wraps identically on every backend, and commutes — the
+    reduction order XLA picks cannot change the value).  Two arrays digest
+    equal iff their byte content matches, modulo the 2^-32 collision
+    budget; in particular a mirror kept bit-identical to the sender's hat
+    (the PR 5 invariant) digests equal *by construction*, with no dtype or
+    rounding caveats.
+    """
+    nbits = x.dtype.itemsize * 8
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        x = jax.lax.bitcast_convert_type(x, jnp.dtype(f"int{nbits}"))
+    x = x.astype(jnp.int32)
+    axes = tuple(range(axis_start, x.ndim))
+    return x.sum(axes) if axes else x
+
+
+_GARBLE32 = np.int32(np.uint32(0x5A5A5A5A).view(np.int32))
+_GARBLE16 = np.int16(np.uint16(0x5A5A).view(np.int16))
+
+
+def garble(x: jax.Array) -> jax.Array:
+    """Deterministic in-flight corruption: XOR every element's bits with a
+    fixed pattern.  Bijective (so distinct payloads stay distinct) and never
+    the identity, which makes the digest mismatch structural rather than
+    probabilistic."""
+    nbits = x.dtype.itemsize * 8
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return x ^ jnp.asarray(_GARBLE16 if nbits == 16 else _GARBLE32, x.dtype)
+    it = jnp.dtype(f"int{nbits}")
+    bits = jax.lax.bitcast_convert_type(x, it)
+    bits = bits ^ jnp.asarray(_GARBLE16 if nbits == 16 else _GARBLE32, it)
+    return jax.lax.bitcast_convert_type(bits, x.dtype)
+
+
+# ================================================================ FaultState
+class FaultState(NamedTuple):
+    """Per-edge recovery state machine + realized-bits meter.
+
+    Edge arrays are [m, n_ops] (receiver-major so the node axis shards like
+    every other stacked leaf); telemetry is per-node [m].  Lives in
+    ``CHOCOState.fault`` and threads through checkpoints untouched — resume
+    restores the exact staleness/backoff/meter picture, which is what makes
+    kill-and-resume under faults bit-identical.
+    """
+
+    synced: jax.Array  # [m, n_ops] f32: 1 = mirror bit-identical to sender hat
+    stale: jax.Array  # [m, n_ops] i32: rounds since the mirror last verified
+    wait: jax.Array  # [m, n_ops] i32: rounds until the next resync attempt
+    backoff: jax.Array  # [m, n_ops] i32: failed-resync count (wait = base^k)
+    detected: jax.Array  # [m] i32: cumulative divergence detections (receiver)
+    resyncs: jax.Array  # [m] i32: cumulative verified resyncs (receiver)
+    bits: jax.Array  # [m] f32: wire bits this node delivered last round
+
+
+def init_fault_state(m: int, n_ops: int) -> FaultState:
+    return FaultState(
+        synced=jnp.ones((m, n_ops), jnp.float32),
+        stale=jnp.zeros((m, n_ops), jnp.int32),
+        wait=jnp.zeros((m, n_ops), jnp.int32),
+        backoff=jnp.zeros((m, n_ops), jnp.int32),
+        detected=jnp.zeros((m,), jnp.int32),
+        resyncs=jnp.zeros((m,), jnp.int32),
+        bits=jnp.zeros((m,), jnp.float32),
+    )
+
+
+def update_fault_state(fs: FaultState, delta_ok, resync_ok, want,
+                       spec: FaultSpec, bits_sent) -> FaultState:
+    """Advance the per-edge recovery state machine by one round.
+
+    ``delta_ok`` / ``resync_ok`` / ``want`` are op-major ``[n_ops, block]``
+    (the layout the round body produces them in); the state arrays are
+    receiver-major ``[block, n_ops]`` (the layout they shard in).  An edge is
+    *verified* this round when either its hat-delta applied cleanly or a
+    requested resync landed; any other outcome ages the mirror.  A
+    wanted-but-failed resync escalates the retry schedule — the next attempt
+    waits ``base^(k+1)`` rounds (capped) after the k-th failure — while a
+    verified edge resets staleness, wait and backoff to zero.
+    """
+    d_ok, r_ok, want_t = delta_ok.T, resync_ok.T, want.T
+    now = d_ok | r_ok
+    newly = (fs.synced > 0.0) & ~now
+    failed = want_t & ~r_ok
+    # the power in f32: the exponent is traced, and an int32 base**k would
+    # silently wrap past k ~ 31; inf from a huge base still minimums to cap
+    pw = jnp.minimum(
+        jnp.power(jnp.float32(spec.backoff_base),
+                  jnp.minimum(fs.backoff + 1, 16).astype(jnp.float32)),
+        jnp.float32(spec.backoff_cap),
+    ).astype(jnp.int32)
+    return FaultState(
+        synced=now.astype(jnp.float32),
+        stale=jnp.where(now, 0, fs.stale + 1),
+        wait=jnp.where(now, 0, jnp.where(failed, pw, jnp.maximum(fs.wait - 1, 0))),
+        backoff=jnp.where(now, 0, jnp.where(failed, fs.backoff + 1, fs.backoff)),
+        detected=fs.detected + newly.sum(1).astype(jnp.int32),
+        resyncs=fs.resyncs + (want_t & r_ok).sum(1).astype(jnp.int32),
+        bits=bits_sent,
+    )
+
+
+class WireBits(NamedTuple):
+    """Realized-bits meter for *memoryless* faulted wires (exact consensus,
+    the dual/lambda gossip): there are no mirrors to heal — a faulted message
+    simply leaves that round's mix — so the whole per-round fault state is
+    the bits each node's sends actually delivered.  Kept as a NamedTuple so
+    the consensus state keeps a stable pytree structure whether or not a
+    fault spec is active on the exact path."""
+
+    bits: jax.Array  # [m] f32
+
+
+def receiver_maps(union) -> tuple[np.ndarray, ...]:
+    """Static inverse of the union's sender maps: ``rcv[k][j]`` = the node
+    that receives node ``j``'s message on op ``k`` (-1 when ``j`` does not
+    send).  Lets sender-side billing gather receiver-indexed event arrays
+    with static indices — no extra wire traffic to meter the wire."""
+    out = []
+    for snd in union.senders:
+        rcv = np.full_like(np.asarray(snd, np.int64), -1)
+        idx = np.nonzero(np.asarray(snd) >= 0)[0]
+        rcv[np.asarray(snd)[idx]] = idx
+        out.append(rcv)
+    return tuple(out)

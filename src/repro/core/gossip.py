@@ -49,24 +49,35 @@ __all__ = [
 class CHOCOState(NamedTuple):
     theta_hat: object  # pytree, leaves [m, ...]
     s: object  # pytree, leaves [m, ...]
-    # NeighborCache (time-varying ppermute wire only): tuple over union wire
-    # ops of theta_hat-shaped mirrors of each in-neighbor's public copy —
-    # see repro.core.wire.  () for every other configuration.
+    # NeighborCache (cached union wire only): tuple over union wire ops of
+    # theta_hat-shaped mirrors of each in-neighbor's public copy — see
+    # repro.core.wire.  () for every other configuration.
     cache: Any = ()
+    # Per-edge fault-recovery state machine (repro.core.faults.FaultState):
+    # synced/staleness/backoff counters + the realized-bits meter.  () unless
+    # a FaultSpec is active — faults off adds no leaves, so existing
+    # checkpoints restore unchanged.
+    fault: Any = ()
 
 
-def choco_init(theta_stacked, *, cache_ops: int = 0) -> CHOCOState:
+def choco_init(theta_stacked, *, cache_ops: int = 0,
+               fault_ops: int | None = None) -> CHOCOState:
     """Fresh CHOCO trackers.  ``cache_ops > 0`` additionally allocates the
-    NeighborCache for a time-varying ppermute wire (one ``theta_hat`` mirror
-    per union exchange op — ``ChocoConsensus.init`` sizes this from its
-    compiled :class:`~repro.core.wire.UnionWirePlan`)."""
+    NeighborCache for a cached union wire (one ``theta_hat`` mirror per
+    union exchange op — ``ChocoConsensus.init`` sizes this from its compiled
+    :class:`~repro.core.wire.UnionWirePlan`).  ``fault_ops`` (the same op
+    count) additionally allocates the per-edge
+    :class:`~repro.core.faults.FaultState` when a fault spec is active."""
+    from repro.core.faults import init_fault_state
     from repro.core.wire import init_neighbor_cache
 
+    m = jax.tree_util.tree_leaves(theta_stacked)[0].shape[0]
     zeros = jax.tree.map(jnp.zeros_like, theta_stacked)
     return CHOCOState(
         theta_hat=zeros,
         s=jax.tree.map(jnp.zeros_like, theta_stacked),
         cache=init_neighbor_cache(theta_stacked, cache_ops) if cache_ops else (),
+        fault=init_fault_state(m, fault_ops) if fault_ops is not None else (),
     )
 
 
@@ -262,6 +273,8 @@ def choco_round(
     schedule=None,
     step=None,
     union=None,
+    faults=None,
+    fault_key=None,
 ):
     """One compressed-consensus round over all leaves of a stacked pytree.
 
@@ -293,6 +306,13 @@ def choco_round(
     packed/fused dispatch (the wire pattern is round-dependent); with
     ``mixing is None and mask is None`` the static fast paths are taken and
     the round is bit-identical to pre-schedule behavior.
+
+    ``faults`` (a :class:`~repro.core.faults.FaultSpec`) + ``fault_key``
+    enter the message-fault regime: the round runs against the NeighborCache
+    on the union wire program (``union`` required — both backends share the
+    cached round body, the rolled one executing it with the whole node axis
+    as a single local block) with per-edge drop/corrupt/dup/delay events,
+    digest verification and staleness/resync recovery (repro.core.faults).
     """
     if backend == "ppermute":
         from repro.core.exchange import choco_round_ppermute
@@ -308,10 +328,22 @@ def choco_round(
             theta_half, state, topology, gamma, compressor, key,
             mesh=mesh, node_axes=node_axes, packed=packed, fused=fused,
             block_scan_elems=block_scan_elems, schedule=schedule, step=step,
-            mask=mask, union=union,
+            mask=mask, union=union, faults=faults, fault_key=fault_key,
         )
     if backend != "rolled":
         raise ValueError(f"unknown gossip backend {backend!r}; choose rolled or ppermute")
+    if faults is not None:
+        # faulted rounds run the cached union-wire body (the same code the
+        # ppermute backend shard_maps) with the whole node axis as one local
+        # block — rolled/ppermute bit-parity under faults is structural
+        from repro.core.exchange import choco_round_cached_local
+
+        return choco_round_cached_local(
+            theta_half, state, gamma, compressor, key, union=union,
+            packed=packed, block_scan_elems=block_scan_elems,
+            schedule=schedule, topology=topology, step=step, mask=mask,
+            faults=faults, fault_key=fault_key,
+        )
     if schedule is not None or step is not None or union is not None:
         raise ValueError(
             "backend='rolled' does not consume schedule/step — resolve the "
@@ -342,7 +374,7 @@ def choco_round(
         return _round_leaf(leaf, hat, s, k, topology, gamma, compressor,
                            use_packed, use_fused)
 
-    new_theta, new_hat, new_s, _ = _round_leaves(
+    new_theta, new_hat, new_s, _, _ = _round_leaves(
         leaves, hat_leaves, s_leaves, keys, round_one, block_scan_elems
     )
     unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
@@ -350,12 +382,13 @@ def choco_round(
     # oracle re-mixes the full hats); pass it through so state shapes are
     # stable across backends
     return unf(new_theta), CHOCOState(
-        theta_hat=unf(new_hat), s=unf(new_s), cache=state.cache
+        theta_hat=unf(new_hat), s=unf(new_s), cache=state.cache,
+        fault=state.fault,
     )
 
 
 def _round_leaves(leaves, hat_leaves, s_leaves, keys, round_one,
-                  block_scan_elems: int, extra_leaves=None):
+                  block_scan_elems: int, extra_leaves=None, verdict_init=None):
     """Apply ``round_one(leaf, hat, s, key)`` to every stacked leaf, scanning
     large leaves in _scan_plan chunks.  Shared by the rolled backend above
     and the SPMD backend (core/exchange.py): the chunk layout and the
@@ -363,15 +396,26 @@ def _round_leaves(leaves, hat_leaves, s_leaves, keys, round_one,
     ``_scan_plan`` reads only the inner dims, which a device-local shard
     shares with the global leaf.
 
-    ``extra_leaves`` (SPMD cached wire only): per-leaf tuples of extra
+    ``extra_leaves`` (cached union wire only): per-leaf tuples of extra
     leaf-shaped arrays (the NeighborCache mirrors) chunked alongside; the
     callback then has the signature ``round_one(leaf, hat, s, key, extras)
-    -> (theta, hat, s, extras)``.  Returns ``(theta, hat, s, extras)`` leaf
-    lists, with ``extras`` ``None`` when no extra leaves were passed.
+    -> (theta, hat, s, extras)``.
+
+    ``verdict_init`` (faulted wire only, implies ``extra_leaves``): a bool
+    array the callback's extra trailing return value is AND-reduced into —
+    across scan chunks (the scan carry) and across leaves.  Fault events are
+    whole-message, so a per-edge digest verdict must hold for *every* leaf
+    chunk of the message; the reduction happens here so the chunked and
+    unchunked layouts agree bit-for-bit.
+
+    Returns ``(theta, hat, s, extras, verdict)`` leaf lists, with ``extras``
+    / ``verdict`` ``None`` when not requested.
     """
     has_extra = extra_leaves is not None
+    has_verdict = verdict_init is not None
     new_theta, new_hat, new_s = [], [], []
     new_extra = [] if has_extra else None
+    verdict = verdict_init
     for i, (leaf, hat, s, k) in enumerate(zip(leaves, hat_leaves, s_leaves, keys)):
         extras = extra_leaves[i] if has_extra else ()
         inner_elems = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
@@ -390,7 +434,7 @@ def _round_leaves(leaves, hat_leaves, s_leaves, keys, round_one,
             ec = tuple(reshape(e) for e in extras)
             bk = jax.random.split(k, chunks)
 
-            def body(_, xs, lc=lc, hc=hc, sc=sc, ec=ec, axis=axis):
+            def body(carry, xs, lc=lc, hc=hc, sc=sc, ec=ec, axis=axis):
                 i, kb = xs
                 take = lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=axis, keepdims=False)
                 if has_extra:
@@ -398,9 +442,12 @@ def _round_leaves(leaves, hat_leaves, s_leaves, keys, round_one,
                                     tuple(take(e) for e in ec))
                 else:
                     out = round_one(take(lc), take(hc), take(sc), kb)
-                return None, out
+                if has_verdict:
+                    return carry & out[-1], out[:-1]
+                return carry, out
 
-            _, ys = jax.lax.scan(body, None, (jnp.arange(chunks), bk))
+            init = jnp.ones_like(verdict_init) if has_verdict else None
+            vc, ys = jax.lax.scan(body, init, (jnp.arange(chunks), bk))
 
             def unshape(x, axis=axis, shape=leaf.shape):
                 # ys: [chunks, <leaf dims without the chunk axis position>]
@@ -410,6 +457,10 @@ def _round_leaves(leaves, hat_leaves, s_leaves, keys, round_one,
             out = jax.tree.map(unshape, ys)
         else:
             out = round_one(leaf, hat, s, k, extras) if has_extra else round_one(leaf, hat, s, k)
+            if has_verdict:
+                out, vc = out[:-1], out[-1]
+        if has_verdict:
+            verdict = verdict & vc
         if has_extra:
             theta_new, hat_new, s_new, ex_new = out
             new_extra.append(ex_new)
@@ -418,7 +469,7 @@ def _round_leaves(leaves, hat_leaves, s_leaves, keys, round_one,
         new_theta.append(theta_new)
         new_hat.append(hat_new)
         new_s.append(s_new)
-    return new_theta, new_hat, new_s, new_extra
+    return new_theta, new_hat, new_s, new_extra, (verdict if has_verdict else None)
 
 
 def payload_total_bits(compressor: Compressor, theta_template) -> float:

@@ -54,6 +54,7 @@ import numpy as np
 from repro.core import dro
 from repro.core.compression import Compressor, Identity
 from repro.core import wire
+from repro.core.faults import WireBits, parse_fault_spec
 from repro.core.gossip import (
     BLOCK_SCAN_ELEMS,
     CHOCOState,
@@ -65,7 +66,12 @@ from repro.core.gossip import (
     payload_bits,
     payload_total_bits,
 )
-from repro.core.topology import Topology, TopologySchedule, compile_schedule_plans
+from repro.core.topology import (
+    Topology,
+    TopologySchedule,
+    compile_permute_plan,
+    compile_schedule_plans,
+)
 from repro.optim import Optimizer, OptState, Schedule
 
 __all__ = [
@@ -282,13 +288,16 @@ class DualUpdate:
     def update(self, lam: jax.Array, losses: jax.Array, ctx, *,
                mixing: jax.Array | None = None,
                mask: jax.Array | None = None,
-               step=None) -> jax.Array:
+               step=None, fault_key=None) -> jax.Array:
         """Advance lambda.  Under a time-varying/fault-tolerant consensus the
         trainer passes the round index ``step``, the participation ``mask``,
         and — on the rolled backend only — the round's dense ``mixing``
         matrix, so dual gossip travels the same wire as the model (the
         ppermute backend has no dense matrix: the dual rides the union-wire
-        ``mix_fn`` instead); duals that don't gossip ignore them."""
+        ``mix_fn`` instead); duals that don't gossip ignore them.
+        ``fault_key`` is the round's message-fault key when a FaultSpec is
+        active — the lambda gossip rides the *same* physical messages as the
+        model, so it sees the same event draw."""
         raise NotImplementedError
 
     def bits_per_round(self) -> float:
@@ -328,7 +337,8 @@ class ProjectedAscent(DualUpdate):
     def grad_weights(self, lam, losses):
         return (jnp.diagonal(lam) / self.prior).astype(jnp.float32)
 
-    def update(self, lam, losses, ctx, *, mixing=None, mask=None, step=None):
+    def update(self, lam, losses, ctx, *, mixing=None, mask=None, step=None,
+               fault_key=None):
         m = lam.shape[0]
         node_ids = jnp.arange(m)
         dual_grads = jax.vmap(
@@ -342,7 +352,8 @@ class ProjectedAscent(DualUpdate):
         if mixing is not None:
             return mix_stacked_with(lam_half, mixing)
         if self.mix_fn is not None:
-            return self.mix_fn(lam_half, step=step, mask=mask)
+            return self.mix_fn(lam_half, step=step, mask=mask,
+                               fault_key=fault_key)
         return mix_stacked(lam_half, self.topology)
 
     def bits_per_round(self) -> float:
@@ -444,7 +455,7 @@ class Consensus:
         return ()
 
     def mix(self, theta_half, state, key: jax.Array | None, ctx, *,
-            step=None, mask=None, mixing=None):
+            step=None, mask=None, mixing=None, fault_key=None):
         raise NotImplementedError
 
     @property
@@ -459,30 +470,40 @@ class Consensus:
         "realized" (actual links of round ``step`` under ``mask``)."""
         raise NotImplementedError
 
-    def bits_realized(self, theta_template, step, mask):
+    def bits_realized(self, theta_template, step, mask, consensus_state=None):
         """This round's realized wire bits as a *traced* scalar — the jitted
         form of ``bits_per_round(mode="realized")`` the trainer threads into
         ``aux["bits_realized"]`` so long faulty runs report measured traffic
-        without host-side masks.  Default: the max-degree constant (exact for
-        static full-participation wires)."""
+        without host-side masks.  ``consensus_state`` is the *post-mix*
+        consensus state: faulted wires carry an in-graph per-node bits meter
+        there (delivered bits only — dropped messages are not billed, dups
+        bill twice, resyncs bill their dense payload).  Default: the
+        max-degree constant (exact for static full-participation wires)."""
         return jnp.float32(self.bits_per_round(theta_template, mode="max"))
 
 
-def _resolve_wire_backend(backend: str, mesh, schedule):
+def _resolve_wire_backend(backend: str, mesh, schedule, topology=None, faults=None):
     """Shared ctor validation for the ``backend`` knob: checks the name,
     requires a mesh for ppermute, and compiles the union wire program when
-    the wire is time-varying (one plan per consensus instance — the same
-    object then sizes the NeighborCache, selects round weights, and bills
-    bits, so they cannot drift)."""
+    the wire is time-varying — or when a fault model is active, since fault
+    injection lives at the exchange boundary and runs every backend through
+    the cached union round body (one plan per consensus instance — the same
+    object then sizes the NeighborCache + FaultState, selects round weights,
+    and bills bits, so they cannot drift)."""
     if backend not in ("rolled", "ppermute"):
         raise ValueError(f"unknown gossip backend {backend!r}; choose rolled or ppermute")
     if backend == "ppermute" and mesh is None:
         raise ValueError("backend='ppermute' requires a mesh (see launch.mesh.make_node_mesh)")
-    if backend == "ppermute" and schedule is not None:
+    needs_union = (backend == "ppermute" and schedule is not None) or faults is not None
+    if not needs_union:
+        return None
+    if schedule is not None:
         return wire.compile_union_wire(
             compile_schedule_plans(schedule), name=schedule.name
         )
-    return None
+    if topology is None:
+        raise ValueError("fault injection needs a topology or schedule to compile the wire")
+    return wire.compile_union_wire((compile_permute_plan(topology),))
 
 
 def _union_degree(union, schedule, mode: str, mask) -> float:
@@ -492,12 +513,26 @@ def _union_degree(union, schedule, mode: str, mask) -> float:
     if mode == "max":
         return float(union.max_out_degree)
     if mode == "expected":
-        return union.max_out_degree * (1.0 - schedule.dropout_rate)
+        rate = schedule.dropout_rate if schedule is not None else 0.0
+        return union.max_out_degree * (1.0 - rate)
     if mode == "realized":
         if mask is None:
             raise ValueError("mode='realized' needs the round's participation mask")
         return union.realized_out_degree(mask)
     raise ValueError(f"unknown bits mode {mode!r}; choose max/expected/realized")
+
+
+def _fault_bits_meter(cons_state):
+    """The faulted wire's in-graph per-node bits meter, if ``cons_state``
+    carries one: CHOCO keeps it in ``CHOCOState.fault.bits``, the memoryless
+    exact wire in a bare :class:`~repro.core.faults.WireBits`.  None when the
+    state has no meter (fault-free run, or pre-round state)."""
+    fault = getattr(cons_state, "fault", None)
+    if hasattr(fault, "bits"):
+        return fault.bits
+    if hasattr(cons_state, "bits") and not hasattr(cons_state, "theta_hat"):
+        return cons_state.bits
+    return None
 
 
 def _split_schedule(topology):
@@ -531,7 +566,7 @@ class ChocoConsensus(Consensus):
     def __init__(self, topology: Topology | TopologySchedule, compressor: Compressor,
                  gamma: float | str | None = None, *, packed: bool = True,
                  fused: bool = False, backend: str = "rolled", mesh=None,
-                 node_axes="data"):
+                 node_axes="data", faults=None):
         self.topology, self.schedule, self._gamma_topology = _split_schedule(topology)
         self.compressor = compressor
         self.gamma_spec = gamma
@@ -540,9 +575,15 @@ class ChocoConsensus(Consensus):
         self.backend = backend
         self.mesh = mesh
         self.node_axes = node_axes
+        # the message-fault model (None = perfect wire); faults force the
+        # cached union wire on every backend — detection and recovery live
+        # at the exchange boundary (see repro.core.faults)
+        self.faults = parse_fault_spec(faults)
         # the time-varying ppermute wire: one union program for every phase,
         # and a NeighborCache sized to its op count (see repro.core.wire)
-        self.union = _resolve_wire_backend(backend, mesh, self.schedule)
+        self.union = _resolve_wire_backend(
+            backend, mesh, self.schedule, topology=self.topology, faults=self.faults
+        )
         # provisional gamma until init()/mix() see the real leaf sizes
         self.gamma = self._resolve_gamma(4096)
 
@@ -598,9 +639,11 @@ class ChocoConsensus(Consensus):
         return choco_init(
             theta_stacked,
             cache_ops=self.union.n_ops if self.union is not None else 0,
+            fault_ops=self.union.n_ops if self.faults is not None else None,
         )
 
-    def mix(self, theta_half, state, key, ctx, *, step=None, mask=None, mixing=None):
+    def mix(self, theta_half, state, key, ctx, *, step=None, mask=None,
+            mixing=None, fault_key=None):
         gamma = self._resolve_gamma(self._encode_dim(theta_half))
         if self.backend == "ppermute":
             # the SPMD substrate takes the schedule + round index + mask and
@@ -611,6 +654,17 @@ class ChocoConsensus(Consensus):
                 packed=self.packed, fused=self.fused, mask=mask,
                 backend="ppermute", mesh=self.mesh, node_axes=self.node_axes,
                 schedule=self.schedule, step=step, union=self.union,
+                faults=self.faults, fault_key=fault_key,
+            )
+        if self.faults is not None:
+            # faulted rolled wire: the cached union round (same body as the
+            # ppermute backend with a single full-width shard) — a dense
+            # W(t) cannot express per-edge delivery faults
+            return choco_round(
+                theta_half, state, self.topology, gamma, self.compressor, key,
+                packed=self.packed, mask=mask, schedule=self.schedule,
+                step=step, union=self.union, faults=self.faults,
+                fault_key=fault_key,
             )
         if self.schedule is not None and mixing is None:
             # standalone use (no trainer threading): resolve W(t) here
@@ -620,20 +674,35 @@ class ChocoConsensus(Consensus):
             packed=self.packed, fused=self.fused, mixing=mixing, mask=mask,
         )
 
-    def wire_mix(self, tree, *, step=None, mask=None):
+    def wire_mix(self, tree, *, step=None, mask=None, fault_key=None):
         """Uncompressed (dense-format) gossip of a stacked tree over this
         consensus's wire — the dual/lambda gossip rides the same permutes as
         the model on the ppermute backend.  Time-varying rounds select their
         weights from the union wire's per-phase banks via ``step``/``mask``;
         the rolled backend's time-varying duals get the dense W(t) from the
-        trainer instead and never reach here."""
+        trainer instead and never reach here (unless faults are active, which
+        force the union wire on every backend).  Under faults the dual rides
+        the *same* physical messages as the model — same ``fault_key``, same
+        event draw — and its delivered bits stay billed at the existing
+        constant (negligible next to the model payload)."""
         if self.backend == "ppermute":
             from repro.core.exchange import mix_stacked_ppermute
 
-            return mix_stacked_ppermute(
+            out = mix_stacked_ppermute(
                 tree, self.topology, mesh=self.mesh, node_axes=self.node_axes,
                 schedule=self.schedule, step=step, mask=mask, union=self.union,
+                faults=self.faults, fault_key=fault_key,
             )
+            return out[0] if self.faults is not None else out
+        if self.faults is not None:
+            from repro.core.exchange import mix_stacked_faulted_local
+
+            mixed, _ = mix_stacked_faulted_local(
+                tree, union=self.union, topology=self.topology,
+                schedule=self.schedule, step=step, mask=mask,
+                faults=self.faults, fault_key=fault_key,
+            )
+            return mixed
         return mix_stacked(tree, self.topology)
 
     @property
@@ -657,7 +726,13 @@ class ChocoConsensus(Consensus):
             mode=mode, step=step, mask=mask,
         )
 
-    def bits_realized(self, theta_template, step, mask):
+    def bits_realized(self, theta_template, step, mask, consensus_state=None):
+        if self.faults is not None:
+            meter = _fault_bits_meter(consensus_state)
+            if meter is not None:
+                # the exchange's own delivered-bits meter: drops unbilled,
+                # dups billed twice, resyncs bill their dense payload
+                return meter.max()
         total = payload_total_bits(self.compressor, theta_template)
         if self.union is not None:
             return total * self.union.realized_out_degree_traced(mask)
@@ -681,14 +756,27 @@ class ExactConsensus(Consensus):
     """
 
     def __init__(self, topology: Topology | TopologySchedule, *,
-                 backend: str = "rolled", mesh=None, node_axes="data"):
+                 backend: str = "rolled", mesh=None, node_axes="data",
+                 faults=None):
         self.topology, self.schedule, _ = _split_schedule(topology)
         self.backend = backend
         self.mesh = mesh
         self.node_axes = node_axes
-        self.union = _resolve_wire_backend(backend, mesh, self.schedule)
+        self.faults = parse_fault_spec(faults)
+        self.union = _resolve_wire_backend(
+            backend, mesh, self.schedule, topology=self.topology, faults=self.faults
+        )
 
-    def mix(self, theta_half, state, key, ctx, *, step=None, mask=None, mixing=None):
+    def init(self, theta_stacked):
+        if self.faults is not None:
+            # the uncompressed wire is memoryless (no mirrors to heal) —
+            # the only fault state is the per-node delivered-bits meter
+            m = jax.tree_util.tree_leaves(theta_stacked)[0].shape[0]
+            return WireBits(bits=jnp.zeros((m,), jnp.float32))
+        return ()
+
+    def mix(self, theta_half, state, key, ctx, *, step=None, mask=None,
+            mixing=None, fault_key=None):
         if self.backend == "ppermute":
             if mixing is not None:
                 raise ValueError(
@@ -697,12 +785,25 @@ class ExactConsensus(Consensus):
                 )
             from repro.core.exchange import mix_stacked_ppermute
 
-            mixed = mix_stacked_ppermute(
+            out = mix_stacked_ppermute(
                 theta_half, self.topology, mesh=self.mesh,
                 node_axes=self.node_axes, schedule=self.schedule,
                 step=step, mask=mask, union=self.union,
+                faults=self.faults, fault_key=fault_key,
             )
-            return mixed, state
+            if self.faults is not None:
+                mixed, bits = out
+                return mixed, WireBits(bits=bits)
+            return out, state
+        if self.faults is not None:
+            from repro.core.exchange import mix_stacked_faulted_local
+
+            mixed, bits = mix_stacked_faulted_local(
+                theta_half, union=self.union, topology=self.topology,
+                schedule=self.schedule, step=step, mask=mask,
+                faults=self.faults, fault_key=fault_key,
+            )
+            return mixed, WireBits(bits=bits)
         if self.schedule is not None and mixing is None:
             mixing = self.schedule.mixing_at(0 if step is None else step, mask)
         if mixing is not None:
@@ -727,7 +828,11 @@ class ExactConsensus(Consensus):
             mode=mode, step=step, mask=mask,
         )
 
-    def bits_realized(self, theta_template, step, mask):
+    def bits_realized(self, theta_template, step, mask, consensus_state=None):
+        if self.faults is not None:
+            meter = _fault_bits_meter(consensus_state)
+            if meter is not None:
+                return meter.max()
         total = payload_total_bits(Identity(), theta_template)
         if self.union is not None:
             return total * self.union.realized_out_degree_traced(mask)
@@ -760,7 +865,8 @@ class FedAvg(Consensus):
         self.mesh = mesh
         self.node_axes = node_axes
 
-    def mix(self, theta_locals, state, key, ctx, *, step=None, mask=None, mixing=None):
+    def mix(self, theta_locals, state, key, ctx, *, step=None, mask=None,
+            mixing=None, fault_key=None):
         m = jax.tree_util.tree_leaves(theta_locals)[0].shape[0]
         sampled = ctx  # SampledAscent's per-round client mask (None = all)
         if sampled is None:
@@ -909,7 +1015,11 @@ class DecentralizedTrainer:
         # consume randomness, so compositions without them (e.g. DR-DSGD)
         # reproduce the seed trainers' key streams exactly — and a static
         # no-dropout run reproduces the pre-schedule stream exactly
-        n_extra = int(self.consensus.needs_key) + int(self.dual.needs_key) + int(needs_mask)
+        needs_faults = getattr(self.consensus, "faults", None) is not None
+        n_extra = (
+            int(self.consensus.needs_key) + int(self.dual.needs_key)
+            + int(needs_mask) + int(needs_faults)
+        )
         keys = jax.random.split(state.rng, m + 1 + n_extra)
         rng, idx = keys[0], 1
         gossip_key = None
@@ -921,17 +1031,25 @@ class DecentralizedTrainer:
         mask_key = None
         if needs_mask:
             mask_key, idx = keys[idx], idx + 1
+        fault_key = None
+        if needs_faults:
+            # one event key per round, shared by the model gossip and the
+            # lambda gossip: the dual rides the same physical messages, so
+            # both see the same delivery-fault draw
+            fault_key, idx = keys[idx], idx + 1
         node_keys = keys[idx:]
 
         # --- time-varying wire: participation mask + this round's W(t) ------
         # the dense [m, m] matrix only exists for the rolled backend; the
         # ppermute backend compiles its own union wire program and the dual
-        # gossip rides it through mix_fn (wire_mix) instead
+        # gossip rides it through mix_fn (wire_mix) instead.  Faulted wires
+        # also skip it: per-edge delivery faults have no dense-W expression,
+        # so every faulted backend runs the union exchange.
         wire_native = getattr(self.consensus, "backend", "rolled") == "ppermute"
         mask = schedule.mask_at(mask_key, state.step) if needs_mask else None
         mixing = (
             schedule.mixing_at(state.step, mask)
-            if schedule is not None and not wire_native
+            if schedule is not None and not wire_native and not needs_faults
             else None
         )
 
@@ -952,13 +1070,14 @@ class DecentralizedTrainer:
 
         # --- dual update ----------------------------------------------------
         lam_new = self.dual.update(
-            state.lam, losses, ctx, mixing=mixing, mask=mask, step=state.step
+            state.lam, losses, ctx, mixing=mixing, mask=mask, step=state.step,
+            fault_key=fault_key,
         )
 
         # --- consensus ------------------------------------------------------
         theta_new, cons_new = self.consensus.mix(
             theta_half, state.consensus, gossip_key, ctx,
-            step=state.step, mask=mask, mixing=mixing,
+            step=state.step, mask=mask, mixing=mixing, fault_key=fault_key,
         )
 
         # --- running average of the network mean (output theta_o) -----------
@@ -987,9 +1106,11 @@ class DecentralizedTrainer:
         if mask is not None:
             aux["participation"] = mask
         # jitted realized-bits meter: this round's measured wire traffic
-        # (model payload + the dual's constant), no host-side masks needed
+        # (model payload + the dual's constant), no host-side masks needed;
+        # faulted wires read the exchange's own delivered-bits meter out of
+        # the post-mix consensus state instead of a degree formula
         aux["bits_realized"] = self.consensus.bits_realized(
-            state.theta, state.step, mask
+            state.theta, state.step, mask, consensus_state=cons_new
         ) + jnp.float32(self.dual.bits_per_round())
 
         new_state = TrainerState(
@@ -1027,7 +1148,19 @@ class DecentralizedTrainer:
         ``mask`` (e.g. ``aux["participation"]``).  The dual's m-float
         traffic stays at its upper bound in every mode — it is negligible
         next to the model payload and not worth a mask-aware estimate.
+
+        With a fault model active, ``mode="realized"`` reads the exchange's
+        in-graph delivered-bits meter out of ``state.consensus`` (last
+        round's actual deliveries: drops unbilled, dups twice, resyncs
+        dense) instead of a degree formula.
         """
+        if mode == "realized" and getattr(self.consensus, "faults", None) is not None:
+            meter = _fault_bits_meter(state.consensus)
+            if meter is not None:
+                bits = float(jnp.max(meter)) + self.dual.bits_per_round()
+                if per_iteration:
+                    bits /= self.local.local_steps
+                return bits
         bits = (
             self.consensus.bits_per_round(state.theta, mode=mode, step=step, mask=mask)
             + self.dual.bits_per_round()

@@ -49,6 +49,8 @@ __all__ = [
     "PAYLOAD",
     "DENSE",
     "HAT_DELTA",
+    "DIGEST",
+    "HAT_RESYNC",
     "UnionWirePlan",
     "compile_union_wire",
     "init_neighbor_cache",
@@ -69,7 +71,15 @@ class WireFormat:
     * ``"hat-delta"`` — the compressed residual ``Q(theta - theta_hat)``
       shipped on every union edge of a time-varying round: the same bytes
       as ``payload``, but semantically an *increment* the receiver applies
-      to its cached mirror of the sender's public copy.
+      to its cached mirror of the sender's public copy;
+    * ``"digest"`` — the 32-bit wraparound checksum of the sender's
+      post-round ``theta_hat`` (one per leaf chunk) riding every hat-delta
+      message on a faulted wire, letting the receiver verify its mirror
+      *before* committing the delta (repro.core.faults);
+    * ``"hat-resync"`` — the full ``theta_hat`` at its own dtype, shipped
+      on an edge whose mirror diverged past the staleness bound S: dense
+      bytes, but only on requested edges and subject to the same fault
+      draws (+ exponential backoff on failure).
 
     This is a dispatch/label tag; the bits each format puts on an edge are
     billed by ``gossip.payload_bits`` (algorithmic payload accounting) and
@@ -86,6 +96,8 @@ class WireFormat:
 PAYLOAD = WireFormat("payload")
 DENSE = WireFormat("dense")
 HAT_DELTA = WireFormat("hat-delta")
+DIGEST = WireFormat("digest")
+HAT_RESYNC = WireFormat("hat-resync")
 
 
 # ============================================================= UnionWirePlan

@@ -34,6 +34,7 @@ def make_trainer(
     dropout: float = 0.0,
     topology_p: float | None = None,
     topology_seed: int = 0,
+    fault_spec: str | None = None,
     compressor: str = "q4b",
     alpha: float = 0.01,
     eta_theta: float = 0.1,
@@ -67,6 +68,7 @@ def make_trainer(
         dropout=dropout,
         topology_p=topology_p,
         topology_seed=topology_seed,
+        fault_spec=fault_spec,
         compressor=compressor,
         alpha=alpha,
         eta_theta=eta_theta,

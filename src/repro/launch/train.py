@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import latest_step, restore, save, step_path
+from repro.checkpoint import restore_latest, save
 from repro.configs import get_config
 from repro.data import node_token_stream
 from repro.launch import steps as st
@@ -57,6 +57,11 @@ def main() -> None:
                     help="edge probability for --topology erdos_renyi")
     ap.add_argument("--topology-seed", type=int, default=0,
                     help="graph-sampling seed (erdos_renyi, matching schedules)")
+    ap.add_argument("--fault-spec", default=None,
+                    help="wire-fault injection, e.g. 'drop:0.05,corrupt:0.01,"
+                         "stale:2' — per-(edge,round) message drop/corrupt/"
+                         "dup/delay with digest detection and staleness-"
+                         "bounded self-healing resync (repro.core.faults)")
     ap.add_argument("--compressor", default="q4b")
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument("--eta-theta", type=float, default=0.05)
@@ -118,6 +123,7 @@ def main() -> None:
         dropout=args.dropout,
         topology_p=args.topology_p,
         topology_seed=args.topology_seed,
+        fault_spec=args.fault_spec,
         compressor=args.compressor,
         alpha=args.alpha,
         eta_theta=args.eta_theta,
@@ -142,6 +148,8 @@ def main() -> None:
     wire = args.topology_schedule or args.topology
     if args.dropout:
         wire += f"+drop{args.dropout:g}"
+    if args.fault_spec:
+        wire += f"+faults[{args.fault_spec}]"
     print(f"arch={cfg.name} params={n_params:,} nodes={args.nodes} "
           f"compressor={args.compressor} topology={wire}")
 
@@ -150,19 +158,18 @@ def main() -> None:
     if args.resume:
         if not args.checkpoint:
             raise SystemExit("--resume requires --checkpoint")
-        found = latest_step(args.checkpoint)
+        # restore the *entire* trainer state into the abstract template — no
+        # recompute, and the continuation is bit-identical to a run that
+        # never stopped.  restore_latest skips any unreadable file and falls
+        # back to the last complete checkpoint instead of crashing.
+        template = jax.eval_shape(trainer.init, params, init_rng)
+        state, found = restore_latest(args.checkpoint, template)
         if found is None:
-            print(f"--resume: no checkpoint under {args.checkpoint!r}; starting fresh")
+            print(f"--resume: no loadable checkpoint under {args.checkpoint!r}; starting fresh")
             state = trainer.init(params, init_rng)
         else:
-            # restore the *entire* trainer state into the abstract template —
-            # no recompute, and the continuation is bit-identical to a run
-            # that never stopped
-            template = jax.eval_shape(trainer.init, params, init_rng)
-            fname = step_path(args.checkpoint, found)
-            state = restore(fname, template)
             start_step = found
-            print(f"resumed full trainer state from {fname} (step {found})")
+            print(f"resumed full trainer state from step {found}")
     else:
         state = trainer.init(params, init_rng)
 

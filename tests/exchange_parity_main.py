@@ -188,6 +188,88 @@ def time_varying(mesh, quick):
     _cache_invariant("cache-invariant/matching/q4b", sp, munion)
 
 
+def faulted_parity(mesh, quick):
+    """Faulted-wire grid on real devices: {drop, corrupt} x {CHOCO, Exact},
+    rolled vs ppermute.  The faulted round is the SAME _cached_round_body on
+    both backends, so parity is BIT-EXACT — and the conditional mirror
+    invariant (synced edges bit-identical to sender hats) holds on the
+    sharded wire too."""
+    from repro.core.exchange import (
+        choco_round_cached_local, mix_stacked_faulted_local,
+    )
+    from repro.core.faults import FaultSpec
+    from repro.core.topology import compile_schedule_plans
+    from repro.core.wire import compile_union_wire
+
+    m, d = 8, 120
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(4), (m, d))}
+    sched = topology.make_topology_schedule("roundrobin:ring,torus", m)
+    union = compile_union_wire(compile_schedule_plans(sched))
+    topo0 = sched.topology_at(0)
+    specs = [("drop", FaultSpec(drop=0.3, stale=1)),
+             ("corrupt", FaultSpec(corrupt=0.3, stale=1))]
+
+    comp = RandomQuantization(bits=4)
+    for fname, spec in specs:
+        def run_choco(backend):
+            st = gossip.choco_init(theta, cache_ops=union.n_ops,
+                                   fault_ops=union.n_ops)
+            kw = dict(backend=backend)
+            if backend == "ppermute":
+                kw["mesh"] = mesh
+
+            f = jax.jit(lambda t, s, k, fk, i: gossip.choco_round(
+                t, s, topo0, 0.25, comp, k, schedule=sched, step=i,
+                union=union, faults=spec, fault_key=fk, **kw))
+            t = theta
+            for i in range(3):
+                t, st = f(t, st, jax.random.PRNGKey(40 + i),
+                          jax.random.fold_in(jax.random.PRNGKey(8), i),
+                          jnp.int32(i))
+            return t, st
+
+        a = run_choco("rolled")
+        b = run_choco("ppermute")
+        check(f"faulted/{fname}/choco", a, b, exact=True)
+        _faulted_mirror_invariant(f"faulted-mirror/{fname}/choco", b[1], union)
+
+        def run_exact(ppermute):
+            t = theta
+            for i in range(3):
+                fk = jax.random.fold_in(jax.random.PRNGKey(9), i)
+                if ppermute:
+                    t, bits = mix_stacked_ppermute(
+                        t, topo0, mesh=mesh, schedule=sched, step=jnp.int32(i),
+                        union=union, faults=spec, fault_key=fk)
+                else:
+                    t, bits = mix_stacked_faulted_local(
+                        t, union=union, schedule=sched, step=jnp.int32(i),
+                        faults=spec, fault_key=fk)
+            return t, bits
+
+        a = run_exact(False)
+        b = run_exact(True)
+        check(f"faulted/{fname}/exact", a, b, exact=True)
+
+
+def _faulted_mirror_invariant(name, state, union):
+    """Conditional mirror invariant under faults: every edge the recovery
+    state machine calls synced is bit-identical to the sender's hat."""
+    hats = jax.tree_util.tree_leaves(state.theta_hat)
+    synced = np.asarray(state.fault.synced)
+    bad = 0
+    for k, snd in enumerate(union.senders):
+        for hat, cleaf in zip(hats, jax.tree_util.tree_leaves(state.cache[k])):
+            hat, cleaf = np.asarray(hat), np.asarray(cleaf)
+            for i in range(hat.shape[0]):
+                if snd[i] >= 0 and synced[i, k] > 0 and not (cleaf[i] == hat[snd[i]]).all():
+                    bad += 1
+    ok = bad == 0
+    CHECKS.append((name, "EXACT", float(bad), ok))
+    print(f"{'PASS' if ok else 'FAIL'} [EXACT] {name}: {bad} bad synced mirrors")
+    assert ok, f"{name}: synced mirror diverged from sender hat"
+
+
 def trainer_parity(mesh, quick):
     def loss_fn(params, batch, rng):
         x, y = batch
@@ -333,6 +415,7 @@ def main():
     uneven_ratio_rejected(mesh)
     gossip_grid(mesh, quick)
     time_varying(mesh, quick)
+    faulted_parity(mesh, quick)
     trainer_parity(mesh, quick)
     baselines_parity(mesh, quick)
     wire_mix_parity(mesh)

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, restore, save
+from repro.checkpoint import all_steps, latest_step, restore, restore_latest, save
 from repro.core.adgda import ADGDAConfig, adgda_trainer
 
 
@@ -115,6 +115,54 @@ def test_atomic_write_tmp_cleaned_on_failure(tmp_path, monkeypatch):
     assert latest_step(str(tmp_path / "ckpt")) is None
 
 
+def test_crash_mid_save_keeps_previous_checkpoint(tmp_path, monkeypatch):
+    """A process killed *during* np.savez (partial .tmp on disk) must leave
+    the previous complete checkpoint as the resume point: the final name is
+    only ever produced by os.replace after fsync."""
+    prefix = str(tmp_path / "run")
+    tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+    save(prefix, tree, step=1)
+
+    real_savez = np.savez
+
+    def crash(f, **payload):
+        real_savez(f, **payload)  # bytes hit the .tmp file...
+        raise KeyboardInterrupt("killed mid-save")  # ...then the kill lands
+
+    monkeypatch.setattr(np, "savez", crash)
+    with pytest.raises(KeyboardInterrupt):
+        save(prefix, {"w": jnp.full((4,), 9.0)}, step=2)
+    monkeypatch.undo()
+
+    # the interrupted step-2 save is invisible; step 1 is still loadable
+    assert latest_step(prefix) == 1
+    out, step = restore_latest(prefix, tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4, dtype=np.float32))
+
+
+def test_restore_latest_falls_back_past_corrupt(tmp_path):
+    """restore_latest skips an unreadable newest file (e.g. truncated by an
+    older non-atomic writer) and reports the fallback."""
+    prefix = str(tmp_path / "run")
+    tree = {"w": jnp.arange(3, dtype=jnp.float32)}
+    save(prefix, tree, step=5)
+    # a complete-looking but garbage step-7 file, as a non-atomic tool leaves
+    (tmp_path / "run_00000007.npz").write_bytes(b"not a zip archive")
+    assert all_steps(prefix) == [5, 7]
+
+    messages = []
+    out, step = restore_latest(prefix, tree, log=messages.append)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(3, dtype=np.float32))
+    assert len(messages) == 1 and "run_00000007.npz" in messages[0]
+    assert "falling back" in messages[0]
+
+    # nothing loadable at all -> (None, None), not an exception
+    empty = str(tmp_path / "other")
+    assert restore_latest(empty, tree, log=messages.append) == (None, None)
+
+
 # ------------------------------------------- full-state resume bit-parity
 def _toy_loss(params, batch, rng):
     x, y = batch
@@ -135,8 +183,17 @@ def _toy_batch(m, key, n=8, d=4):
         {"topology": "ring", "optimizer": "adam", "momentum": 0.0},
         {"topology_schedule": "roundrobin:ring,torus", "dropout": 0.25},
         {"topology_schedule": "matching:3", "dropout": 0.5},
+        {"topology": "ring", "fault_spec": "drop:0.2,corrupt:0.1,stale:2"},
+        {
+            "topology_schedule": "matching:3",
+            "dropout": 0.25,
+            "fault_spec": "drop:0.2,corrupt:0.1,stale:2",
+        },
     ],
-    ids=["sgd", "momentum", "adam", "roundrobin-drop", "matching-drop"],
+    ids=[
+        "sgd", "momentum", "adam", "roundrobin-drop", "matching-drop",
+        "faulted-ring", "faulted-matching-drop",
+    ],
 )
 def test_kill_and_resume_bit_identical(tmp_path, cfg_kwargs):
     """Save the full TrainerState mid-run, rebuild everything from scratch,
