@@ -1,0 +1,279 @@
+"""Suite S — decentralized serving fleet: latency/SLO vs offered load, and
+the train-and-serve loop (ISSUE 7 tentpole).
+
+Two row kinds, one shared key vocabulary (persisted verbatim to
+``BENCH_S.json``, printed by ``benchmarks.run``, gated by
+``check_regression.py --suite S``, documented in the README "Serving
+fleet" section):
+
+* ``kind="latency"`` — a latency-vs-offered-load curve per fleet config
+  (``fleet`` names the shape, e.g. ``m2s2`` = 2 nodes x 2 slots).  ``rate``
+  is the per-node offered load in requests/tick (a scenario axis, kept in
+  the row key), ``util`` the analytic utilization ``rate x
+  mean_request_tokens / slots``.  Tick-denominated latency percentiles
+  (``p50/p95/p99_ttft_ticks``) are bit-deterministic given the loadgen
+  seed — the gateable SLO — while wall metrics (``tok_per_s``,
+  ``per_token_ms``, ``p50/p99_ttft_ms``) are reported for trend only.
+  ``knee_rate`` is the measured latency knee: the largest tested rate whose
+  p99 TTFT stays within ``KNEE_INFLATION`` x max(p50, 1) ticks.  The
+  admission queue bound (``max_queue = QUEUE_SLOTS_FACTOR x slots``) is
+  sized so that below the knee nothing is ever rejected (the SLO
+  ``check_regression`` re-asserts baseline-free) while overload sheds
+  instead of queueing unboundedly.
+
+* ``kind="train_serve"`` — the DRO guarantee as a serving SLO: a
+  decentralized training run (AD-GDA vs its unweighted ``robust=False``
+  twin, same seed/topology/compression) checkpoints the consensus model
+  every phase through the atomic ``repro.checkpoint`` machinery; a fleet of
+  per-node ``ClassifierEngine``s hot-reloads each checkpoint
+  (``HotReloader`` — torn files can never be served) while serving
+  Poisson traffic drawn from each node's LOCAL distribution.
+  ``worst_node_acc`` / ``worst_node_loss`` are the worst per-node-population
+  quality probes after the final reload, ``served_worst_acc`` the worst
+  per-node accuracy on requests actually served in the final window, and
+  ``first_worst_acc`` the probe after the first reload (the across-reloads
+  trajectory).  The acceptance bar: the AD-GDA row's ``worst_node_acc``
+  beats the unweighted row's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+
+from benchmarks.common import make_adgda, make_loss
+from repro.checkpoint import save
+from repro.data import rotated_minority_classification
+
+# latency-knee definition and admission sizing, shared with check_regression
+KNEE_INFLATION = 8.0        # below the knee: p99_ttft <= 8 x max(p50_ttft, 1) ticks
+QUEUE_SLOTS_FACTOR = 6      # max_queue = 6 x slots (~ knee-load p99 queue depth)
+
+# fleet shapes for the latency curve: (num_nodes, slots per node)
+FLEETS = {"m2s2": (2, 2), "m1s4": (1, 4)}
+# offered load as a fraction of per-node capacity slots/mean_request_tokens
+UTILIZATIONS = (0.4, 0.8, 1.4)
+
+
+def _serve_cfg():
+    from repro.configs import get_config
+
+    # full attention: the reduced configs' 16-token sliding window would
+    # force exact-length prefill (ring wrap) and defeat prompt bucketing
+    return dataclasses.replace(
+        get_config("qwen3-1.7b").reduced(), long_context_window=None
+    )
+
+
+def _latency_rows(quick: bool) -> list[dict]:
+    import jax as _jax
+
+    from repro.models import transformer as T
+    from repro.serving import (
+        AdmissionControl,
+        FleetNode,
+        LoadGenConfig,
+        LoadGenerator,
+        ServeEngine,
+        ServingFleet,
+    )
+
+    cfg = _serve_cfg()
+    params = T.init_model(_jax.random.PRNGKey(0), cfg)
+    n_requests = 170 if quick else 4000
+    rows = []
+    for fleet_name, (m, slots) in FLEETS.items():
+        lg_probe = LoadGenConfig(num_nodes=m, rate=1.0, vocab_size=cfg.vocab_size,
+                                 prompt_min=4, prompt_max=24,
+                                 output_min=1, output_max=8, seed=0)
+        capacity = slots / lg_probe.mean_request_tokens()  # requests/tick/node
+        fleet_rows = []
+        for util in UTILIZATIONS:
+            rate = round(util * capacity, 4)
+            gen = LoadGenerator(dataclasses.replace(lg_probe, rate=rate))
+            nodes = [
+                FleetNode(
+                    i,
+                    ServeEngine(cfg, params, max_slots=slots, cache_len=48,
+                                prompt_bucket=8),
+                    admission=AdmissionControl(
+                        max_queue=QUEUE_SLOTS_FACTOR * slots, policy="reject"
+                    ),
+                )
+                for i in range(m)
+            ]
+            rep = ServingFleet(nodes, gen).run(
+                max_requests=n_requests, max_ticks=200_000
+            )
+            f = rep.fleet
+            fleet_rows.append({
+                "table": "S",
+                "kind": "latency",
+                "fleet": fleet_name,
+                "rate": rate,
+                "util": round(util, 4),
+                "requests": rep.offered,
+                "completed": f["completed"],
+                "rejected": f["rejected"],
+                "shed": f["shed"],
+                "ticks": rep.ticks,
+                "p50_ttft_ticks": f["p50_ttft_ticks"],
+                "p95_ttft_ticks": f["p95_ttft_ticks"],
+                "p99_ttft_ticks": f["p99_ttft_ticks"],
+                "p50_ttft_ms": f["p50_ttft_ms"],
+                "p99_ttft_ms": f["p99_ttft_ms"],
+                "per_token_ms": f["per_token_ms"],
+                "tok_per_s": f["tok_per_s"],
+                "mean_queue_depth": f["mean_queue_depth"],
+                "max_queue_depth": f["max_queue_depth"],
+                "slot_occupancy": f["slot_occupancy"],
+            })
+        # measured knee: largest tested rate still inside the inflation SLO
+        under = [r for r in fleet_rows
+                 if r["p99_ttft_ticks"] <= KNEE_INFLATION * max(r["p50_ttft_ticks"], 1.0)]
+        knee = max((r["rate"] for r in under), default=min(r["rate"] for r in fleet_rows))
+        for r in fleet_rows:
+            r["knee_rate"] = knee
+        rows += fleet_rows
+    return rows
+
+
+def _train_serve_rows(quick: bool) -> list[dict]:
+    import jax.numpy as jnp
+
+    from benchmarks.common import MODELS
+    from repro.serving import (
+        AdmissionControl,
+        ClassifierEngine,
+        EvalRequest,
+        FleetNode,
+        HotReloader,
+        LoadGenConfig,
+        LoadGenerator,
+        ServingFleet,
+    )
+
+    m = 10
+    minority_nodes = 2
+    phases, rounds = (4, 100) if quick else (8, 250)
+    serve_chunk = 30 * m  # requests per serving window (fleet-wide)
+    init_fn, apply_fn = MODELS["logistic"]
+    loss_fn = make_loss(apply_fn)
+
+    rows = []
+    for algo, robust in (("adgda", True), ("unweighted", False)):
+        data = rotated_minority_classification(
+            num_nodes=m, minority_nodes=minority_nodes, seed=0
+        )
+        trainer, _, _ = make_adgda("logistic", m, robust=robust, compressor="q4b")
+        params0 = init_fn(data.dim, data.num_classes)
+        state = trainer.init(params0, jax.random.PRNGKey(0))
+        gen_batches = data.batches(50, seed=0)
+
+        with tempfile.TemporaryDirectory() as tmp:
+            prefix = f"{tmp}/consensus_{algo}"
+
+            # ---- the serving side: one classifier engine per node, traffic
+            # from the node's local distribution, hot reload + quality probe
+            def payload_for(node_data_x, node_data_y):
+                n = node_data_x.shape[0]
+
+                def payload(node, rng, plen, max_new):
+                    idx = int(rng.integers(0, n))
+                    return EvalRequest(
+                        features=node_data_x[idx:idx + 1],
+                        labels=node_data_y[idx:idx + 1],
+                    )
+
+                return payload
+
+            def quality_for(node):
+                # node's latent population: minority for the rotated nodes
+                dist = 1 if node < minority_nodes else 0
+                name_to_idx = {n: i for i, n in enumerate(data.val_names)}
+                vi = name_to_idx["minority" if dist else "majority"]
+                vx, vy = jnp.asarray(data.val_x[vi]), jnp.asarray(data.val_y[vi])
+
+                def quality(params):
+                    logits = apply_fn(params, vx)
+                    pred = np.asarray(jnp.argmax(logits, -1))
+                    loss = float(loss_fn(params, (vx, vy), None))
+                    return {"acc": float((pred == np.asarray(vy)).mean()),
+                            "loss": loss}
+
+                return quality
+
+            class _NodePayload:
+                """Route each node's traffic through its own data pool."""
+
+                def __init__(self):
+                    self.per_node = [payload_for(data.x[i], data.y[i]) for i in range(m)]
+
+                def __call__(self, node, rng, plen, max_new):
+                    return self.per_node[node](node, rng, plen, max_new)
+
+            gen = LoadGenerator(
+                LoadGenConfig(num_nodes=m, rate=0.8, vocab_size=16, seed=1),
+                payload=_NodePayload(),
+            )
+            nodes = [
+                FleetNode(
+                    i,
+                    ClassifierEngine(apply_fn, params0, max_slots=4),
+                    admission=AdmissionControl(max_queue=24),
+                    reloader=HotReloader(prefix, params0, log=lambda s: None),
+                    quality_fn=quality_for(i),
+                )
+                for i in range(m)
+            ]
+            fleet = ServingFleet(nodes, gen, reload_every=1)
+
+            # ---- interleave: train a phase, checkpoint consensus
+            # (atomic), serve a traffic window against the fresh weights
+            first_probe, window_marks = None, []
+            for phase in range(phases):
+                for _ in range(rounds):
+                    xb, yb = next(gen_batches)
+                    state, _ = trainer.step(state, (jnp.asarray(xb), jnp.asarray(yb)))
+                save(prefix, trainer.network_mean(state), step=(phase + 1) * rounds)
+                window_marks.append([len(n.requests) for n in nodes])
+                fleet.run(max_requests=fleet.offered + serve_chunk, max_ticks=500_000)
+                if first_probe is None:
+                    first_probe = [n.quality_timeline[-1][1] for n in nodes]
+
+            reloads = sum(n.reloader.reloads for n in nodes)
+            final_probe = [n.quality_timeline[-1][1] for n in nodes]
+            served_acc = []
+            for node, mark in zip(nodes, window_marks[-1]):
+                window = [r for r in node.requests[mark:] if r.status == "done"]
+                ok = [int(r.output[0]) == int(r.labels[0]) for r in window]
+                served_acc.append(float(np.mean(ok)) if ok else 0.0)
+            rows.append({
+                "table": "S",
+                "kind": "train_serve",
+                "fleet": f"m{m}s4",
+                "algo": algo,
+                "rate": 0.8,
+                "requests": fleet.offered,
+                "steps": phases * rounds,
+                "reloads": reloads,
+                "reload_skipped": sum(n.reloader.skipped for n in nodes),
+                "first_worst_acc": min(q["acc"] for q in first_probe),
+                "worst_node_acc": min(q["acc"] for q in final_probe),
+                "mean_node_acc": float(np.mean([q["acc"] for q in final_probe])),
+                "worst_node_loss": max(q["loss"] for q in final_probe),
+                "served_worst_acc": min(served_acc),
+            })
+    return rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    return _latency_rows(quick) + _train_serve_rows(quick)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+
+    print_rows(run())

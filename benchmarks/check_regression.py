@@ -26,6 +26,21 @@ across machines:
   error must stay within 2x of fault-free (the ISSUE-6 acceptance bar),
   and the digest layer must have detected (and resynced) at least one
   divergence — a silent fault injector fails the gate.
+* suite **S** — ``p99_ttft_ticks`` per (fleet, rate) latency row
+  (tick-denominated TTFT is bit-deterministic given the loadgen seed) and
+  ``worst_node_acc`` per train-and-serve row, plus baseline-free SLO
+  invariants: every latency row at or below its fleet's measured knee
+  (``rate <= knee_rate``) must have ``rejected == 0`` and
+  ``p99_ttft_ticks`` within ``KNEE_INFLATION x max(p50_ttft_ticks, 1)``;
+  the AD-GDA train-and-serve row's ``worst_node_acc`` must beat its
+  unweighted twin's (the DRO-as-serving-SLO claim); and every
+  train-and-serve row must have actually hot-reloaded (``reloads > 0``).
+
+Every suite's gate lives in one shared ``SuiteSpec`` table below — gated
+metrics, float scenario-axis fields exempt from the row-key rule, and the
+baseline-free invariant hook — so a new suite adds one entry instead of
+re-growing ad-hoc per-suite branches (FT did this ad hoc once; suite S is
+the first through the shared table).
 
 Rows present in only one side are reported but do not fail the gate (suites
 grow across PRs); a metric regression does.
@@ -38,21 +53,13 @@ value — the gate only fails when a drop is reproducible across every run.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 from pathlib import Path
+from typing import Callable
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
-
-# suite -> list of (metric, direction, absolute_ok): "higher" = regression
-# when it drops, "lower" = regression when it grows.  A non-None absolute_ok
-# exempts values still on the right side of that bar from relative gating
-# (cross-machine baselines make pure ratios-of-timings flaky).
-GATES = {
-    "G": [("speedup_fused_vs_packed", "higher", 1.5)],
-    "X": [("wire_bytes", "lower", None)],
-    "FT": [("worst_acc", "higher", None)],
-}
 
 # baseline-free invariants checked on every FRESH suite-X run (they also
 # self-assert inside the bench, but re-asserting here keeps the gate honest
@@ -105,11 +112,7 @@ def _ft_invariant_failures(fresh: dict) -> list:
     return failures
 
 
-def _invariant_failures(suite: str, fresh: dict) -> list:
-    if suite == "FT":
-        return _ft_invariant_failures(fresh)
-    if suite != "X":
-        return []
+def _x_invariant_failures(fresh: dict) -> list:
     failures = []
     for key, row in fresh.items():
         scen = dict(key).get("scenario", "")
@@ -133,17 +136,99 @@ def _invariant_failures(suite: str, fresh: dict) -> list:
     return failures
 
 
-# scenario-axis fields that happen to be floats (so the generic "non-numeric
-# fields are the key" rule would silently collapse a sweep onto one row):
-# the node-dropout rate of suite FT.  `fault_spec` is a string and needs no
-# exemption — keep any new fault axis a string for the same reason.
-AXIS_FIELDS = {"dropout"}
+def _s_invariant_failures(fresh: dict) -> list:
+    """Suite-S baseline-free SLO checks (the README "Serving fleet" SLO,
+    re-asserted on every fresh run so the gate stays honest even if the
+    bench's own constants drift).  Key names (`rate`, `knee_rate`,
+    `rejected`, `p50/p99_ttft_ticks`, `worst_node_acc`, `reloads`) match
+    bench_serving.py / BENCH_S.json / the README verbatim."""
+    from benchmarks.bench_serving import KNEE_INFLATION
+
+    failures = []
+    rows = [dict(r) for r in fresh.values()]
+    for row in rows:
+        if row.get("kind") != "latency" or row["rate"] > row["knee_rate"]:
+            continue
+        scen = f"{row['fleet']}@{row['rate']:g}"
+        p99_bound = KNEE_INFLATION * max(float(row["p50_ttft_ticks"]), 1.0)
+        checks = [
+            ("rejected", float(row["rejected"]), 0.0, "<="),
+            ("p99_ttft_ticks", float(row["p99_ttft_ticks"]), p99_bound, "<="),
+        ]
+        for metric, got, bound, op in checks:
+            ok = got <= bound
+            print(f"{'ok' if ok else 'REGRESSION':10s} {scen}: "
+                  f"{metric} {got:.4g} (below the knee, must be {op} {bound:.4g})")
+            if not ok:
+                failures.append(((("scenario", scen),), metric, bound, got))
+    ts = {r["algo"]: r for r in rows if r.get("kind") == "train_serve"}
+    if ts:
+        for algo, row in sorted(ts.items()):
+            reloads = float(row["reloads"])
+            ok = reloads > 0
+            print(f"{'ok' if ok else 'REGRESSION':10s} train_serve/{algo}: "
+                  f"reloads {reloads:g} (must be > 0)")
+            if not ok:
+                failures.append(((("scenario", f"train_serve/{algo}"),),
+                                 "reloads", 1.0, reloads))
+        if "adgda" in ts and "unweighted" in ts:
+            a = float(ts["adgda"]["worst_node_acc"])
+            u = float(ts["unweighted"]["worst_node_acc"])
+            ok = a > u
+            print(f"{'ok' if ok else 'REGRESSION':10s} train_serve: AD-GDA "
+                  f"worst_node_acc {a:.4g} vs unweighted {u:.4g} (must win)")
+            if not ok:
+                failures.append(((("scenario", "train_serve"),),
+                                 "worst_node_acc_gap", u, a))
+        else:
+            print("REGRESSION train_serve: need both adgda and unweighted rows")
+            failures.append(((("scenario", "train_serve"),), "row_pair", 2.0,
+                             float(len(ts))))
+    return failures
 
 
-def _key(row: dict) -> tuple:
+# ---------------------------------------------------------- the suite table
+@dataclasses.dataclass(frozen=True)
+class SuiteSpec:
+    """Everything the gate knows about one suite, in one place.
+
+    * ``gates`` — (metric, direction, absolute_ok) triples: "higher" =
+      regression when it drops, "lower" = regression when it grows.  A
+      non-None absolute_ok exempts values still on the right side of that
+      bar from relative gating (cross-machine baselines make pure
+      ratios-of-timings flaky).
+    * ``axis_fields`` — scenario-axis fields that happen to be floats (so
+      the generic "non-numeric fields are the key" rule would silently
+      collapse a sweep onto one row): FT's node-dropout rate, S's offered
+      rate.  String axes (``fault_spec``, ``fleet``) need no exemption —
+      keep any new sweep axis a string where possible for the same reason.
+    * ``invariants`` — baseline-free checks re-run on every fresh run
+      (``fresh -> failures``); None when a suite has none.
+    """
+
+    gates: tuple = ()
+    axis_fields: frozenset = frozenset()
+    invariants: Callable[[dict], list] | None = None
+
+
+SPECS = {
+    "G": SuiteSpec(gates=(("speedup_fused_vs_packed", "higher", 1.5),)),
+    "X": SuiteSpec(gates=(("wire_bytes", "lower", None),),
+                   invariants=_x_invariant_failures),
+    "FT": SuiteSpec(gates=(("worst_acc", "higher", None),),
+                    axis_fields=frozenset({"dropout"}),
+                    invariants=_ft_invariant_failures),
+    "S": SuiteSpec(gates=(("p99_ttft_ticks", "lower", None),
+                          ("worst_node_acc", "higher", None)),
+                   axis_fields=frozenset({"rate"}),
+                   invariants=_s_invariant_failures),
+}
+
+
+def _key(row: dict, axis_fields: frozenset = frozenset()) -> tuple:
     return tuple(
         (k, v) for k, v in sorted(row.items())
-        if not isinstance(v, float) or k in AXIS_FIELDS
+        if not isinstance(v, float) or k in axis_fields
     )
 
 
@@ -156,7 +241,7 @@ def _merge_best(suite: str, best: dict, fresh: dict) -> dict:
             out[key] = new
             continue
         merged = dict(old)
-        for metric, direction, _ in GATES.get(suite, []):
+        for metric, direction, _ in SPECS[suite].gates:
             if metric not in new or metric not in old:
                 continue
             o, n = float(old[metric]), float(new[metric])
@@ -174,7 +259,7 @@ def _evaluate(suite: str, baseline: dict, fresh: dict, threshold: float,
             if verbose:
                 print(f"NEW ROW (not gated): {dict(key)}")
             continue
-        for metric, direction, absolute_ok in GATES.get(suite, []):
+        for metric, direction, absolute_ok in SPECS[suite].gates:
             if metric not in new or metric not in old:
                 continue
             o, n = float(old[metric]), float(new[metric])
@@ -200,25 +285,31 @@ def _evaluate(suite: str, baseline: dict, fresh: dict, threshold: float,
 def check(suite: str, threshold: float, retries: int = 1) -> int:
     from benchmarks.run import SUITES
 
+    spec = SPECS[suite]
+
+    def keyed(rows):
+        return {_key(r, spec.axis_fields): r for r in rows}
+
+    def invariants(fresh):
+        return spec.invariants(fresh) if spec.invariants else []
+
     baseline_path = REPO_ROOT / f"BENCH_{suite}.json"
     if not baseline_path.exists():
         print(f"no committed baseline {baseline_path.name}; nothing to gate")
         return 0
-    baseline = {_key(r): r for r in json.loads(baseline_path.read_text())["rows"]}
-    fresh = {_key(r): r for r in SUITES[suite].run(quick=True)}
+    baseline = keyed(json.loads(baseline_path.read_text())["rows"])
+    fresh = keyed(SUITES[suite].run(quick=True))
 
     failures = _evaluate(suite, baseline, fresh, threshold, verbose=True)
-    failures += _invariant_failures(suite, fresh)
+    failures += invariants(fresh)
     attempt = 0
     while failures and attempt < retries:
         attempt += 1
         print(f"\napparent regression — retry {attempt}/{retries} "
               "(timing noise is only believed when reproducible)")
-        fresh = _merge_best(
-            suite, fresh, {_key(r): r for r in SUITES[suite].run(quick=True)}
-        )
+        fresh = _merge_best(suite, fresh, keyed(SUITES[suite].run(quick=True)))
         failures = _evaluate(suite, baseline, fresh, threshold, verbose=True)
-        failures += _invariant_failures(suite, fresh)
+        failures += invariants(fresh)
 
     gone = [k for k in baseline if k not in fresh]
     for k in gone:
@@ -233,7 +324,7 @@ def check(suite: str, threshold: float, retries: int = 1) -> int:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--suite", default="G", choices=sorted(GATES))
+    ap.add_argument("--suite", default="G", choices=sorted(SPECS))
     ap.add_argument("--threshold", type=float, default=0.25)
     ap.add_argument("--retries", type=int, default=1,
                     help="extra full-suite re-runs when a regression appears; "

@@ -126,9 +126,13 @@ def make_adgda(model: str, m: int, *, robust=True, alpha=0.05, topology="ring",
 
 
 def print_rows(rows: list[dict]) -> None:
+    """CSV print; suites with heterogeneous row kinds (e.g. suite S latency
+    vs train_serve) get one header per distinct key set, in order."""
     if not rows:
         return
-    keys = list(rows[0].keys())
-    print(",".join(keys))
+    keys = None
     for r in rows:
+        if list(r.keys()) != keys:
+            keys = list(r.keys())
+            print(",".join(keys))
         print(",".join(f"{r[k]:.4f}" if isinstance(r[k], float) else str(r[k]) for k in keys))

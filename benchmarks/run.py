@@ -12,6 +12,7 @@ Paper-artifact map:
   G   bench_gossip         fused vs packed vs unpacked CHOCO round
   FT  bench_faults         dropout / time-varying topology fault tolerance
   X   bench_exchange       rolled vs ppermute backend HLO collective bytes
+  S   bench_serving        serving fleet: latency/SLO vs load, train-and-serve
 Roofline/dry-run artifacts live in launch/dryrun.py (§Dry-run, §Roofline).
 
 Each suite's rows are persisted to BENCH_<suite>.json next to this package's
@@ -33,6 +34,7 @@ from benchmarks import (
     bench_gossip,
     bench_kernels,
     bench_regularization,
+    bench_serving,
     bench_topology,
 )
 from benchmarks.common import print_rows
@@ -47,6 +49,7 @@ SUITES = {
     "G": bench_gossip,
     "FT": bench_faults,
     "X": bench_exchange,
+    "S": bench_serving,
 }
 
 REPO_ROOT = Path(__file__).resolve().parent.parent

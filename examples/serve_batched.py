@@ -1,8 +1,11 @@
-"""Batched serving: (1) static-batch prefill+decode across three cache
-families (attention KV ring buffer, SSM O(1) state, RG-LRU hybrid), and
-(2) the continuous-batching ServeEngine — slot-managed requests of
-different lengths admitted/retired independently, one vmapped decode step
-per tick with per-slot positions.
+"""Batched serving, three layers up the stack: (1) static-batch
+prefill+decode across three cache families (attention KV ring buffer, SSM
+O(1) state, RG-LRU hybrid), (2) the continuous-batching ServeEngine —
+slot-managed requests of different lengths admitted/retired independently,
+one vmapped decode step per tick — and (3) the decentralized serving fleet:
+per-node engines behind bounded-queue admission control, fed by the seeded
+Poisson/Zipf load generator, hot-reloading consensus checkpoints mid-run
+(the train-and-serve loop benchmarked by suite S).
 
 This is the serving path the decode_32k / long_500k dry-run shapes lower at
 production scale; here it runs reduced configs on CPU.
@@ -10,15 +13,26 @@ production scale; here it runs reduced configs on CPU.
   PYTHONPATH=src python examples/serve_batched.py
 """
 import sys
+import tempfile
 import time
 
 import jax
 import numpy as np
 
+from repro.checkpoint import save
 from repro.configs import get_config
 from repro.launch.serve import main as serve_main
 from repro.models import transformer as T
-from repro.serving import Request, ServeEngine
+from repro.serving import (
+    AdmissionControl,
+    FleetNode,
+    HotReloader,
+    LoadGenConfig,
+    LoadGenerator,
+    Request,
+    ServeEngine,
+    ServingFleet,
+)
 
 ARCHS = ["qwen3-1.7b", "mamba2-1.3b", "recurrentgemma-2b"]
 
@@ -54,9 +68,49 @@ def continuous_batching() -> None:
         print(f"  req {r.rid}: prompt len {len(r.prompt):2d} -> {r.output}")
 
 
+def serving_fleet() -> None:
+    """Two nodes serve seeded Poisson/Zipf traffic behind bounded queues,
+    hot-reloading a consensus checkpoint that lands mid-run — the same
+    stack `launch/serve.py --fleet N --follow` and suite S drive."""
+    print("\n--- qwen3-1.7b (serving fleet: 2 nodes x 2 slots, hot reload) ---")
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    gen = LoadGenerator(LoadGenConfig(
+        num_nodes=2, rate=0.25, vocab_size=cfg.vocab_size,
+        prompt_min=4, prompt_max=16, output_min=1, output_max=6, seed=0,
+    ))
+    with tempfile.TemporaryDirectory() as tmp:
+        prefix = f"{tmp}/consensus"
+        nodes = [
+            FleetNode(
+                i,
+                ServeEngine(cfg, params, max_slots=2, cache_len=32, prompt_bucket=8),
+                admission=AdmissionControl(max_queue=12, policy="reject"),
+                reloader=HotReloader(prefix, params, log=lambda s: None),
+            )
+            for i in range(2)
+        ]
+        fleet = ServingFleet(nodes, gen, reload_every=4)
+        fleet.run(max_requests=20, max_ticks=10_000)
+        # a fresh consensus checkpoint lands (atomic save); the next poll
+        # swaps it in between ticks — traffic never sees a torn file
+        save(prefix, T.init_model(jax.random.PRNGKey(1), cfg), step=100)
+        rep = fleet.run(max_requests=fleet.offered + 20, max_ticks=10_000)
+    f = rep.fleet
+    reloads = sum(n.reloader.reloads for n in nodes)
+    print(f"offered {rep.offered}, completed {f['completed']}, "
+          f"rejected {f['rejected']} in {rep.ticks} ticks; "
+          f"hot reloads {reloads} (step {nodes[0].reloader.step})")
+    print(f"  TTFT ticks p50/p95/p99 = {f['p50_ttft_ticks']:.0f}/"
+          f"{f['p95_ttft_ticks']:.0f}/{f['p99_ttft_ticks']:.0f}, "
+          f"queue mean/max = {f['mean_queue_depth']:.2f}/{f['max_queue_depth']:.0f}, "
+          f"slot occupancy = {f['slot_occupancy']:.2f}")
+
+
 def main() -> None:
     static_batches()
     continuous_batching()
+    serving_fleet()
 
 
 if __name__ == "__main__":

@@ -1,3 +1,25 @@
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.fleet import (
+    AdmissionControl,
+    ClassifierEngine,
+    EvalRequest,
+    FleetNode,
+    FleetReport,
+    HotReloader,
+    ServingFleet,
+)
+from repro.serving.loadgen import LoadGenConfig, LoadGenerator
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = [
+    "Request",
+    "ServeEngine",
+    "AdmissionControl",
+    "ClassifierEngine",
+    "EvalRequest",
+    "FleetNode",
+    "FleetReport",
+    "HotReloader",
+    "ServingFleet",
+    "LoadGenConfig",
+    "LoadGenerator",
+]

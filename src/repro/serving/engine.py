@@ -12,6 +12,15 @@ vLLM-style slot management on top of the model zoo's decode path:
   lengths progress independently;
 * finished requests (max tokens or EOS) release their slot immediately.
 
+Admission is strictly FIFO: each tick runs an admit/finish fixpoint, so a
+request that completes *at prefill* (single-token budget, or EOS emitted as
+the final prompt-prefill token) releases its slot the same tick and the
+next pending request is admitted into it — slot contention never reorders
+or starves the queue.  Every ``Request`` carries tick- and wall-clock
+timestamps (submit/admit/first-token/finish) consumed by the fleet metrics
+layer (`repro.serving.metrics`); ``prefill_traces`` / ``decode_traces``
+count jit retraces so the bucketed-prefill warm-cache claim is testable.
+
 This is the production shape of the ``decode_32k`` dry-run: the engine is
 the host-side loop, the vmapped decode step is the device program.
 """
@@ -19,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
 from typing import Callable
 
@@ -41,6 +51,23 @@ class Request:
     rid: int = -1
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle + timing, stamped by the engine/fleet (ticks are engine
+    # steps; walls are host seconds).  first token lands at admit (the
+    # prefill emits it), so TTFT = admit_tick - submit_tick = queue wait.
+    status: str = "queued"  # queued | active | done | rejected | shed
+    submit_tick: int = -1
+    admit_tick: int = -1
+    finish_tick: int = -1
+    submit_wall: float = 0.0
+    first_wall: float = 0.0
+    finish_wall: float = 0.0
+
+    @property
+    def ttft_ticks(self) -> int:
+        """Time-to-first-token in engine ticks (queue wait; -1 if unserved)."""
+        if self.admit_tick < 0 or self.submit_tick < 0:
+            return -1
+        return self.admit_tick - self.submit_tick
 
 
 def _batch_axes(cache) -> object:
@@ -84,6 +111,12 @@ class ServeEngine:
         self.pending: deque[Request] = deque()
         self._ids = itertools.count()
         self._steps = 0
+        # jit retrace counters (incremented at TRACE time only): one prefill
+        # trace per prompt bucket, one decode trace total, is the warm-cache
+        # contract pinned by tests/test_serving.py
+        self.prefill_traces = 0
+        self.decode_traces = 0
+        self.tokens_generated = 0
 
         # one-token decode for every slot, per-slot positions.  The vmapped
         # axis is the pool's batch dim: axis 1 for stacked-blocks leaves
@@ -100,6 +133,7 @@ class ServeEngine:
             return jax.lax.index_in_dim(leaf, 0, axis=ax, keepdims=False)
 
         def decode_one(params, tok, cache_slot, pos):
+            self.decode_traces += 1  # python side effect: runs at trace time only
             cache_b = jax.tree_util.tree_map_with_path(_expand, cache_slot)
             logits, new_cache = T.decode_step(params, tok[None, None], cache_b, pos, cfg)
             return logits[0, 0], jax.tree_util.tree_map_with_path(_squeeze, new_cache)
@@ -155,12 +189,16 @@ class ServeEngine:
             cfg = self.cfg
 
             def fn(params, batch):
+                self.prefill_traces += 1  # trace-time side effect (retrace counter)
                 return T.prefill(params, batch, cfg, cache_len=self.cache_len)
 
             self._prefills[length] = jax.jit(fn)
         return self._prefills[length]
 
     def _admit(self, req: Request, slot: int) -> None:
+        req.admit_tick = self._steps
+        req.first_wall = time.time()
+        req.status = "active"
         plen = len(req.prompt)
         if self._recurrent or self._windowed:
             # recurrent states absorb every consumed token, and wrapped ring
@@ -189,54 +227,71 @@ class ServeEngine:
         self.pos[slot] = plen
         self.last_tok[slot] = first
         req.output.append(first)
+        self.tokens_generated += 1
         self.active[slot] = req
 
     # -------------------------------------------------------------- API
     def submit(self, req: Request) -> int:
         req.rid = next(self._ids)
+        if req.submit_tick < 0:  # the fleet may pre-stamp the arrival tick
+            req.submit_tick = self._steps
+            req.submit_wall = time.time()
         self.pending.append(req)
         return req.rid
 
     def _finish(self, slot: int) -> None:
-        self.active[slot].done = True
+        r = self.active[slot]
+        r.done = True
+        r.status = "done"
+        r.finish_tick = self._steps
+        r.finish_wall = time.time()
         del self.active[slot]
         self.pos[slot] = 0
 
+    def _complete(self, r: Request) -> bool:
+        return len(r.output) >= r.max_new_tokens or (
+            r.eos_id is not None and bool(r.output) and r.output[-1] == r.eos_id
+        )
+
     def step(self) -> None:
-        """One engine tick: admit, decode one token for all active slots."""
-        # admit as many pending requests as there are free slots
-        for slot in range(self.max_slots):
-            if not self.pending:
+        """One engine tick: admit (FIFO), decode one token for all active slots.
+
+        Admission runs to a fixpoint with completion: a request that is
+        already complete after its prefill (single-token budget, or EOS
+        emitted as the final prompt-prefill token) releases its slot THIS
+        tick and the next pending request is admitted into it, in strict
+        submit order.  Each loop iteration either admits at least one
+        pending request or breaks, so the fixpoint terminates.
+        """
+        while True:
+            for slot in list(self.active):
+                if self._complete(self.active[slot]):
+                    self._finish(slot)
+            free = [s for s in range(self.max_slots) if s not in self.active]
+            if not (self.pending and free):
                 break
-            if slot not in self.active:
+            for slot in free:
+                if not self.pending:
+                    break
                 self._admit(self.pending.popleft(), slot)
 
-        # early completion check (a prompt-only request may finish at admit)
-        for slot in list(self.active):
-            r = self.active[slot]
-            if len(r.output) >= r.max_new_tokens or (
-                r.eos_id is not None and r.output and r.output[-1] == r.eos_id
-            ):
-                self._finish(slot)
+        if self.active:
+            toks = jnp.asarray(self.last_tok)
+            pos = jnp.asarray(self.pos)
+            logits, new_cache = self._decode(self.params, toks, self.cache, pos)
+            self.cache = new_cache
+            self._key, sub = jax.random.split(self._key)
+            next_tok = np.asarray(self._sample(logits, sub))
 
-        if not self.active:
-            return
-
-        toks = jnp.asarray(self.last_tok)
-        pos = jnp.asarray(self.pos)
-        logits, new_cache = self._decode(self.params, toks, self.cache, pos)
-        self.cache = new_cache
-        self._key, sub = jax.random.split(self._key)
-        next_tok = np.asarray(self._sample(logits, sub))
-
-        for slot in list(self.active):
-            r = self.active[slot]
-            tok = int(next_tok[slot])
-            r.output.append(tok)
-            self.pos[slot] += 1
-            self.last_tok[slot] = tok
-            if len(r.output) >= r.max_new_tokens or (r.eos_id is not None and tok == r.eos_id):
-                self._finish(slot)
+            for slot in list(self.active):
+                r = self.active[slot]
+                tok = int(next_tok[slot])
+                r.output.append(tok)
+                self.tokens_generated += 1
+                self.pos[slot] += 1
+                self.last_tok[slot] = tok
+                if self._complete(r):
+                    self._finish(slot)
         self._steps += 1
 
     def run(self, requests: list[Request], max_ticks: int = 10_000) -> list[Request]:

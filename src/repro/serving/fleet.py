@@ -1,0 +1,351 @@
+"""Decentralized serving fleet: one engine per node, admission control, and
+train-and-serve hot reload.
+
+The fleet closes the paper's loop at serving time: every node serves its
+*local* traffic (the load generator's per-node streams mirror the training
+heterogeneity) from the collaboratively trained **consensus model**, and
+hot-reloads new consensus weights from the ongoing decentralized training
+run through the atomic ``repro.checkpoint`` machinery — so the DRO
+worst-distribution guarantee becomes a measurable serving-quality SLO per
+node population.
+
+Pieces (each usable standalone):
+
+* :class:`AdmissionControl` — a bounded pending queue per node with a
+  ``reject`` (refuse new arrivals) or ``shed_oldest`` (evict the longest
+  waiting queued request) overload policy, so offered load beyond the
+  latency knee degrades gracefully instead of queueing unboundedly;
+* :class:`HotReloader` — polls a step-tagged checkpoint prefix and swaps in
+  the newest *loadable* step.  Saves are atomic (tmp → fsync → rename), and
+  the reloader walks past unreadable files exactly like
+  ``checkpoint.restore_latest`` — a torn or in-flight checkpoint can never
+  be served;
+* :class:`ClassifierEngine` — a slot-pool engine over any vmappable
+  ``apply_fn`` for single-step (classification) serving: same admission /
+  queue / timing semantics as the LM ``ServeEngine``, used by the
+  train-and-serve benchmark to measure per-node quality *on served
+  requests*;
+* :class:`FleetNode` / :class:`ServingFleet` — the per-node wrapper and the
+  fleet tick loop (arrivals → admission → engine tick → telemetry →
+  periodic reload + quality probe).
+
+Engines are duck-typed: anything with ``pending`` / ``active`` /
+``max_slots`` / ``params`` / ``submit(req)`` / ``step()`` (and Request-like
+objects carrying the timing fields of ``repro.serving.engine.Request``)
+plugs in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import all_steps, restore, step_path
+from repro.serving import metrics as M
+
+__all__ = [
+    "AdmissionControl",
+    "HotReloader",
+    "ClassifierEngine",
+    "EvalRequest",
+    "FleetNode",
+    "ServingFleet",
+    "FleetReport",
+]
+
+
+# ------------------------------------------------------------------ admission
+@dataclasses.dataclass
+class AdmissionControl:
+    """Bounded queue with an overload policy.
+
+    ``max_queue`` bounds the engine's *pending* queue (requests already in a
+    slot are not counted).  ``policy``:
+
+    * ``"reject"`` — a full queue refuses the arrival (it is marked
+      ``rejected`` and never enters the engine);
+    * ``"shed_oldest"`` — the oldest queued request is evicted (marked
+      ``shed``) and the arrival is admitted, bounding staleness instead of
+      arrival loss.
+    """
+
+    max_queue: int = 8
+    policy: str = "reject"
+
+    def __post_init__(self):
+        if self.policy not in ("reject", "shed_oldest"):
+            raise ValueError(f"unknown admission policy {self.policy!r}")
+
+    def offer(self, engine, req, *, tick: int) -> str:
+        req.submit_tick = tick
+        req.submit_wall = time.time()
+        if len(engine.pending) >= self.max_queue:
+            if self.policy == "reject":
+                req.status = "rejected"
+                req.finish_tick = tick
+                req.finish_wall = req.submit_wall
+                return "rejected"
+            victim = engine.pending.popleft()
+            victim.status = "shed"
+            victim.finish_tick = tick
+            victim.finish_wall = time.time()
+        engine.submit(req)
+        return "admitted"
+
+
+# ----------------------------------------------------------------- hot reload
+class HotReloader:
+    """Poll a step-tagged checkpoint prefix; serve only complete checkpoints.
+
+    ``poll()`` returns ``(tree, step)`` when a step newer than the last
+    loaded one can be restored, else ``None``.  Unreadable files (torn
+    writes from non-atomic tools, in-flight copies) are skipped with a log
+    line and the newest *older* loadable step is used instead — the same
+    fallback discipline as ``checkpoint.restore_latest``, so a fleet node
+    can never serve a torn checkpoint (saves from ``repro.checkpoint.save``
+    are atomic+durable to begin with; this guards everything else).
+    """
+
+    def __init__(self, path: str, template, *, log: Callable[[str], None] = print):
+        self.path = path
+        self.template = template
+        self.log = log
+        self.step: int | None = None  # last successfully loaded step
+        self.reloads = 0
+        self.skipped = 0
+
+    def poll(self):
+        for step in reversed(all_steps(self.path)):
+            if self.step is not None and step <= self.step:
+                break
+            fname = step_path(self.path, step)
+            try:
+                tree = restore(fname, self.template)
+            except Exception as e:  # BadZipFile / KeyError / ValueError / OSError
+                self.skipped += 1
+                self.log(
+                    f"hot reload: {fname} is unreadable ({type(e).__name__}); "
+                    f"keeping the last complete checkpoint"
+                )
+                continue
+            self.step = step
+            self.reloads += 1
+            return tree, step
+        return None
+
+
+# --------------------------------------------------------- classifier engine
+@dataclasses.dataclass
+class EvalRequest:
+    """A single-step (classification) serving request: features in,
+    predictions out.  Carries the same lifecycle/timing fields as the LM
+    ``Request`` so the metrics layer treats both uniformly."""
+
+    features: np.ndarray
+    labels: np.ndarray | None = None
+    rid: int = -1
+    output: list[int] = dataclasses.field(default_factory=list)  # predicted labels
+    done: bool = False
+    status: str = "queued"
+    submit_tick: int = -1
+    admit_tick: int = -1
+    finish_tick: int = -1
+    submit_wall: float = 0.0
+    first_wall: float = 0.0
+    finish_wall: float = 0.0
+
+    @property
+    def ttft_ticks(self) -> int:
+        if self.admit_tick < 0 or self.submit_tick < 0:
+            return -1
+        return self.admit_tick - self.submit_tick
+
+
+class ClassifierEngine:
+    """Slot-pool serving for single-forward models (one tick per request).
+
+    Each tick admits up to ``max_slots`` pending requests FIFO, runs ONE
+    batched forward over their stacked features, and finishes them — the
+    classification analog of the LM engine's continuous batching.  Shares
+    the engine duck-type (``pending/active/max_slots/params/submit/step``).
+    """
+
+    def __init__(self, apply_fn, params, *, max_slots: int = 8):
+        self.apply_fn = apply_fn
+        self.params = params
+        self.max_slots = max_slots
+        self.pending: deque[EvalRequest] = deque()
+        self.active: dict[int, EvalRequest] = {}
+        self._steps = 0
+        self._ids = 0
+        self.tokens_generated = 0  # one "token" = one prediction
+        self.last_busy = 0  # slots used this tick (requests retire in-tick)
+
+    def submit(self, req: EvalRequest) -> int:
+        req.rid = self._ids
+        self._ids += 1
+        if req.submit_tick < 0:
+            req.submit_tick = self._steps
+            req.submit_wall = time.time()
+        self.pending.append(req)
+        return req.rid
+
+    def step(self) -> None:
+        batch = []
+        while self.pending and len(batch) < self.max_slots:
+            batch.append(self.pending.popleft())
+        self.last_busy = len(batch)
+        if batch:
+            x = np.concatenate([np.atleast_2d(r.features) for r in batch], axis=0)
+            sizes = [np.atleast_2d(r.features).shape[0] for r in batch]
+            preds = np.asarray(jnp.argmax(self.apply_fn(self.params, jnp.asarray(x)), axis=-1))
+            off = 0
+            now = time.time()
+            for r, k in zip(batch, sizes):
+                r.admit_tick = self._steps
+                r.first_wall = now
+                r.output = preds[off:off + k].astype(int).tolist()
+                off += k
+                r.status = "done"
+                r.done = True
+                r.finish_tick = self._steps
+                r.finish_wall = now
+                self.tokens_generated += k
+        self._steps += 1
+
+
+# ----------------------------------------------------------------- the fleet
+class FleetNode:
+    """One node: engine + admission + (optional) hot reload + quality probe.
+
+    ``quality_fn(params) -> dict`` is evaluated against the node's *local*
+    distribution on every successful reload (and once at start), building
+    the per-node serving-quality timeline the train-and-serve benchmark
+    gates on.
+    """
+
+    def __init__(self, node_id: int, engine, *, admission: AdmissionControl | None = None,
+                 reloader: HotReloader | None = None, quality_fn=None):
+        self.node_id = node_id
+        self.engine = engine
+        self.admission = admission or AdmissionControl(max_queue=8)
+        self.reloader = reloader
+        self.quality_fn = quality_fn
+        self.requests: list = []  # every request ever offered (any status)
+        self.queue_samples: list[int] = []
+        self.occupancy_samples: list[int] = []
+        self.quality_timeline: list[tuple[int | None, dict]] = []
+        if quality_fn is not None:
+            self.quality_timeline.append((None, quality_fn(engine.params)))
+
+    def offer(self, req, *, tick: int) -> str:
+        self.requests.append(req)
+        return self.admission.offer(self.engine, req, tick=tick)
+
+    def tick(self) -> None:
+        self.engine.step()
+        self.queue_samples.append(len(self.engine.pending))
+        # single-step engines retire requests within the tick — their busy
+        # count for the tick is last_busy, not the (empty) active pool
+        self.occupancy_samples.append(
+            getattr(self.engine, "last_busy", 0) or len(self.engine.active)
+        )
+
+    def maybe_reload(self) -> int | None:
+        """Poll for newer consensus weights; swap + probe quality if found.
+
+        The swap happens between engine ticks (the jitted step functions
+        close over nothing — params are arguments), so a reload is atomic
+        from the traffic's point of view.
+        """
+        if self.reloader is None:
+            return None
+        got = self.reloader.poll()
+        if got is None:
+            return None
+        params, step = got
+        self.engine.params = params
+        if self.quality_fn is not None:
+            self.quality_timeline.append((step, self.quality_fn(params)))
+        return step
+
+    @property
+    def drained(self) -> bool:
+        return not (self.engine.pending or self.engine.active)
+
+    def summary(self, wall_seconds: float) -> dict:
+        return M.summarize_node(
+            self.requests,
+            queue_samples=self.queue_samples,
+            occupancy_samples=self.occupancy_samples,
+            max_slots=self.engine.max_slots,
+            wall_seconds=wall_seconds,
+            tokens_generated=self.engine.tokens_generated,
+        )
+
+
+@dataclasses.dataclass
+class FleetReport:
+    ticks: int
+    wall_seconds: float
+    offered: int
+    node_summaries: list[dict]
+    fleet: dict
+    quality: list[list[tuple[int | None, dict]]]  # per node: (ckpt step, metrics)
+
+
+class ServingFleet:
+    """Tick-synchronous fleet driver.
+
+    Each global tick: (1) pull arrivals from the load generator up to the
+    current tick and route them through each target node's admission
+    control, (2) tick every engine (one decode step), (3) every
+    ``reload_every`` ticks poll the hot reloaders.  Runs until
+    ``max_requests`` have been offered AND all queues drained, or
+    ``max_ticks`` elapses.
+    """
+
+    def __init__(self, nodes: list[FleetNode], loadgen=None, *, reload_every: int = 0):
+        self.nodes = nodes
+        self.loadgen = loadgen
+        self.reload_every = reload_every
+        self.ticks = 0
+        self.offered = 0
+
+    def run(self, *, max_requests: int | None = None, max_ticks: int = 1_000_000,
+            drain: bool = True) -> FleetReport:
+        t0 = time.time()
+        start = self.ticks
+        while self.ticks - start < max_ticks:
+            feeding = self.loadgen is not None and (
+                max_requests is None or self.offered < max_requests
+            )
+            if feeding:
+                for node_id, req in self.loadgen.poll(self.ticks):
+                    self.nodes[node_id].offer(req, tick=self.ticks)
+                    self.offered += 1
+            if self.reload_every and self.ticks % self.reload_every == 0:
+                for node in self.nodes:
+                    node.maybe_reload()
+            for node in self.nodes:
+                node.tick()
+            self.ticks += 1
+            if not feeding and (not drain or all(n.drained for n in self.nodes)):
+                break
+        return self.report(time.time() - t0)
+
+    def report(self, wall_seconds: float) -> FleetReport:
+        summaries = [n.summary(wall_seconds) for n in self.nodes]
+        all_requests = [r for n in self.nodes for r in n.requests]
+        return FleetReport(
+            ticks=self.ticks,
+            wall_seconds=wall_seconds,
+            offered=self.offered,
+            node_summaries=summaries,
+            fleet=M.summarize_fleet(summaries, all_requests),
+            quality=[n.quality_timeline for n in self.nodes],
+        )

@@ -1,0 +1,130 @@
+"""Serving-fleet metrics: per-node and fleet-wide latency/SLO accounting.
+
+One vocabulary, used verbatim everywhere (suite S rows in ``BENCH_S.json``,
+the printed benchmark table, ``benchmarks/check_regression.py --suite S``,
+``launch/serve.py --metrics-out``, and the README "Serving fleet" section):
+
+* ``p50_ttft_ticks`` / ``p95_ttft_ticks`` / ``p99_ttft_ticks`` — percentiles
+  of time-to-first-token in **engine ticks** (the first token rides the
+  prefill at admit, so TTFT is exactly queue wait; tick-denominated metrics
+  are bit-deterministic given the loadgen seed and gateable across
+  machines);
+* ``p50_ttft_ms`` / ``p99_ttft_ms`` — the same percentiles in wall
+  milliseconds (reported, not gated: host-dependent);
+* ``per_token_ms`` — mean wall milliseconds per generated token over the
+  run (decode steps amortized over all tokens);
+* ``tok_per_s`` — aggregate generated tokens per wall second;
+* ``mean_queue_depth`` / ``max_queue_depth`` — pending-queue occupancy
+  sampled every tick;
+* ``slot_occupancy`` — mean fraction of the slot pool busy per tick;
+* ``requests`` / ``completed`` / ``rejected`` / ``shed`` — admission
+  accounting (``rejected``: refused at arrival by the bounded queue;
+  ``shed``: evicted from the queue to make room under the shed-oldest
+  policy).
+
+The **SLO** suite S gates is stated on these keys: below the measured
+latency knee, ``rejected == 0`` and ``p99_ttft_ticks`` stays within a fixed
+inflation factor of ``p50_ttft_ticks``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "LATENCY_KEYS",
+    "percentiles",
+    "summarize_requests",
+    "summarize_node",
+    "summarize_fleet",
+]
+
+# the shared latency/SLO key vocabulary, in table order
+LATENCY_KEYS = (
+    "requests",
+    "completed",
+    "rejected",
+    "shed",
+    "p50_ttft_ticks",
+    "p95_ttft_ticks",
+    "p99_ttft_ticks",
+    "p50_ttft_ms",
+    "p99_ttft_ms",
+    "per_token_ms",
+    "tok_per_s",
+    "mean_queue_depth",
+    "max_queue_depth",
+    "slot_occupancy",
+)
+
+
+def percentiles(xs, qs=(50, 95, 99)) -> dict[float, float]:
+    """Empirical percentiles (nearest-rank on the sorted sample); 0.0 when
+    the sample is empty so overload rows still render."""
+    xs = np.asarray(list(xs), np.float64)
+    if xs.size == 0:
+        return {q: 0.0 for q in qs}
+    # "higher" = conservative nearest-rank: the reported p99 is an actual
+    # sample value with >= 99% of the distribution at or below it
+    return {q: float(np.percentile(xs, q, method="higher")) for q in qs}
+
+
+def summarize_requests(requests) -> dict:
+    """Latency stats over a set of Request-like objects (done/rejected/shed).
+
+    Only the queue/engine timestamps stamped by the engine and admission
+    layer are read (duck-typed: the LM ``ServeEngine`` and the classifier
+    engine both qualify).
+    """
+    done = [r for r in requests if r.status == "done"]
+    rejected = sum(r.status == "rejected" for r in requests)
+    shed = sum(r.status == "shed" for r in requests)
+    ttft_ticks = [r.ttft_ticks for r in done]
+    ttft_ms = [(r.first_wall - r.submit_wall) * 1e3 for r in done]
+    p_t = percentiles(ttft_ticks)
+    p_w = percentiles(ttft_ms, (50, 99))
+    tokens = sum(len(r.output) for r in done)
+    return {
+        "requests": len(requests),
+        "completed": len(done),
+        "rejected": int(rejected),
+        "shed": int(shed),
+        "tokens": tokens,
+        "p50_ttft_ticks": p_t[50],
+        "p95_ttft_ticks": p_t[95],
+        "p99_ttft_ticks": p_t[99],
+        "p50_ttft_ms": p_w[50],
+        "p99_ttft_ms": p_w[99],
+    }
+
+
+def summarize_node(requests, *, queue_samples, occupancy_samples, max_slots,
+                   wall_seconds, tokens_generated) -> dict:
+    """Per-node roll-up: request latency stats + queue/slot telemetry."""
+    out = summarize_requests(requests)
+    q = np.asarray(queue_samples, np.float64)
+    occ = np.asarray(occupancy_samples, np.float64)
+    out.update({
+        "mean_queue_depth": float(q.mean()) if q.size else 0.0,
+        "max_queue_depth": float(q.max()) if q.size else 0.0,
+        "slot_occupancy": float(occ.mean() / max_slots) if occ.size else 0.0,
+        "per_token_ms": (wall_seconds * 1e3 / tokens_generated) if tokens_generated else 0.0,
+        "tok_per_s": (tokens_generated / wall_seconds) if wall_seconds > 0 else 0.0,
+    })
+    return out
+
+
+def summarize_fleet(node_summaries: list[dict], all_requests) -> dict:
+    """Fleet-wide roll-up: percentiles pooled over every node's requests
+    (NOT a mean of per-node percentiles), throughput and admission totals
+    summed, queue/occupancy averaged."""
+    out = summarize_requests(all_requests)
+    if not node_summaries:
+        return out
+    out.update({
+        "per_token_ms": float(np.mean([n["per_token_ms"] for n in node_summaries])),
+        "tok_per_s": float(np.sum([n["tok_per_s"] for n in node_summaries])),
+        "mean_queue_depth": float(np.mean([n["mean_queue_depth"] for n in node_summaries])),
+        "max_queue_depth": float(np.max([n["max_queue_depth"] for n in node_summaries])),
+        "slot_occupancy": float(np.mean([n["slot_occupancy"] for n in node_summaries])),
+    })
+    return out

@@ -1,0 +1,201 @@
+"""Serving fleet: admission control under overload, hot reload that can
+never serve a torn checkpoint, per-node quality tracking across reloads,
+and the metrics layer's invariants."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import save, step_path
+from repro.serving import (
+    AdmissionControl,
+    ClassifierEngine,
+    EvalRequest,
+    FleetNode,
+    HotReloader,
+    LoadGenConfig,
+    LoadGenerator,
+    ServingFleet,
+)
+from repro.serving.metrics import percentiles, summarize_fleet
+
+
+def _apply(params, x):
+    return x @ params["w"]
+
+
+def _params(scale=1.0, dim=4, classes=3):
+    return {"w": np.eye(dim, classes) * scale}
+
+
+def _eval_payload(dim=4, classes=3):
+    def payload(node, rng, plen, max_new):
+        y = rng.integers(0, classes)
+        x = np.zeros((1, dim), np.float32)
+        x[0, y] = 1.0
+        x += rng.normal(size=(1, dim)).astype(np.float32) * 0.05
+        return EvalRequest(features=x, labels=np.asarray([y], np.int32))
+    return payload
+
+
+def _fleet(m=2, rate=0.8, max_queue=4, policy="reject", slots=2, seed=0, params=None):
+    gen = LoadGenerator(
+        LoadGenConfig(num_nodes=m, rate=rate, vocab_size=16, seed=seed),
+        payload=_eval_payload(),
+    )
+    nodes = [
+        FleetNode(
+            i,
+            ClassifierEngine(_apply, params or _params(), max_slots=slots),
+            admission=AdmissionControl(max_queue=max_queue, policy=policy),
+        )
+        for i in range(m)
+    ]
+    return ServingFleet(nodes, gen)
+
+
+# ---------------------------------------------------------------- admission
+def test_fleet_completes_all_requests_under_light_load():
+    fleet = _fleet(rate=0.3)
+    rep = fleet.run(max_requests=80, max_ticks=2000)
+    assert rep.offered >= 80
+    assert rep.fleet["completed"] == rep.offered
+    assert rep.fleet["rejected"] == 0 and rep.fleet["shed"] == 0
+    assert rep.fleet["p50_ttft_ticks"] <= rep.fleet["p95_ttft_ticks"] <= rep.fleet["p99_ttft_ticks"]
+
+
+def test_bounded_queue_rejects_under_overload():
+    """Offered load >> capacity: the queue bound holds, overflow is rejected,
+    and accounting is exact (completed + rejected == offered once drained)."""
+    fleet = _fleet(m=1, rate=6.0, max_queue=3, slots=1)
+    rep = fleet.run(max_requests=100, max_ticks=3000)
+    assert rep.fleet["rejected"] > 0
+    assert rep.fleet["max_queue_depth"] <= 3
+    assert rep.fleet["completed"] + rep.fleet["rejected"] == rep.offered
+    for r in fleet.nodes[0].requests:
+        assert r.status in ("done", "rejected")
+
+
+def test_shed_oldest_evicts_queued_not_arrivals():
+    fleet = _fleet(m=1, rate=6.0, max_queue=3, slots=1, policy="shed_oldest")
+    rep = fleet.run(max_requests=100, max_ticks=3000)
+    assert rep.fleet["shed"] > 0 and rep.fleet["rejected"] == 0
+    assert rep.fleet["max_queue_depth"] <= 3
+    assert rep.fleet["completed"] + rep.fleet["shed"] == rep.offered
+    node = fleet.nodes[0]
+    shed = [r for r in node.requests if r.status == "shed"]
+    done = [r for r in node.requests if r.status == "done"]
+    # a shed request was evicted before service: it never got a first token
+    assert all(r.admit_tick < 0 for r in shed)
+    assert all(r.admit_tick >= 0 for r in done)
+
+
+def test_admission_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        AdmissionControl(max_queue=2, policy="drop-newest")
+
+
+# --------------------------------------------------------------- hot reload
+def test_hot_reloader_never_serves_torn_checkpoint(tmp_path):
+    """A garbage file at the newest step is skipped (with the fallback to
+    the last complete one), and a subsequent atomic save is picked up."""
+    prefix = str(tmp_path / "consensus")
+    good = _params(scale=2.0)
+    save(prefix, good, step=1)
+    # a torn checkpoint, as a non-atomic writer would leave it
+    with open(step_path(prefix, 2), "wb") as f:
+        f.write(b"\x00garbage not a zip")
+
+    logs = []
+    rl = HotReloader(prefix, _params(), log=logs.append)
+    tree, step = rl.poll()
+    assert step == 1 and np.allclose(tree["w"], good["w"])
+    assert rl.skipped == 1 and any("unreadable" in l for l in logs)
+
+    # nothing new: poll is a no-op (the torn file is not retried as "new")
+    assert rl.poll() is None
+
+    newer = _params(scale=3.0)
+    save(prefix, newer, step=3)
+    tree, step = rl.poll()
+    assert step == 3 and np.allclose(tree["w"], newer["w"])
+    assert rl.reloads == 2
+
+
+def test_hot_reloader_inflight_tmp_is_invisible(tmp_path):
+    """The atomic-save machinery's in-flight .tmp file is never a candidate."""
+    prefix = str(tmp_path / "consensus")
+    save(prefix, _params(), step=1)
+    with open(step_path(prefix, 2) + ".tmp", "wb") as f:
+        f.write(b"partial write in progress")
+    rl = HotReloader(prefix, _params())
+    _, step = rl.poll()
+    assert step == 1
+
+
+def test_fleet_hot_reload_swaps_params_and_tracks_quality(tmp_path):
+    """Nodes serving a broken model reload a good checkpoint mid-run: served
+    accuracy recovers and the quality timeline records the transition."""
+    prefix = str(tmp_path / "consensus")
+    bad = {"w": -np.eye(4, 3)}  # anti-diagonal: always wrong
+    good = _params(scale=1.0)
+
+    rng = np.random.default_rng(0)
+    val_x = np.eye(4, dtype=np.float32)[rng.integers(0, 3, 64)]
+    val_y = val_x[:, :3].argmax(-1)
+
+    def quality(params):
+        pred = np.asarray(_apply(params, val_x)).argmax(-1)
+        return {"acc": float((pred == val_y).mean())}
+
+    gen = LoadGenerator(
+        LoadGenConfig(num_nodes=1, rate=0.5, vocab_size=16, seed=3),
+        payload=_eval_payload(),
+    )
+    node = FleetNode(
+        0,
+        ClassifierEngine(_apply, bad, max_slots=2),
+        admission=AdmissionControl(max_queue=8),
+        reloader=HotReloader(prefix, _params(), log=lambda s: None),
+        quality_fn=quality,
+    )
+    fleet = ServingFleet([node], gen, reload_every=5)
+    fleet.run(max_requests=30, max_ticks=200)
+    assert node.reloader.reloads == 0  # nothing to load yet
+
+    save(prefix, good, step=10)
+    rep = fleet.run(max_requests=60, max_ticks=400)
+    assert node.reloader.reloads == 1 and node.reloader.step == 10
+    assert np.allclose(node.engine.params["w"], good["w"])
+    # timeline: initial probe (step None, broken) then the reload (step 10)
+    (s0, q0), (s1, q1) = node.quality_timeline
+    assert s0 is None and q0["acc"] == 0.0
+    assert s1 == 10 and q1["acc"] == 1.0
+    # served requests after the reload are answered by the good model
+    served_after = [
+        r for r in node.requests
+        if r.status == "done" and r.admit_tick is not None and r.admit_tick >= 0
+        and r.admit_tick > 5 and r.labels is not None
+    ]
+    late = [r for r in served_after if r.admit_tick >= rep.ticks - 50]
+    correct = [int(r.output[0]) == int(r.labels[0]) for r in late]
+    assert correct and np.mean(correct) > 0.9
+
+
+# ------------------------------------------------------------------ metrics
+def test_percentiles_and_fleet_rollup():
+    p = percentiles([1, 2, 3, 4, 100])
+    assert p[50] <= p[95] <= p[99] == 100
+    assert percentiles([])[99] == 0.0
+    assert summarize_fleet([], [])["requests"] == 0
+
+
+def test_metrics_ttft_is_queue_wait():
+    """With one slot and single-tick service, the k-th of a burst of
+    simultaneous arrivals waits exactly k ticks."""
+    eng = ClassifierEngine(_apply, _params(), max_slots=1)
+    node = FleetNode(0, eng, admission=AdmissionControl(max_queue=100))
+    reqs = [_eval_payload()(0, np.random.default_rng(i), 0, 0) for i in range(5)]
+    for r in reqs:
+        node.offer(r, tick=0)
+    for _ in range(6):
+        node.tick()
+    assert [r.ttft_ticks for r in reqs] == [0, 1, 2, 3, 4]

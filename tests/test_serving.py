@@ -1,5 +1,10 @@
-"""Continuous-batching serving engine: slot reuse, per-slot positions, and
-token-for-token agreement with the plain sequential decode path."""
+"""Continuous-batching serving engine: slot reuse, per-slot positions,
+token-for-token agreement with the plain sequential decode path — plus the
+fleet-hardening contracts: FIFO admission under slot contention, same-tick
+slot release when a request completes at prefill, and the bucketed-prefill
+warm-jit-cache claim (retrace counting)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -73,6 +78,86 @@ def test_engine_eos_stops_early(dense_setup):
     assert r.done
     assert r.output[-1] == eos
     assert len(r.output) <= 8
+
+
+@pytest.fixture(scope="module")
+def nowindow_setup():
+    """Full-attention variant: with a sliding window the ring buffer wraps
+    and the engine rightly falls back to exact-length prefill, so the
+    bucketed warm-cache path needs window-free attention to exercise."""
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(), long_context_window=None)
+    params = T.init_model(KEY, cfg)
+    return cfg, params
+
+
+def test_engine_fifo_admission_under_contention(dense_setup):
+    """More requests than slots: admission follows submit order exactly and
+    every request's TTFT is its queue wait."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(4)
+    reqs = [
+        Request(prompt=rng.integers(1, cfg.vocab_size, 6 + i).tolist(), max_new_tokens=2)
+        for i in range(6)
+    ]
+    engine = ServeEngine(cfg, params, max_slots=1, cache_len=32, prompt_bucket=8)
+    engine.run(reqs)
+    admits = [r.admit_tick for r in reqs]
+    assert all(r.done for r in reqs)
+    assert admits == sorted(admits), admits  # FIFO: admit order == submit order
+    assert all(r.ttft_ticks == r.admit_tick - r.submit_tick >= 0 for r in reqs)
+    assert all(r.finish_tick >= r.admit_tick for r in reqs)
+
+
+def test_engine_prefill_complete_releases_slot_same_tick(dense_setup):
+    """A single-token request completes at prefill; with one slot, the next
+    pending request must be admitted the SAME tick (fixpoint admission), not
+    a tick later."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(5)
+    first = Request(prompt=rng.integers(1, cfg.vocab_size, 5).tolist(), max_new_tokens=1)
+    second = Request(prompt=rng.integers(1, cfg.vocab_size, 7).tolist(), max_new_tokens=2)
+    engine = ServeEngine(cfg, params, max_slots=1, cache_len=32, prompt_bucket=8)
+    engine.run([first, second])
+    assert first.done and second.done
+    assert first.finish_tick == first.admit_tick == 0
+    assert second.admit_tick == 0  # admitted into the slot freed this tick
+
+
+def test_engine_eos_at_prefill_releases_slot_same_tick(dense_setup):
+    """EOS emitted as the final prompt-prefill token: the slot frees that
+    tick and the queued request takes it immediately."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(1, cfg.vocab_size, 8).tolist()
+    ref = _sequential_generate(cfg, params, prompt, 1, cache_len=64)
+    eos = ref[0]  # the token the prefill emits
+    first = Request(prompt=prompt, max_new_tokens=8, eos_id=eos)
+    second = Request(prompt=rng.integers(1, cfg.vocab_size, 9).tolist(), max_new_tokens=2)
+    engine = ServeEngine(cfg, params, max_slots=1, cache_len=64, prompt_bucket=8)
+    engine.run([first, second])
+    assert first.done and first.output == [eos]
+    assert first.finish_tick == first.admit_tick == 0
+    assert second.admit_tick == 0 and second.done
+
+
+def test_engine_prefill_retraces_bounded_by_buckets(nowindow_setup):
+    """The warm-cache claim, pinned: serving many prompt lengths retraces
+    the prefill once per BUCKET (not once per length) and the vmapped decode
+    exactly once, regardless of traffic mix."""
+    cfg, params = nowindow_setup
+    rng = np.random.default_rng(7)
+    engine = ServeEngine(cfg, params, max_slots=2, cache_len=48, prompt_bucket=8)
+    # lengths spanning exactly two buckets (<=8 and <=16), many of each
+    for n in (3, 5, 7, 8, 11, 13, 16, 4, 9, 15):
+        engine.run([Request(prompt=rng.integers(1, cfg.vocab_size, n).tolist(),
+                            max_new_tokens=3)])
+    assert sorted(engine._prefills) == [8, 16]
+    assert engine.prefill_traces == 2, engine.prefill_traces
+    assert engine.decode_traces == 1, engine.decode_traces
+    # a third bucket compiles exactly one more prefill, no decode retrace
+    engine.run([Request(prompt=rng.integers(1, cfg.vocab_size, 20).tolist(),
+                        max_new_tokens=3)])
+    assert engine.prefill_traces == 3 and engine.decode_traces == 1
 
 
 def test_engine_recurrent_arch():
