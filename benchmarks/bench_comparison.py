@@ -80,11 +80,20 @@ def run(quick: bool = True, seeds=(0, 1)) -> list[dict]:
             data = make_data(seed)
 
             # AD-GDA (compressed, chi2), AD-GDA-K5 (5 local steps between
-            # gossip rounds — paper §6 extension) and CHOCO-SGD baseline
-            for robust, name, k in ((True, "AD-GDA", 1), (True, "AD-GDA-K5", 5), (False, "CHOCO-SGD", 1)):
+            # gossip rounds — paper §6 extension), AD-GDA-GT-K5 (same K but
+            # gradient tracking: the tracker lane doubles the per-round bits
+            # — bits_per_round(per_iteration=True) spreads the two-lane cost
+            # over the K iterations so the x-axis stays honest) and CHOCO-SGD
+            for robust, name, k, cons in (
+                (True, "AD-GDA", 1, "choco"),
+                (True, "AD-GDA-K5", 5, "choco"),
+                (True, "AD-GDA-GT-K5", 5, "gt"),
+                (False, "CHOCO-SGD", 1, "choco"),
+            ):
                 trainer, init_fn, apply_fn = make_adgda(
                     "logistic", data.num_nodes, robust=robust,
                     compressor="q4b", topology="torus", local_steps=k,
+                    consensus=cons,
                 )
                 params, info = train_trainer(
                     trainer, init_fn(data.dim, data.num_classes), data,

@@ -153,8 +153,154 @@ def _child(quick: bool) -> list[dict]:
         )
 
     rows += _masked_round_rows(mesh, d, quick)
+    rows += _gt_round_rows(mesh, d, quick)
+    rows += _exact_sched_rows(mesh, d if quick else 1 << 14)
     rows += _baseline_rows(mesh, d if quick else 1 << 14)
     rows += _train_step_rows(mesh, d if quick else 1 << 14)
+    return rows
+
+
+def _gt_round_rows(mesh, d: int, quick: bool) -> list[dict]:
+    """Multi-lane wire cost: one gradient-tracking round ships the model
+    hat-delta AND the tracker hat-delta as a two-lane message over the same
+    neighbor permutes.  Per edge that must cost <= 2.1x the single-lane
+    compressed payload (two lanes at ~1x each plus the scheduled wire's
+    float overhead) with zero all-gather — the ISSUE-8 acceptance bar."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.compression import make_compressor
+    from repro.core.topology import make_topology, make_topology_schedule
+    from repro.core.trainer import GradientTrackingConsensus
+    from repro.launch.hlo_cost import analyze_compiled
+    from repro.launch.sharding import node_shardings
+
+    repl = NamedSharding(mesh, P())
+    scenarios = [("gt_round_static", "ring", "kq4b")]
+    if not quick:
+        scenarios += [("gt_round_static", "ring", "q4b")]
+    scenarios += [("gt_round_sched", "roundrobin:ring,torus", "kq4b")]
+
+    rows = []
+    for sname, spec, cspec in scenarios:
+        comp = make_compressor(cspec)
+        scheduled = sname.endswith("sched")
+        if scheduled:
+            topo = make_topology_schedule(spec, M)
+        else:
+            topo = make_topology(spec, M)
+        gc = GradientTrackingConsensus(topo, comp, 0.2, backend="ppermute",
+                                       mesh=mesh)
+        theta = {"w": jax.random.normal(jax.random.PRNGKey(0), (M, d))}
+        theta_prev = {"w": jnp.zeros((M, d))}
+        state = gc.init(theta)
+        key = jax.random.PRNGKey(1)
+        stree = lambda t: node_shardings(t, mesh, M)
+
+        def fn(t, tp, s, k, step=None):
+            return gc.mix(t, s, k, None, step=step, theta_prev=tp)
+
+        args = [theta, theta_prev, state, key]
+        shards = [stree(theta), stree(theta_prev), stree(state), repl]
+        if scheduled:
+            args.append(jnp.int32(1))
+            shards.append(repl)
+        compiled = (
+            jax.jit(fn, in_shardings=tuple(shards)).lower(*args).compile()
+        )
+        cost = analyze_compiled(compiled)
+        cp = cost.coll["collective-permute"]
+        edges = gc.union.max_out_degree if scheduled else topo.max_degree
+        payload = _payload_bytes(cspec, d)
+        rows.append({
+            "table": "X",
+            "scenario": sname,
+            "topology": spec,
+            "compressor": cspec,
+            "backend": "ppermute",
+            "d": d,
+            "coll_permute_bytes": cp,
+            "all_gather_bytes": cost.coll["all-gather"],
+            "coll_operand_bytes": cost.coll_bytes,
+            "wire_bytes": cost.wire_bytes(M),
+            "expected_wire_bytes": 2.0 * edges * payload,
+            "per_edge_bytes": cp / edges,
+            "per_edge_payload_bytes": payload,
+        })
+        assert cost.coll["all-gather"] == 0.0, (
+            f"{sname}/{cspec}: two-lane gt round emitted all-gather bytes "
+            f"({cost.coll['all-gather']:.0f}) — the multi-lane wire leaked"
+        )
+        assert cp / edges <= 2.1 * payload, (
+            f"{sname}/{cspec}: two-lane per-edge bytes {cp / edges:.0f} "
+            f"exceed 2.1x the single-lane compressed payload ({payload:.0f})"
+        )
+    return rows
+
+
+def _exact_sched_rows(mesh, d: int) -> list[dict]:
+    """Per-phase wire program for scheduled ExactConsensus: the dense mix
+    under ``lax.switch`` must bill only the busiest *phase's* edges (HLO
+    conditionals cost their most expensive branch), not the whole union —
+    on a 4-phase one-peer matching schedule that is a ~P x traffic cut vs
+    the old every-union-op-every-round program."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.topology import make_topology_schedule
+    from repro.core.trainer import ExactConsensus
+    from repro.launch.hlo_cost import analyze_compiled
+    from repro.launch.sharding import node_shardings
+
+    repl = NamedSharding(mesh, P())
+    sched = make_topology_schedule("matching:4", M)
+    ec = ExactConsensus(sched, backend="ppermute", mesh=mesh)
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(0), (M, d))}
+    stree = lambda t: node_shardings(t, mesh, M)
+
+    def fn(t, step):
+        out, _ = ec.mix(t, (), None, None, step=step)
+        return out
+
+    compiled = (
+        jax.jit(fn, in_shardings=(stree(theta), repl))
+        .lower(theta, jnp.int32(1))
+        .compile()
+    )
+    cost = analyze_compiled(compiled)
+    cp = cost.coll["collective-permute"]
+    # busiest single phase: a one-peer matching moves 1 dense f32 model per
+    # node; the union across 4 phases would move up to 4
+    phase_edges = max(sched.topology_at(p).max_degree for p in range(sched.period))
+    union_edges = ec.union.max_out_degree
+    expect = phase_edges * 4.0 * d
+    rows = [{
+        "table": "X",
+        "scenario": "exact_round_sched_phase",
+        "topology": "matching:4",
+        "compressor": "identity",
+        "backend": "ppermute",
+        "d": d,
+        "coll_permute_bytes": cp,
+        "all_gather_bytes": cost.coll["all-gather"],
+        "coll_operand_bytes": cost.coll_bytes,
+        "wire_bytes": cost.wire_bytes(M),
+        "expected_wire_bytes": expect,
+        "per_edge_bytes": cp / phase_edges,
+        "per_edge_payload_bytes": 4.0 * d,
+        "union_edges": float(union_edges),
+    }]
+    assert cost.coll["all-gather"] == 0.0, (
+        f"exact_round_sched_phase emitted all-gather bytes "
+        f"({cost.coll['all-gather']:.0f})"
+    )
+    assert cp <= 1.3 * expect, (
+        f"exact_round_sched_phase: collective-permute bytes {cp:.0f} not ~ "
+        f"busiest-phase degree x f32 model ({expect:.0f}) — the per-phase "
+        f"wire program regressed to the whole union ({union_edges} edges)"
+    )
     return rows
 
 

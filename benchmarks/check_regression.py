@@ -68,6 +68,11 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 # regression is ~6x for kq4b and fails instantly.
 MASKED_EDGE_RATIO = 1.1
 
+# two-lane gradient-tracking rounds (gt_round_* rows): model + tracker
+# hat-deltas ride one message, so per-edge bytes may reach 2x the single-lane
+# compressed payload plus the scheduled wire's float overhead (ISSUE-8 bar).
+GT_EDGE_RATIO = 2.1
+
 # suite-FT fault-mode smoke (baseline-free, per fresh run): a `drop:0.1`
 # wire-fault row's worst-node accuracy must land within this fixed band of
 # its fault-free twin (same schedule, same node-dropout), and ANY faulted
@@ -109,6 +114,49 @@ def _ft_invariant_failures(fresh: dict) -> list:
                   f"{metric} {got:.4g} (must be {op} {bound:.4g})")
             if not ok:
                 failures.append(((("scenario", scen),), metric, bound, got))
+    failures += _ksweep_invariant_failures(rows)
+    return failures
+
+
+def _ksweep_invariant_failures(rows: list) -> list:
+    """Gradient-tracking local-steps invariant (the ISSUE-8 acceptance bar),
+    baseline-free: at the equal-realized-bits anchor — gt's two lanes at
+    K=16 move the same total traffic as single-lane choco at K=8 over a
+    fixed iteration budget — gradient tracking must convert the tracker
+    lane into worst-node accuracy, and it must also win the same-K
+    comparison at K=16 outright.  Key names (``consensus``, ``local_steps``,
+    ``bits_total_realized``) match bench_faults.run_ksweep / BENCH_FT.json."""
+    ks = {(r.get("consensus"), r.get("local_steps")): r
+          for r in rows if r.get("schedule") == "ksweep-ring"}
+    if not ks:
+        return []  # pre-ISSUE-8 baseline without the sweep: nothing to check
+    failures = []
+    gt16, ch8, ch16 = ks.get(("gt", 16)), ks.get(("choco", 8)), ks.get(("choco", 16))
+    pairs = []
+    if gt16 is not None and ch8 is not None:
+        pairs.append(("gt@16 vs choco@8 (equal-bits anchor)", gt16, ch8, True))
+    if gt16 is not None and ch16 is not None:
+        pairs.append(("gt@16 vs choco@16 (same K)", gt16, ch16, False))
+    if not pairs:
+        print("REGRESSION ksweep: missing gt@16/choco@{8,16} anchor rows")
+        return [((("scenario", "ksweep"),), "anchor_rows", 2.0, 0.0)]
+    for name, gt, ch, check_bits in pairs:
+        acc_gt, acc_ch = float(gt["worst_acc"]), float(ch["worst_acc"])
+        ok = acc_gt > acc_ch
+        print(f"{'ok' if ok else 'REGRESSION':10s} ksweep {name}: worst_acc "
+              f"{acc_gt:.4g} (must be > {acc_ch:.4g})")
+        if not ok:
+            failures.append(((("scenario", f"ksweep:{name}"),),
+                             "worst_acc", acc_ch, acc_gt))
+        if check_bits:
+            b_gt = float(gt["bits_total_realized"])
+            b_ch = float(ch["bits_total_realized"])
+            ok = b_gt <= 1.05 * b_ch  # "equal bits": gt may not outspend its anchor
+            print(f"{'ok' if ok else 'REGRESSION':10s} ksweep {name}: total bits "
+                  f"{b_gt:.4g} (must be <= 1.05x {b_ch:.4g})")
+            if not ok:
+                failures.append(((("scenario", f"ksweep:{name}"),),
+                                 "bits_total_realized", 1.05 * b_ch, b_gt))
     return failures
 
 
@@ -118,14 +166,18 @@ def _x_invariant_failures(fresh: dict) -> list:
         scen = dict(key).get("scenario", "")
         if row.get("backend") != "ppermute":
             continue
-        if not (scen.startswith("choco_round_masked")
-                or scen.startswith("choco_round_sched")):
+        if scen.startswith("gt_round"):
+            ratio = GT_EDGE_RATIO  # two lanes per message
+        elif (scen.startswith("choco_round_masked")
+              or scen.startswith("choco_round_sched")):
+            ratio = MASKED_EDGE_RATIO
+        else:
             continue
         per_edge = float(row["per_edge_bytes"])
         payload = float(row["per_edge_payload_bytes"])
-        ok = per_edge <= MASKED_EDGE_RATIO * payload
+        ok = per_edge <= ratio * payload
         print(f"{'ok' if ok else 'REGRESSION':10s} {scen}: per-edge "
-              f"{per_edge:.0f} B vs {MASKED_EDGE_RATIO:g}x payload "
+              f"{per_edge:.0f} B vs {ratio:g}x payload "
               f"{payload:.0f} B")
         if not ok:
             failures.append((key, "per_edge_bytes", payload, per_edge))

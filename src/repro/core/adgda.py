@@ -46,6 +46,7 @@ from repro.core.trainer import (
     ChocoConsensus,
     DecentralizedTrainer,
     FrozenPrior,
+    GradientTrackingConsensus,
     LocalUpdate,
     LossFn,
     ProjectedAscent,
@@ -106,6 +107,13 @@ class ADGDAConfig:
     # Batch leaves must carry K x the per-node samples.  Composes with any
     # optimizer/momentum (the optimizer state is carried in the trainer
     # state); still mutually exclusive with microbatches > 1.
+    consensus: str = "choco"  # "choco" (plain CHOCO gossip) or "gt"
+    # (gradient tracking, arXiv 2405.00965): "gt" gossips a second
+    # CHOCO-compressed tracker variable on lane 2 of the same wire round,
+    # cancelling the client drift that large local_steps induce under
+    # heterogeneous data — 2x the per-round bits, aimed at K >> 1.
+    tracker_gamma: float | None = None  # consensus step size for the tracker
+    # lane (None -> same gamma resolution as the model lane)
     fault_spec: str | None = None  # wire-fault injection, e.g.
     # "drop:0.05,corrupt:0.01,stale:2" (repro.core.faults.parse_fault_spec):
     # per-(edge, round) message drop/corrupt/dup/delay at the exchange
@@ -187,12 +195,25 @@ def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None, *,
         grad_accum_dtype=config.grad_accum_dtype,
         spmd_axis_name=config.spmd_axis_name,
     )
-    consensus = ChocoConsensus(
-        topology, compressor, config.gamma,
-        packed=config.packed_gossip, fused=config.fused_gossip,
-        backend=config.gossip_backend, mesh=mesh, node_axes=node_axes,
-        faults=config.fault_spec,
-    )
+    if config.consensus == "gt":
+        consensus = GradientTrackingConsensus(
+            topology, compressor, config.gamma,
+            tracker_gamma=config.tracker_gamma,
+            packed=config.packed_gossip, fused=config.fused_gossip,
+            backend=config.gossip_backend, mesh=mesh, node_axes=node_axes,
+            faults=config.fault_spec,
+        )
+    elif config.consensus == "choco":
+        consensus = ChocoConsensus(
+            topology, compressor, config.gamma,
+            packed=config.packed_gossip, fused=config.fused_gossip,
+            backend=config.gossip_backend, mesh=mesh, node_axes=node_axes,
+            faults=config.fault_spec,
+        )
+    else:
+        raise ValueError(
+            f"unknown consensus {config.consensus!r}; choose choco or gt"
+        )
     # the dual's own gossip: a static schedule unwraps to its phase topology
     # (plain mix_stacked fast path).  On the rolled backend a time-varying
     # schedule is kept whole and the trainer threads the per-round dense

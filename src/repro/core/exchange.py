@@ -59,9 +59,11 @@ from repro.core.faults import (
 from repro.core.gossip import (
     BLOCK_SCAN_ELEMS,
     CHOCOState,
+    LaneRound,
     _round_leaves,
     _scan_plan,
     _vdecode,
+    lane_key,
     payload_total_bits,
 )
 from repro.core.topology import (
@@ -74,7 +76,9 @@ from repro.core.topology import (
 
 __all__ = [
     "choco_round_ppermute",
+    "choco_round_ppermute_lanes",
     "choco_round_cached_local",
+    "choco_round_cached_local_lanes",
     "mix_stacked_ppermute",
     "mix_stacked_faulted_local",
     "server_average_ppermute",
@@ -290,6 +294,46 @@ def _union_round_weights(union, phase, alive, masked: bool, axes, ndev, block,
     for w in ws:
         self_w = self_w - w
     return self_w, ws, alive_nb
+
+
+def _phase_round_weights(union, p: int, alive, masked: bool, axes, ndev,
+                         block, idx):
+    """Phase-``p`` wire weights restricted to phase ``p``'s *active* ops —
+    the literal-phase twin of :func:`_union_round_weights` used by the
+    per-phase ``lax.switch`` branches of the dense-format mix.
+
+    ``p`` is a Python int (each switch branch closes over its own phase), so
+    the op subset and the weight rows are host-side constants: a branch
+    exchanges only the edges its phase actually uses, which is what drops
+    scheduled exact-gossip traffic from the union edge set to the active
+    edge set (ROADMAP per-phase wire program item).  Numerics match the
+    union path exactly — the ops skipped here carried weight 0.0 there.
+
+    Returns ``(self_w [block], ws list-of-[block], ops)``.
+    """
+    act_np = np.asarray(union.active[p])  # [n_ops, m]
+    ops_sel = [k for k in range(union.n_ops) if act_np[k].any()]
+    ops = [union.ops[k] for k in ops_sel]
+    loc = lambda row: jax.lax.dynamic_slice_in_dim(
+        jnp.asarray(row, jnp.float32), idx * block, block
+    )
+    if not masked:
+        self_w = loc(union.self_bank[p])
+        return self_w, [loc(union.w_bank[p][k]) for k in ops_sel], ops
+    act = [loc(act_np[k]) for k in ops_sel]
+    alive_nb = [_recv(alive, op, axes, ndev, block) for op in ops]
+    deg = jnp.zeros_like(alive)
+    for a, nb in zip(act, alive_nb):
+        deg = deg + a * alive * nb
+    deg_nb = [_recv(deg, op, axes, ndev, block) for op in ops]
+    ws = [
+        a * alive * nb / (1.0 + jnp.maximum(deg, dnb))
+        for a, nb, dnb in zip(act, alive_nb, deg_nb)
+    ]
+    self_w = jnp.ones_like(alive)
+    for w in ws:
+        self_w = self_w - w
+    return self_w, ws, ops
 
 
 def _weighted_mix(x, self_w, ws, ops, axes, ndev, block):
@@ -672,9 +716,54 @@ def choco_round_ppermute(
     even for a static topology, because only the NeighborCache form has a
     mirror to verify and heal.
     """
+    thetas, states = choco_round_ppermute_lanes(
+        (LaneRound(theta_half, state, gamma, compressor),), topology, key,
+        mesh=mesh, node_axes=node_axes, packed=packed, fused=fused,
+        block_scan_elems=block_scan_elems, schedule=schedule, step=step,
+        mask=mask, union=union, faults=faults, fault_key=fault_key,
+    )
+    return thetas[0], states[0]
+
+
+def choco_round_ppermute_lanes(
+    lanes,
+    topology: Topology,
+    key: jax.Array,
+    *,
+    mesh,
+    node_axes="data",
+    packed: bool = True,
+    fused: bool = False,
+    block_scan_elems: int = BLOCK_SCAN_ELEMS,
+    schedule: TopologySchedule | None = None,
+    step=None,
+    mask=None,
+    union=None,
+    faults=None,
+    fault_key=None,
+):
+    """The multi-lane SPMD round: every edge of the round's wire program
+    carries a *tuple* of messages, one per :class:`~repro.core.gossip.LaneRound`.
+
+    All lanes run inside ONE ``shard_map`` body, so the per-edge message
+    really is the lane tuple — the same ops of the same round move lane 0's
+    payload and lane 1's payload together (XLA is free to coalesce the
+    adjacent collective-permutes).  Each lane keeps its own compressed
+    residual stream (lane ``k``'s RNG is ``lane_key(key, k)``), its own
+    NeighborCache mirrors, and — under faults — its own per-edge event draws,
+    digests and recovery state: a corrupted lane-1 message stales only lane
+    1's mirror, never the theta mirror.  A single-lane call (what
+    :func:`choco_round_ppermute` delegates to) is bit-identical to the
+    historical single-payload wire because lane 0's keys are the round keys
+    themselves.
+
+    Returns ``(thetas, states)`` tuples, one entry per lane.
+    """
     from repro.core.wire import compile_union_wire
 
-    leaves, treedef = jax.tree_util.tree_flatten(theta_half)
+    lanes = tuple(lanes)
+    n_lanes = len(lanes)
+    leaves = jax.tree_util.tree_leaves(lanes[0].theta)
     m = leaves[0].shape[0]
     axes, ndev, block = node_mesh_info(mesh, node_axes, m)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -694,37 +783,44 @@ def choco_round_ppermute(
                 plans = (compile_permute_plan(topology),)
             union = compile_union_wire(plans)
         _check_block(any(k == "perm" for k, _ in union.ops), block, ndev)
-        use_packed = packed and not isinstance(compressor, Identity)
-        use_fused = False
+        use_packed = [
+            packed and not isinstance(l.compressor, Identity) for l in lanes
+        ]
+        use_fused = [False] * n_lanes
         plan = None
-        if len(state.cache) != union.n_ops:
-            raise ValueError(
-                "time-varying ppermute rounds keep a NeighborCache (one "
-                f"theta_hat mirror per union wire op; need {union.n_ops}, "
-                f"state has {len(state.cache)}) — initialize the state with "
-                "gossip.choco_init(theta, cache_ops=n) or let "
-                "trainer.ChocoConsensus.init size it from the schedule"
-            )
-        _check_fault_state(state, faults, fault_key, union)
+        for li, l in enumerate(lanes):
+            if len(l.state.cache) != union.n_ops:
+                raise ValueError(
+                    "time-varying ppermute rounds keep a NeighborCache (one "
+                    f"theta_hat mirror per union wire op; lane {li} needs "
+                    f"{union.n_ops}, has {len(l.state.cache)}) — initialize "
+                    "each lane's state with gossip.choco_init(theta, "
+                    "cache_ops=n) or let the consensus init size it"
+                )
+            _check_fault_state(l.state, faults, fault_key, union)
     else:
         plan = compile_permute_plan(topology)
         _check_block(not plan.is_circulant, block, ndev)
         union = None
-        use_packed = packed and not isinstance(compressor, Identity)
-        use_fused = (
+        use_packed = [
+            packed and not isinstance(l.compressor, Identity) for l in lanes
+        ]
+        use_fused = [
             fused
             and plan.is_circulant
-            and getattr(compressor, "supports_fused_round", False)
-        )
+            and getattr(l.compressor, "supports_fused_round", False)
+            for l in lanes
+        ]
 
     masked = mask is not None
     faulted = faults is not None
-    msg_bits = (
-        _wire_msg_bits(compressor, theta_half, block_scan_elems)
-        if faulted else None
-    )
-    args = [theta_half, state, key]
-    specs = [P(axes), P(axes), P()]
+    msg_bits = [
+        _wire_msg_bits(l.compressor, l.theta, block_scan_elems) if faulted
+        else None
+        for l in lanes
+    ]
+    args = [*(l.theta for l in lanes), *(l.state for l in lanes), key]
+    specs = [P(axes)] * (2 * n_lanes) + [P()]
     if masked:
         args.append(mask)
         specs.append(P(axes))
@@ -736,46 +832,60 @@ def choco_round_ppermute(
         args.append(fault_key)
         specs.append(P())
 
-    def body(theta, st, key, *rest):
-        rest = list(rest)
+    def body(*sharded):
+        rest = list(sharded)
+        thetas = [rest.pop(0) for _ in range(n_lanes)]
+        sts = [rest.pop(0) for _ in range(n_lanes)]
+        key_ = rest.pop(0)
         alive = rest.pop(0) if masked else None
         step_arg = rest.pop(0) if time_varying else None
         fkey = rest.pop(0) if faulted else None
         idx = _flat_axis_index(axes, sizes)
 
-        if time_varying:
-            return _cached_round_body(
-                theta, st, key, alive, step_arg, fkey, union=union,
-                gamma=gamma, compressor=compressor, use_packed=use_packed,
-                masked=masked, faults=faults, msg_bits=msg_bits,
-                axes=axes, ndev=ndev, block=block, idx=idx, m=m,
-                block_scan_elems=block_scan_elems,
-            )
+        out_t, out_s = [], []
+        for li, lane in enumerate(lanes):
+            lk = lane_key(key_, li)
+            lfk = lane_key(fkey, li)
+            if time_varying:
+                t_new, s_new = _cached_round_body(
+                    thetas[li], sts[li], lk, alive, step_arg, lfk,
+                    union=union, gamma=lane.gamma, compressor=lane.compressor,
+                    use_packed=use_packed[li], masked=masked, faults=faults,
+                    msg_bits=msg_bits[li], axes=axes, ndev=ndev, block=block,
+                    idx=idx, m=m, block_scan_elems=block_scan_elems,
+                )
+            else:
+                lv, td = jax.tree_util.tree_flatten(thetas[li])
+                hv = td.flatten_up_to(sts[li].theta_hat)
+                sv = td.flatten_up_to(sts[li].s)
+                keys = jax.random.split(lk, len(lv))
 
-        lv, td = jax.tree_util.tree_flatten(theta)
-        hv = td.flatten_up_to(st.theta_hat)
-        sv = td.flatten_up_to(st.s)
-        keys = jax.random.split(key, len(lv))
+                def round_one(leaf, hat, s, k, lane=lane, li=li):
+                    return _round_leaf_local(
+                        leaf, hat, s, k, plan, lane.gamma, lane.compressor,
+                        use_packed[li], use_fused[li], axes, ndev, block,
+                        idx, m,
+                    )
 
-        def round_one(leaf, hat, s, k):
-            return _round_leaf_local(
-                leaf, hat, s, k, plan, gamma, compressor, use_packed,
-                use_fused, axes, ndev, block, idx, m,
-            )
+                # the chunk layout and per-chunk key stream come from the
+                # SAME driver as the rolled backend — bit-parity of the two
+                # is structural
+                new_theta, new_hat, new_s, _, _ = _round_leaves(
+                    lv, hv, sv, keys, round_one, block_scan_elems
+                )
+                unf = lambda ls, td=td: jax.tree_util.tree_unflatten(td, ls)
+                t_new = unf(new_theta)
+                s_new = CHOCOState(
+                    theta_hat=unf(new_hat), s=unf(new_s),
+                    cache=sts[li].cache, fault=sts[li].fault,
+                )
+            out_t.append(t_new)
+            out_s.append(s_new)
+        return tuple(out_t), tuple(out_s)
 
-        # the chunk layout and per-chunk key stream come from the SAME driver
-        # as the rolled backend — bit-parity of the two is structural
-        new_theta, new_hat, new_s, _, _ = _round_leaves(
-            lv, hv, sv, keys, round_one, block_scan_elems
-        )
-        unf = lambda ls: jax.tree_util.tree_unflatten(td, ls)
-        return unf(new_theta), CHOCOState(
-            theta_hat=unf(new_hat), s=unf(new_s), cache=st.cache,
-            fault=st.fault,
-        )
-
+    out_specs = ((P(axes),) * n_lanes, (P(axes),) * n_lanes)
     fn = shard_map(
-        body, mesh, in_specs=tuple(specs), out_specs=(P(axes), P(axes)),
+        body, mesh, in_specs=tuple(specs), out_specs=out_specs,
         check_rep=False,
     )
     return fn(*args)
@@ -803,9 +913,38 @@ def choco_round_cached_local(
     is how the rolled backend (``gossip.choco_round``) runs faulted rounds —
     the *same* ``_cached_round_body`` the ppermute backend shard_maps, so the
     two backends agree bit-for-bit under faults by construction."""
+    thetas, states = choco_round_cached_local_lanes(
+        (LaneRound(theta_half, state, gamma, compressor),), key, union=union,
+        packed=packed, block_scan_elems=block_scan_elems, schedule=schedule,
+        topology=topology, step=step, mask=mask, faults=faults,
+        fault_key=fault_key,
+    )
+    return thetas[0], states[0]
+
+
+def choco_round_cached_local_lanes(
+    lanes,
+    key: jax.Array,
+    *,
+    union=None,
+    packed: bool = True,
+    block_scan_elems: int = BLOCK_SCAN_ELEMS,
+    schedule: TopologySchedule | None = None,
+    topology: Topology | None = None,
+    step=None,
+    mask=None,
+    faults=None,
+    fault_key=None,
+):
+    """Multi-lane cached union-wire round without a mesh — the rolled twin of
+    :func:`choco_round_ppermute_lanes`, sharing its per-lane key folding and
+    the per-lane ``_cached_round_body``, so rolled/ppermute bit-parity holds
+    lane-by-lane under faults by construction.  Returns ``(thetas, states)``
+    tuples, one entry per lane."""
     from repro.core.wire import compile_union_wire
 
-    leaves = jax.tree_util.tree_leaves(theta_half)
+    lanes = tuple(lanes)
+    leaves = jax.tree_util.tree_leaves(lanes[0].theta)
     m = leaves[0].shape[0]
     if union is None:
         if schedule is not None:
@@ -813,28 +952,35 @@ def choco_round_cached_local(
         else:
             plans = (compile_permute_plan(topology),)
         union = compile_union_wire(plans)
-    if len(state.cache) != union.n_ops:
-        raise ValueError(
-            "cached union-wire rounds keep a NeighborCache (one theta_hat "
-            f"mirror per union wire op; need {union.n_ops}, state has "
-            f"{len(state.cache)}) — initialize the state with "
-            "gossip.choco_init(theta, cache_ops=n) or let "
-            "trainer.ChocoConsensus.init size it from the schedule"
-        )
-    _check_fault_state(state, faults, fault_key, union)
-    msg_bits = (
-        _wire_msg_bits(compressor, theta_half, block_scan_elems)
-        if faults is not None else None
-    )
-    use_packed = packed and not isinstance(compressor, Identity)
+    for li, l in enumerate(lanes):
+        if len(l.state.cache) != union.n_ops:
+            raise ValueError(
+                "cached union-wire rounds keep a NeighborCache (one theta_hat "
+                f"mirror per union wire op; lane {li} needs {union.n_ops}, "
+                f"has {len(l.state.cache)}) — initialize each lane's state "
+                "with gossip.choco_init(theta, cache_ops=n) or let the "
+                "consensus init size it from the schedule"
+            )
+        _check_fault_state(l.state, faults, fault_key, union)
     step_arr = jnp.zeros((), jnp.int32) if step is None else jnp.asarray(step, jnp.int32)
-    return _cached_round_body(
-        theta_half, state, key, mask, step_arr, fault_key, union=union,
-        gamma=gamma, compressor=compressor, use_packed=use_packed,
-        masked=mask is not None, faults=faults, msg_bits=msg_bits,
-        axes=(), ndev=1, block=m, idx=0, m=m,
-        block_scan_elems=block_scan_elems,
-    )
+    out_t, out_s = [], []
+    for li, lane in enumerate(lanes):
+        msg_bits = (
+            _wire_msg_bits(lane.compressor, lane.theta, block_scan_elems)
+            if faults is not None else None
+        )
+        t_new, s_new = _cached_round_body(
+            lane.theta, lane.state, lane_key(key, li), mask, step_arr,
+            lane_key(fault_key, li), union=union, gamma=lane.gamma,
+            compressor=lane.compressor,
+            use_packed=packed and not isinstance(lane.compressor, Identity),
+            masked=mask is not None, faults=faults, msg_bits=msg_bits,
+            axes=(), ndev=1, block=m, idx=0, m=m,
+            block_scan_elems=block_scan_elems,
+        )
+        out_t.append(t_new)
+        out_s.append(s_new)
+    return tuple(out_t), tuple(out_s)
 
 
 def _dense_msg_bits(tree) -> float:
@@ -953,6 +1099,31 @@ def mix_stacked_ppermute(tree, topology: Topology, *, mesh, node_axes="data",
                 faults, fkey, union, dense_msg, axes, ndev, block, idx, m
             )
             bits = bits * alive_local
+        if union.period > 1 and not faulted:
+            # per-phase wire program: one lax.switch over phase branches,
+            # each exchanging only its phase's active edges — scheduled
+            # dense-format traffic drops from the union edge set to the
+            # active set.  Faulted mixes stay on the union path: the event
+            # draw is indexed per union op and the masked rescale needs the
+            # usable bits of every op.
+            def make_branch(p):
+                def branch(operand):
+                    t_, alive_ = operand
+                    self_w, ws, ops = _phase_round_weights(
+                        union, p, alive_, masked, axes, ndev, block, idx
+                    )
+                    return jax.tree.map(
+                        lambda x: _weighted_mix(
+                            x, self_w, ws, ops, axes, ndev, block
+                        ).astype(x.dtype),
+                        t_,
+                    )
+                return branch
+
+            return jax.lax.switch(
+                phase, [make_branch(p) for p in range(union.period)],
+                (t, alive_local),
+            )
         self_w, ws, _ = _union_round_weights(
             union, phase, alive_local, masked, axes, ndev, block, idx, usable
         )

@@ -37,8 +37,10 @@ from repro.core.topology import Topology, masked_metropolis
 
 __all__ = [
     "CHOCOState",
+    "LaneRound",
     "choco_init",
     "choco_round",
+    "choco_round_lanes",
     "mix_stacked",
     "mix_stacked_with",
     "payload_bits",
@@ -58,6 +60,105 @@ class CHOCOState(NamedTuple):
     # a FaultSpec is active — faults off adds no leaves, so existing
     # checkpoints restore unchanged.
     fault: Any = ()
+
+
+class LaneRound(NamedTuple):
+    """One lane of a multi-lane consensus round: the variable to gossip, its
+    CHOCO trackers (own hat/s/NeighborCache/FaultState — lanes verify, go
+    stale and resync independently), and the lane's step size + compressor.
+    Lane 0 is always the model lane; its RNG stream is the round key itself
+    so a single-lane round stays bit-identical to the historical wire.  Lane
+    k > 0 draws from ``fold_in(key, k)`` (and ``fold_in(fault_key, k)``)."""
+
+    theta: object  # pytree, leaves [m, ...]
+    state: CHOCOState
+    gamma: float
+    compressor: Compressor
+
+
+def lane_key(key, k: int):
+    """Lane ``k``'s RNG stream: the round key itself for lane 0 (bit-parity
+    with the single-lane wire), an independent fold for every other lane."""
+    if key is None or k == 0:
+        return key
+    return jax.random.fold_in(key, k)
+
+
+def choco_round_lanes(
+    lanes,
+    topology: Topology,
+    key: jax.Array,
+    *,
+    packed: bool = True,
+    fused: bool = False,
+    block_scan_elems: int = None,
+    mixing: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    backend: str = "rolled",
+    mesh=None,
+    node_axes="data",
+    schedule=None,
+    step=None,
+    union=None,
+    faults=None,
+    fault_key=None,
+):
+    """One multi-lane compressed-consensus round: every edge of the round's
+    wire program carries a *tuple* of messages, one per :class:`LaneRound`.
+
+    Returns ``(thetas, states)`` tuples, one entry per lane.  All lanes ride
+    the same edges of the same round — on the ppermute backend they run
+    inside one ``shard_map`` body, so the per-edge message really is the
+    lane tuple — but each lane keeps its own compressed residual stream,
+    NeighborCache mirrors and (under faults) its own per-edge event draws
+    and recovery state: a corrupted lane-1 message stales only lane 1's
+    mirror.  A single-lane call is bit-identical to :func:`choco_round`.
+    """
+    if block_scan_elems is None:
+        block_scan_elems = BLOCK_SCAN_ELEMS
+    lanes = tuple(LaneRound(*l) for l in lanes)
+    if not lanes:
+        raise ValueError("choco_round_lanes needs at least one lane")
+    if backend == "ppermute":
+        from repro.core.exchange import choco_round_ppermute_lanes
+
+        if mixing is not None:
+            raise ValueError(
+                "backend='ppermute' takes schedule/step/mask, not a dense "
+                "mixing matrix — the wire program is compiled per phase"
+            )
+        if mesh is None:
+            raise ValueError("backend='ppermute' requires a mesh")
+        return choco_round_ppermute_lanes(
+            lanes, topology, key, mesh=mesh, node_axes=node_axes,
+            packed=packed, fused=fused, block_scan_elems=block_scan_elems,
+            schedule=schedule, step=step, mask=mask, union=union,
+            faults=faults, fault_key=fault_key,
+        )
+    if backend != "rolled":
+        raise ValueError(f"unknown gossip backend {backend!r}; choose rolled or ppermute")
+    if faults is not None:
+        from repro.core.exchange import choco_round_cached_local_lanes
+
+        return choco_round_cached_local_lanes(
+            lanes, key, union=union, packed=packed,
+            block_scan_elems=block_scan_elems, schedule=schedule,
+            topology=topology, step=step, mask=mask, faults=faults,
+            fault_key=fault_key,
+        )
+    # rolled fault-free path: lanes are arithmetically independent given
+    # their (folded) keys, so per-lane rounds over the same topology/mixing
+    # ARE the lane-tuple wire — the stacked simulation has no per-edge
+    # messages to actually concatenate.
+    outs = [
+        choco_round(
+            l.theta, l.state, topology, l.gamma, l.compressor,
+            lane_key(key, k), packed=packed, fused=fused,
+            block_scan_elems=block_scan_elems, mixing=mixing, mask=mask,
+        )
+        for k, l in enumerate(lanes)
+    ]
+    return tuple(o[0] for o in outs), tuple(o[1] for o in outs)
 
 
 def choco_init(theta_stacked, *, cache_ops: int = 0,

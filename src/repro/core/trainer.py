@@ -58,9 +58,11 @@ from repro.core.faults import WireBits, parse_fault_spec
 from repro.core.gossip import (
     BLOCK_SCAN_ELEMS,
     CHOCOState,
+    LaneRound,
     _scan_plan,
     choco_init,
     choco_round,
+    choco_round_lanes,
     mix_stacked,
     mix_stacked_with,
     payload_bits,
@@ -85,6 +87,8 @@ __all__ = [
     "SampledAscent",
     "Consensus",
     "ChocoConsensus",
+    "GTState",
+    "GradientTrackingConsensus",
     "ExactConsensus",
     "FedAvg",
     "DecentralizedTrainer",
@@ -455,7 +459,12 @@ class Consensus:
         return ()
 
     def mix(self, theta_half, state, key: jax.Array | None, ctx, *,
-            step=None, mask=None, mixing=None, fault_key=None):
+            step=None, mask=None, mixing=None, fault_key=None,
+            theta_prev=None):
+        """Mix the half-step models.  ``theta_prev`` is the round's
+        pre-local-update theta (what the trainer held before the oracle ran)
+        — gradient-tracking consensus reads the local displacement from it;
+        every other implementation ignores it."""
         raise NotImplementedError
 
     @property
@@ -525,8 +534,16 @@ def _union_degree(union, schedule, mode: str, mask) -> float:
 def _fault_bits_meter(cons_state):
     """The faulted wire's in-graph per-node bits meter, if ``cons_state``
     carries one: CHOCO keeps it in ``CHOCOState.fault.bits``, the memoryless
-    exact wire in a bare :class:`~repro.core.faults.WireBits`.  None when the
-    state has no meter (fault-free run, or pre-round state)."""
+    exact wire in a bare :class:`~repro.core.faults.WireBits`, and a
+    multi-lane :class:`GTState` sums its lanes' meters (each lane billed its
+    own deliveries).  None when the state has no meter (fault-free run, or
+    pre-round state)."""
+    if hasattr(cons_state, "model") and hasattr(cons_state, "tracker"):
+        a = _fault_bits_meter(cons_state.model)
+        b = _fault_bits_meter(cons_state.tracker)
+        if a is not None and b is not None:
+            return a + b
+        return None
     fault = getattr(cons_state, "fault", None)
     if hasattr(fault, "bits"):
         return fault.bits
@@ -643,7 +660,7 @@ class ChocoConsensus(Consensus):
         )
 
     def mix(self, theta_half, state, key, ctx, *, step=None, mask=None,
-            mixing=None, fault_key=None):
+            mixing=None, fault_key=None, theta_prev=None):
         gamma = self._resolve_gamma(self._encode_dim(theta_half))
         if self.backend == "ppermute":
             # the SPMD substrate takes the schedule + round index + mask and
@@ -726,6 +743,17 @@ class ChocoConsensus(Consensus):
             mode=mode, step=step, mask=mask,
         )
 
+    def bits_per_lane(self, theta_template, *, mode: str = "max",
+                      step=None, mask=None) -> dict:
+        """Per-lane busiest-node bits: one entry per :attr:`wire_format`
+        lane, keyed by lane name.  Every lane of a multi-lane CHOCO wire
+        carries the same compressed shape over the same edges, so each lane
+        bills the single-lane cost; the round total is the sum."""
+        one = ChocoConsensus.bits_per_round(
+            self, theta_template, mode=mode, step=step, mask=mask
+        )
+        return {lane.name: one for lane in self.wire_format}
+
     def bits_realized(self, theta_template, step, mask, consensus_state=None):
         if self.faults is not None:
             meter = _fault_bits_meter(consensus_state)
@@ -739,6 +767,172 @@ class ChocoConsensus(Consensus):
         if self.schedule is not None:
             return total * self.schedule.realized_degree_traced(step, mask)
         return total * self.topology.realized_degree_traced(step, mask)
+
+
+class GTState(NamedTuple):
+    """Gradient-tracking consensus state: one :class:`CHOCOState` per wire
+    lane (the model lane and the tracker lane each keep their own hat/s,
+    NeighborCache mirrors and fault-recovery machine), plus the tracker
+    variable ``y`` — each node's gossiped estimate of the network-average
+    local displacement — and ``d_prev``, the node's own displacement from
+    the previous round it participated in."""
+
+    model: CHOCOState
+    tracker: CHOCOState
+    y: Any  # stacked pytree [m, ...], theta-shaped
+    d_prev: Any  # stacked pytree [m, ...], theta-shaped
+
+
+def _gt_bcast(mask, leaf):
+    """[m] participation mask broadcast against a [m, ...] leaf (f32)."""
+    return mask.astype(jnp.float32).reshape(
+        (mask.shape[0],) + (1,) * (leaf.ndim - 1)
+    )
+
+
+class GradientTrackingConsensus(ChocoConsensus):
+    """CHOCO-compressed gossip with gradient tracking for K local steps
+    (Robust Decentralized Learning with Local Updates and Gradient Tracking,
+    arXiv 2405.00965, in CHOCO displacement form).
+
+    Plain local SGD drifts under heterogeneous data: between gossip rounds
+    each node descends toward its *local* optimum, and with large K the
+    compressed gossip equilibrium is biased.  Gradient tracking gossips a
+    second variable ``y`` that tracks the network-average local
+    displacement; each node then moves by the tracked average instead of its
+    own displacement, so heterogeneous nodes take many local steps without
+    client drift.  One round, with ``d_i = theta_half_i - theta_prev_i`` the
+    node's K-step displacement::
+
+        y_half_i = y_i + d_i - d_prev_i            # tracker update
+        x_half_i = theta_prev_i + y_half_i         # drift-corrected iterate
+        theta    <- CHOCO-round(x_half, model lane)
+        y        <- CHOCO-round(y_half, tracker lane)
+        d_prev_i <- d_i
+
+    Both CHOCO rounds ride the *same* wire round as a two-lane message
+    (:func:`~repro.core.gossip.choco_round_lanes`): lane 0 is the model
+    hat-delta with the historical key stream, lane 1 the tracker hat-delta
+    keyed by ``fold_in(key, 1)``.  Each lane keeps its own NeighborCache and
+    fault state, so a corrupted tracker message can never poison a theta
+    mirror.  Mean trajectories are preserved (``mean(y_t) ==
+    mean(d_{t-1})`` by induction; doubly-stochastic mixing keeps both lane
+    means), so with K=1 the dynamics match plain CHOCO local-SGD in the
+    network mean while individual nodes stay consensus-anchored.
+
+    ``tracker=False`` disables the second lane entirely and delegates every
+    code path to :class:`ChocoConsensus` — bit-identical on both backends
+    (the K=1 parity anchor the tests pin).
+
+    Dropped nodes (participation mask 0) freeze ``y`` and ``d_prev`` along
+    with their CHOCO trackers: the trainer reverts their theta_half, so
+    ``d_i = 0``, and the update above is gated per node — a node rejoins
+    with a consistent tracker.
+    """
+
+    def __init__(self, topology: Topology | TopologySchedule,
+                 compressor: Compressor, gamma: float | str | None = None, *,
+                 tracker: bool = True, tracker_gamma: float | None = None,
+                 **kw):
+        super().__init__(topology, compressor, gamma, **kw)
+        self.tracker = tracker
+        self.tracker_gamma_spec = tracker_gamma
+
+    def init(self, theta_stacked):
+        base = super().init(theta_stacked)
+        if not self.tracker:
+            return base
+        tracker = choco_init(
+            theta_stacked,
+            cache_ops=self.union.n_ops if self.union is not None else 0,
+            fault_ops=self.union.n_ops if self.faults is not None else None,
+        )
+        zeros = lambda: jax.tree.map(jnp.zeros_like, theta_stacked)
+        return GTState(model=base, tracker=tracker, y=zeros(), d_prev=zeros())
+
+    def mix(self, theta_half, state, key, ctx, *, step=None, mask=None,
+            mixing=None, fault_key=None, theta_prev=None):
+        if not self.tracker:
+            return super().mix(
+                theta_half, state, key, ctx, step=step, mask=mask,
+                mixing=mixing, fault_key=fault_key,
+            )
+        if theta_prev is None:
+            raise ValueError(
+                "GradientTrackingConsensus.mix needs theta_prev (the round's "
+                "pre-local-update theta) to form the local displacement — "
+                "the trainer threads it; standalone callers must pass it"
+            )
+        gamma = self._resolve_gamma(self._encode_dim(theta_half))
+        tgamma = (
+            gamma if self.tracker_gamma_spec is None
+            else float(self.tracker_gamma_spec)
+        )
+        f32 = jnp.float32
+
+        def upd(h, p, y, dp):
+            d = h.astype(f32) - p.astype(f32)
+            if mask is not None:
+                a = _gt_bcast(mask, h)
+                y_half = y.astype(f32) + a * (d - dp.astype(f32))
+                d_new = a * d + (1.0 - a) * dp.astype(f32)
+                x_half = h.astype(f32) + a * (y_half - d)
+            else:
+                y_half = y.astype(f32) + d - dp.astype(f32)
+                d_new = d
+                x_half = p.astype(f32) + y_half
+            return x_half.astype(h.dtype), y_half.astype(h.dtype), d_new.astype(h.dtype)
+
+        trip = jax.tree.map(upd, theta_half, theta_prev, state.y, state.d_prev)
+        x_half = jax.tree.map(lambda t: t[0], trip, is_leaf=lambda t: isinstance(t, tuple))
+        y_half = jax.tree.map(lambda t: t[1], trip, is_leaf=lambda t: isinstance(t, tuple))
+        d_prev_new = jax.tree.map(lambda t: t[2], trip, is_leaf=lambda t: isinstance(t, tuple))
+
+        if (self.backend == "rolled" and self.faults is None
+                and self.schedule is not None and mixing is None):
+            mixing = self.schedule.mixing_at(0 if step is None else step, mask)
+        (x_new, y_new), (model_new, tracker_new) = choco_round_lanes(
+            (
+                LaneRound(x_half, state.model, gamma, self.compressor),
+                LaneRound(y_half, state.tracker, tgamma, self.compressor),
+            ),
+            self.topology, key, packed=self.packed, fused=self.fused,
+            mixing=mixing, mask=mask, backend=self.backend, mesh=self.mesh,
+            node_axes=self.node_axes, schedule=self.schedule, step=step,
+            union=self.union, faults=self.faults, fault_key=fault_key,
+        )
+        return x_new, GTState(
+            model=model_new, tracker=tracker_new, y=y_new, d_prev=d_prev_new
+        )
+
+    @property
+    def wire_format(self) -> wire.WireFormat:
+        base = super().wire_format
+        if not self.tracker:
+            return base
+        kind = base.lanes[0].kind
+        return wire.WireFormat(
+            (wire.Lane(kind, "model"), wire.Lane(kind, "tracker"))
+        )
+
+    def bits_per_round(self, theta_template, *, mode: str = "max",
+                       step=None, mask=None) -> float:
+        return sum(
+            self.bits_per_lane(
+                theta_template, mode=mode, step=step, mask=mask
+            ).values()
+        )
+
+    def bits_realized(self, theta_template, step, mask, consensus_state=None):
+        if not self.tracker:
+            return super().bits_realized(
+                theta_template, step, mask, consensus_state=consensus_state
+            )
+        if self.faults is not None:
+            meter = _fault_bits_meter(consensus_state)
+            if meter is not None:
+                return meter.max()
+        return 2.0 * super().bits_realized(theta_template, step, mask)
 
 
 class ExactConsensus(Consensus):
@@ -776,7 +970,7 @@ class ExactConsensus(Consensus):
         return ()
 
     def mix(self, theta_half, state, key, ctx, *, step=None, mask=None,
-            mixing=None, fault_key=None):
+            mixing=None, fault_key=None, theta_prev=None):
         if self.backend == "ppermute":
             if mixing is not None:
                 raise ValueError(
@@ -812,17 +1006,17 @@ class ExactConsensus(Consensus):
 
     def bits_per_round(self, theta_template, *, mode: str = "max",
                        step=None, mask=None) -> float:
-        if self.union is not None:
-            # time-varying ppermute wire: the union mix sends a dense f32
-            # message on every union op every round (inactive-phase ops
-            # carry zero receive weight but the bytes still move) — bill
-            # what actually travels, like the cached CHOCO wire does.  A
-            # per-phase wire program that skips inactive edges is a ROADMAP
-            # item (no cache forces the union here, unlike CHOCO).
+        if self.union is not None and self.faults is not None:
+            # faulted wire: event draws are indexed per union op, so every
+            # union op moves a dense f32 message every round — bill the
+            # union degree, like the cached CHOCO wire does.
             return payload_bits(
                 Identity(), theta_template, self.schedule,
                 degree=_union_degree(self.union, self.schedule, mode, mask),
             )
+        # fault-free scheduled ppermute now runs a per-phase wire program
+        # (lax.switch over phase branches in mix_stacked_ppermute): only the
+        # active phase's edges move bytes, so bill the schedule's own degree.
         return payload_bits(
             Identity(), theta_template, self.schedule or self.topology,
             mode=mode, step=step, mask=mask,
@@ -834,7 +1028,7 @@ class ExactConsensus(Consensus):
             if meter is not None:
                 return meter.max()
         total = payload_total_bits(Identity(), theta_template)
-        if self.union is not None:
+        if self.union is not None and self.faults is not None:
             return total * self.union.realized_out_degree_traced(mask)
         topo = self.schedule or self.topology
         return total * topo.realized_degree_traced(step, mask)
@@ -866,7 +1060,7 @@ class FedAvg(Consensus):
         self.node_axes = node_axes
 
     def mix(self, theta_locals, state, key, ctx, *, step=None, mask=None,
-            mixing=None, fault_key=None):
+            mixing=None, fault_key=None, theta_prev=None):
         m = jax.tree_util.tree_leaves(theta_locals)[0].shape[0]
         sampled = ctx  # SampledAscent's per-round client mask (None = all)
         if sampled is None:
@@ -1078,6 +1272,7 @@ class DecentralizedTrainer:
         theta_new, cons_new = self.consensus.mix(
             theta_half, state.consensus, gossip_key, ctx,
             step=state.step, mask=mask, mixing=mixing, fault_key=fault_key,
+            theta_prev=theta,
         )
 
         # --- running average of the network mean (output theta_o) -----------

@@ -3,11 +3,17 @@ neighbor-cache machinery that lets time-varying rounds ship only those bytes.
 
 Two first-class objects factor every consensus implementation's traffic:
 
-* :class:`WireFormat` — the byte format of one edge message: the packed
-  compressed ``payload`` (static CHOCO rounds), a ``dense`` f32 tensor
-  (exact/uncompressed gossip, the unpacked cross-check paths), or a
-  ``hat-delta`` (the compressed residual that doubles as an incremental
-  update to the receiver's mirror of the sender's public copy).
+* :class:`WireFormat` — an ordered tuple of :class:`Lane` descriptors, one
+  per state variable riding the edge.  Most consensus implementations ship
+  exactly one lane: the packed compressed ``payload`` (static CHOCO
+  rounds), a ``dense`` f32 tensor (exact/uncompressed gossip, the unpacked
+  cross-check paths), or a ``hat-delta`` (the compressed residual that
+  doubles as an incremental update to the receiver's mirror of the
+  sender's public copy).  Multi-lane messages stack further lanes on the
+  SAME edge of the SAME round — e.g. gradient tracking rides its tracker
+  variable as a second compressed hat-delta lane — and every lane keeps
+  its own NeighborCache mirror, digest, and fault-recovery state, so a
+  corrupted tracker lane can never poison the theta mirror.
 
 * :class:`UnionWirePlan` — the single wire program shared by *every* phase
   of a :class:`~repro.core.topology.TopologySchedule`: the union of all
@@ -45,12 +51,15 @@ import numpy as np
 from repro.core.topology import PermutePlan
 
 __all__ = [
+    "Lane",
     "WireFormat",
     "PAYLOAD",
     "DENSE",
     "HAT_DELTA",
     "DIGEST",
     "HAT_RESYNC",
+    "GT_LANES",
+    "GT_PAYLOAD",
     "UnionWirePlan",
     "compile_union_wire",
     "init_neighbor_cache",
@@ -59,8 +68,8 @@ __all__ = [
 
 # ================================================================ WireFormat
 @dataclasses.dataclass(frozen=True)
-class WireFormat:
-    """The byte format of one per-edge message in a consensus round.
+class Lane:
+    """One state variable's slot in a per-edge message.
 
     ``kind`` is one of:
 
@@ -81,16 +90,74 @@ class WireFormat:
       bytes, but only on requested edges and subject to the same fault
       draws (+ exponential backoff on failure).
 
-    This is a dispatch/label tag; the bits each format puts on an edge are
+    ``name`` identifies *which* variable rides the lane ("model" for theta,
+    "tracker" for the gradient-tracking y variable, "dual" for gossiped
+    lambda, ...).  Per-lane bits accounting keys off the name: each lane of
+    a multi-lane consensus bills its own payload/digest/resync bytes and
+    keeps its own fault-recovery state (see
+    ``ChocoConsensus.bits_per_lane`` / ``GradientTrackingConsensus``).
+    """
+
+    kind: str
+    name: str = "model"
+
+    def __str__(self) -> str:
+        return self.kind if self.name == "model" else f"{self.name}:{self.kind}"
+
+
+def _as_lanes(lanes) -> tuple:
+    if isinstance(lanes, str):
+        return (Lane(lanes),)
+    if isinstance(lanes, Lane):
+        return (lanes,)
+    return tuple(Lane(l) if isinstance(l, str) else l for l in lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """The byte format of one per-edge message: an ordered tuple of
+    :class:`Lane` descriptors, one per state variable on the wire.
+
+    Single-lane formats (the module singletons below) behave exactly like
+    the historical scalar tag: ``fmt.kind`` and ``str(fmt)`` give the lane
+    kind, and identity checks against the singletons keep working.
+    Multi-lane formats stack further variables on the *same* edges of the
+    *same* round — gradient tracking ships ``(hat-delta[model],
+    hat-delta[tracker])`` — and iterate/index like a tuple.
+
+    This is a dispatch/label tag; the bits each lane puts on an edge are
     billed by ``gossip.payload_bits`` (algorithmic payload accounting) and
     measured by suite X (compiled-HLO collective bytes) — deliberately NOT
     duplicated here, where a third copy could drift from both.
     """
 
-    kind: str
+    lanes: tuple[Lane, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "lanes", _as_lanes(self.lanes))
+        if not self.lanes:
+            raise ValueError("WireFormat needs at least one lane")
+
+    @property
+    def kind(self) -> str:
+        """Single-lane compatibility accessor (the pre-lane ``kind`` tag)."""
+        if len(self.lanes) != 1:
+            raise ValueError(
+                f"multi-lane format {self} has no single kind; iterate lanes"
+            )
+        return self.lanes[0].kind
+
+    def __len__(self) -> int:
+        return len(self.lanes)
+
+    def __iter__(self):
+        return iter(self.lanes)
+
+    def __getitem__(self, i) -> Lane:
+        return self.lanes[i]
 
     def __str__(self) -> str:  # row/label friendly
-        return self.kind
+        return "+".join(str(l) for l in self.lanes)
 
 
 PAYLOAD = WireFormat("payload")
@@ -98,6 +165,12 @@ DENSE = WireFormat("dense")
 HAT_DELTA = WireFormat("hat-delta")
 DIGEST = WireFormat("digest")
 HAT_RESYNC = WireFormat("hat-resync")
+
+#: The two-lane gradient-tracking wire: model hat-delta + tracker hat-delta
+#: on every union edge, each lane with its own mirror/digest/resync state.
+GT_LANES = WireFormat((Lane("hat-delta", "model"), Lane("hat-delta", "tracker")))
+#: Static-topology twin: two packed payloads per edge, no mirrors needed.
+GT_PAYLOAD = WireFormat((Lane("payload", "model"), Lane("payload", "tracker")))
 
 
 # ============================================================= UnionWirePlan
@@ -220,7 +293,11 @@ def init_neighbor_cache(theta_hat: Any, n_ops: int) -> tuple:
     op.  Exact at init because ``theta_hat`` itself initializes to zeros, and
     kept exact thereafter by applying each received hat-delta with the same
     arithmetic the sender applies to its own hat (see
-    ``exchange._round_leaf_cached``)."""
+    ``exchange._round_leaf_cached``).
+
+    Multi-lane rounds call this once per lane: each lane's CHOCOState
+    carries its *own* mirror tuple (and, under faults, its own FaultState),
+    so lanes verify, go stale, and resync independently."""
     import jax
     import jax.numpy as jnp
 

@@ -174,8 +174,31 @@ def trainer_state_pspecs(state: Any, params_spec: Any, mesh: Mesh, node_axes: tu
     like params (with node axis), lam [m, m] sharded on the node dim,
     scalars replicated."""
     from repro.core.gossip import CHOCOState
-    from repro.core.trainer import TrainerState
+    from repro.core.trainer import GTState, TrainerState
     from repro.optim import OptState
+
+    def choco_spec(cs):
+        return CHOCOState(
+            theta_hat=params_spec,
+            s=params_spec,
+            # NeighborCache mirrors are theta_hat-shaped ([m, ...]) —
+            # one per union wire op, sharded like the params
+            cache=tuple(params_spec for _ in cs.cache),
+        )
+
+    if isinstance(state.consensus, GTState):
+        # gradient tracking: one CHOCOState per wire lane, plus the
+        # theta-shaped tracker variable and previous displacement
+        consensus_spec = GTState(
+            model=choco_spec(state.consensus.model),
+            tracker=choco_spec(state.consensus.tracker),
+            y=params_spec,
+            d_prev=params_spec,
+        )
+    elif isinstance(state.consensus, CHOCOState):
+        consensus_spec = choco_spec(state.consensus)
+    else:
+        consensus_spec = ()
 
     return TrainerState(
         step=P(),
@@ -186,17 +209,7 @@ def trainer_state_pspecs(state: Any, params_spec: Any, mesh: Mesh, node_axes: tu
             mu=params_spec if state.opt.mu != () else (),
             nu=params_spec if state.opt.nu != () else (),
         ),
-        consensus=(
-            CHOCOState(
-                theta_hat=params_spec,
-                s=params_spec,
-                # NeighborCache mirrors are theta_hat-shaped ([m, ...]) —
-                # one per union wire op, sharded like the params
-                cache=tuple(params_spec for _ in state.consensus.cache),
-            )
-            if isinstance(state.consensus, CHOCOState)
-            else ()
-        ),
+        consensus=consensus_spec,
         theta_avg=(
             param_pspecs(state.theta_avg, mesh) if state.theta_avg != () else ()
         ),  # no node axis

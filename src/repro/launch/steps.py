@@ -49,6 +49,8 @@ def make_trainer(
     microbatches: int = 1,
     grad_accum_dtype: str = "float32",
     local_steps: int = 1,
+    consensus: str = "choco",
+    tracker_gamma: float | None = None,
     optimizer: str = "sgd",
     schedule: str = "exp",
     lr_decay: float = 1.0,
@@ -81,6 +83,8 @@ def make_trainer(
         microbatches=microbatches,
         grad_accum_dtype=grad_accum_dtype,
         local_steps=local_steps,
+        consensus=consensus,
+        tracker_gamma=tracker_gamma,
         optimizer=optimizer,
         schedule=schedule,
         lr_decay=lr_decay,

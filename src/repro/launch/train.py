@@ -77,6 +77,15 @@ def main() -> None:
     ap.add_argument("--nesterov", action="store_true", help="Nesterov momentum (sgd)")
     ap.add_argument("--local-steps", type=int, default=1,
                     help="K local optimizer steps between gossip rounds (needs K x batch)")
+    ap.add_argument("--consensus", choices=("choco", "gt"), default="choco",
+                    help="'choco' = plain compressed gossip; 'gt' = gradient "
+                         "tracking: a second CHOCO-compressed tracker variable "
+                         "rides lane 2 of the same wire round, cancelling the "
+                         "client drift large --local-steps induce under "
+                         "heterogeneous data (2x per-round bits)")
+    ap.add_argument("--tracker-gamma", type=float, default=None,
+                    help="consensus step size for the gt tracker lane "
+                         "(default: same resolution as the model lane)")
     ap.add_argument("--fused-gossip", action="store_true",
                     help="single-pass Pallas gossip (requires a kq* compressor)")
     ap.add_argument("--gossip-backend", choices=("rolled", "ppermute"), default="rolled",
@@ -136,6 +145,8 @@ def main() -> None:
         momentum=args.momentum,
         nesterov=args.nesterov,
         local_steps=args.local_steps,
+        consensus=args.consensus,
+        tracker_gamma=args.tracker_gamma,
         fused_gossip=args.fused_gossip,
         gossip_backend=args.gossip_backend,
         mesh=mesh,
@@ -150,6 +161,8 @@ def main() -> None:
         wire += f"+drop{args.dropout:g}"
     if args.fault_spec:
         wire += f"+faults[{args.fault_spec}]"
+    if args.consensus == "gt":
+        wire += f"+gt[{trainer.consensus.wire_format}]"
     print(f"arch={cfg.name} params={n_params:,} nodes={args.nodes} "
           f"compressor={args.compressor} topology={wire}")
 

@@ -364,6 +364,48 @@ def baselines_parity(mesh, quick):
     check("baseline/drfa", a, b, exact=False)
 
 
+def gt_parity(mesh, quick):
+    """ISSUE-8 cell: gradient tracking on the multi-lane wire.  With the
+    tracker off, GradientTrackingConsensus must be BIT-IDENTICAL to
+    ChocoConsensus on both backends (the lane refactor cannot perturb the
+    legacy single-lane path); with the tracker on, the rolled per-lane loop
+    and the one-shard_map-body two-lane ppermute round agree to ~1 ULP
+    across real devices (q4b, same bar as the single-lane static grid)."""
+    from repro.core.trainer import ChocoConsensus, GradientTrackingConsensus
+
+    m, d = 8, 64
+    topo = topology.ring(m)
+    comp = RandomQuantization(bits=4)
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(11), (m, d)),
+             "b": jax.random.normal(jax.random.PRNGKey(12), (m, 5))}
+    theta_prev = jax.tree.map(lambda x: 0.9 * x, theta)
+
+    def run(make, backend, rounds=3):
+        kw = dict(backend=backend)
+        if backend == "ppermute":
+            kw["mesh"] = mesh
+        gc = make(**kw)
+        st = gc.init(theta)
+        f = jax.jit(lambda t, tp, s, k: gc.mix(t, s, k, None, theta_prev=tp))
+        t, tp = theta, theta_prev
+        for i in range(rounds):
+            t2, st = f(t, tp, st, jax.random.PRNGKey(50 + i))
+            tp, t = t, t2
+        return t, st
+
+    for backend in ("rolled", "ppermute"):
+        a = run(lambda **kw: ChocoConsensus(topo, comp, 0.25, **kw), backend)
+        b = run(lambda **kw: GradientTrackingConsensus(
+            topo, comp, 0.25, tracker=False, **kw), backend)
+        check(f"gt-off/{backend}/q4b", a, b, exact=True)
+
+    a = run(lambda **kw: GradientTrackingConsensus(topo, comp, 0.25, **kw),
+            "rolled")
+    b = run(lambda **kw: GradientTrackingConsensus(topo, comp, 0.25, **kw),
+            "ppermute")
+    check("gt-on/rolled-vs-ppermute/q4b", a, b, exact=False)
+
+
 def eager_bit_identity(mesh):
     """disable_jit: both backends execute op-by-op — bit-identical even for
     the paths whose jitted programs differ by FMA contraction."""
@@ -418,6 +460,7 @@ def main():
     faulted_parity(mesh, quick)
     trainer_parity(mesh, quick)
     baselines_parity(mesh, quick)
+    gt_parity(mesh, quick)
     wire_mix_parity(mesh)
     eager_bit_identity(mesh)
     exact = sum(1 for _, lv, _, _ in CHECKS if lv == "EXACT")

@@ -295,6 +295,200 @@ def test_baselines_ppermute_parity_single_device():
     assert _worst(a, b) < 2e-6
 
 
+# ------------------------------------------------------------ multi-lane wire
+def _lane_thetas(theta, n_lanes):
+    """Distinct per-lane inputs from one template (lane k shifted by k)."""
+    return [
+        jax.tree.map(lambda x: x + 0.1 * k, theta) for k in range(n_lanes)
+    ]
+
+
+def _multilane_vs_single_case(spec, dropout, n_lanes, backend, packed=True,
+                              rounds=3, seed=7):
+    """encode->permute->decode of an n-lane round is bit-exact per lane:
+    lane k of choco_round_lanes equals a single-lane run keyed with
+    lane_key(key, k), for every lane count x schedule x dropout x backend."""
+    m, d = 6, 48
+    mesh = _mesh1() if backend == "ppermute" else None
+    sched = topology.make_topology_schedule(spec, m, dropout=dropout, seed=1)
+    topo0 = sched.topology_at(0)
+    comp = RandomQuantization(bits=4)
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(seed), (m, d)),
+             "b": jax.random.normal(jax.random.PRNGKey(seed + 1), (m, 3))}
+    union = compile_union_wire(compile_schedule_plans(sched))
+    cache_ops = union.n_ops if backend == "ppermute" else 0
+    masks = _masks(sched, m, rounds, seed=seed + 2) if dropout > 0 else [None] * rounds
+
+    masked = dropout > 0
+    # the rolled backend consumes an explicit dense W(t) (what
+    # ChocoConsensus.mix resolves); ppermute compiles the wire program from
+    # schedule + step.  One jitted fn per side so rounds share a compile.
+    if backend == "rolled":
+        extra = lambda i, mask: (sched.mixing_at(jnp.int32(i), mask), mask)
+
+        @jax.jit
+        def ml_step(thetas, states, key, mixing, mask=None):
+            lanes = [gossip.LaneRound(t, s, 0.3, comp)
+                     for t, s in zip(thetas, states)]
+            return gossip.choco_round_lanes(
+                lanes, topo0, key, mixing=mixing, mask=mask, packed=packed)
+
+        @jax.jit
+        def sl_step(t, s, key, mixing, mask=None):
+            return gossip.choco_round(
+                t, s, topo0, 0.3, comp, key, mixing=mixing, mask=mask,
+                packed=packed)
+    else:
+        extra = lambda i, mask: ((jnp.int32(i), mask) if masked
+                                 else (jnp.int32(i),))
+
+        @jax.jit
+        def ml_step(thetas, states, key, step, mask=None):
+            lanes = [gossip.LaneRound(t, s, 0.3, comp)
+                     for t, s in zip(thetas, states)]
+            return gossip.choco_round_lanes(
+                lanes, topo0, key, backend="ppermute", mesh=mesh,
+                schedule=sched, step=step, mask=mask, packed=packed)
+
+        @jax.jit
+        def sl_step(t, s, key, step, mask=None):
+            return gossip.choco_round(
+                t, s, topo0, 0.3, comp, key, backend="ppermute", mesh=mesh,
+                schedule=sched, step=step, mask=mask, packed=packed)
+
+    # n-lane trajectory
+    thetas = _lane_thetas(theta, n_lanes)
+    states = [gossip.choco_init(t, cache_ops=cache_ops) for t in thetas]
+    for i, mask in enumerate(masks):
+        thetas, states = ml_step(thetas, states, jax.random.PRNGKey(100 + i),
+                                 *extra(i, mask))
+        thetas, states = list(thetas), list(states)
+
+    # per-lane single-lane reference with the folded key stream
+    for k in range(n_lanes):
+        t = _lane_thetas(theta, n_lanes)[k]
+        s = gossip.choco_init(t, cache_ops=cache_ops)
+        for i, mask in enumerate(masks):
+            lk = gossip.lane_key(jax.random.PRNGKey(100 + i), k)
+            t, s = sl_step(t, s, lk, *extra(i, mask))
+        assert _worst((thetas[k], states[k].theta_hat, states[k].s),
+                      (t, s.theta_hat, s.s)) == 0.0, (
+            f"lane {k}/{n_lanes} not bit-exact vs single-lane run "
+            f"({spec}, dropout={dropout}, {backend})"
+        )
+    return states, union, cache_ops
+
+
+@pytest.mark.parametrize("backend", ["rolled", "ppermute"])
+@pytest.mark.parametrize("n_lanes", [2, 3])
+@pytest.mark.parametrize("sname,spec,dropout", SCHEDULES,
+                         ids=[s[0] for s in SCHEDULES])
+def test_multilane_roundtrip_bit_exact(sname, spec, dropout, n_lanes, backend):
+    states, union, cache_ops = _multilane_vs_single_case(
+        spec, dropout, n_lanes, backend,
+    )
+    # per-lane mirror invariant: every lane keeps its own synced NeighborCache
+    if cache_ops:
+        for st in states:
+            _assert_cache_invariant(st, union)
+
+
+def test_multilane_unpacked_matches_packed():
+    """Lane isolation is format-independent: the unpacked dense-q wire ships
+    the same numbers as the packed payload wire, per lane."""
+    a, _, _ = _multilane_vs_single_case(
+        "roundrobin:ring,torus", 0.25, 2, "ppermute", packed=True)
+    b, _, _ = _multilane_vs_single_case(
+        "roundrobin:ring,torus", 0.25, 2, "ppermute", packed=False)
+    for sa, sb in zip(a, b):
+        assert _worst((sa.theta_hat, sa.s), (sb.theta_hat, sb.s)) == 0.0
+
+
+def test_gt_tracker_off_bit_identical_to_choco():
+    """K=1 tracker-off GradientTrackingConsensus == ChocoConsensus, bitwise,
+    on both backends (the ISSUE-8 parity anchor)."""
+    from repro.core.compression import make_compressor
+    from repro.core.trainer import ChocoConsensus, GradientTrackingConsensus
+
+    m = 8
+    ring = topology.ring(m)
+    comp = make_compressor("q4b")
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(0), (m, 40))}
+    key = jax.random.PRNGKey(3)
+    for kw in ({}, {"backend": "ppermute", "mesh": _mesh1()}):
+        cc = ChocoConsensus(ring, comp, 0.3, **kw)
+        gc = GradientTrackingConsensus(ring, comp, 0.3, tracker=False, **kw)
+        tc, sc = cc.mix(theta, cc.init(theta), key, None)
+        tg, sg = gc.mix(theta, gc.init(theta), key, None, theta_prev=theta)
+        assert _worst((tc, sc.theta_hat, sc.s), (tg, sg.theta_hat, sg.s)) == 0.0
+        assert str(gc.wire_format) == str(cc.wire_format)
+
+
+def test_gt_wire_format_and_bits_accounting():
+    """Two-lane gt: wire_format gains the tracker lane, bits_per_round is
+    exactly 2x the single-lane cost (per lane via bits_per_lane), and the
+    trainer's per_iteration=True divides the two-lane cost by K."""
+    from repro.core.compression import make_compressor
+    from repro.core.trainer import ChocoConsensus, GradientTrackingConsensus
+    from repro.core.wire import GT_LANES, Lane, WireFormat
+
+    m = 8
+    ring = topology.ring(m)
+    sched = topology.make_topology_schedule("ring", m, dropout=0.2)
+    comp = make_compressor("q4b")
+    theta = {"w": jnp.zeros((m, 100))}
+
+    cc = ChocoConsensus(ring, comp, 0.3)
+    gc = GradientTrackingConsensus(ring, comp, 0.3)
+    assert [str(l) for l in gc.wire_format] == ["payload", "tracker:payload"]
+    assert gc.bits_per_round(theta) == 2.0 * cc.bits_per_round(theta)
+    lanes = gc.bits_per_lane(theta)
+    assert set(lanes) == {"model", "tracker"}
+    assert sum(lanes.values()) == gc.bits_per_round(theta)
+    # cached union wire -> two hat-delta lanes (the GT_LANES format)
+    gcs = GradientTrackingConsensus(sched, comp, 0.3, backend="ppermute",
+                                    mesh=_mesh1())
+    assert str(gcs.wire_format) == str(GT_LANES) == "hat-delta+tracker:hat-delta"
+    assert len(WireFormat((Lane("hat-delta"), Lane("digest", "tracker")))) == 2
+
+    # trainer-level per-iteration accounting: the two-lane round spread
+    # over K local iterations (the PR-2 DRFA fix, mirrored for gt)
+    from benchmarks.common import make_adgda
+    from repro.data import rotated_minority_classification
+
+    data = rotated_minority_classification(num_nodes=6, seed=0)
+    for k in (1, 4):
+        tr, init_fn, _ = make_adgda("logistic", 6, compressor="q4b",
+                                    consensus="gt", local_steps=k)
+        st = tr.init(init_fn(data.dim, data.num_classes), jax.random.PRNGKey(0))
+        assert tr.bits_per_round(st, per_iteration=True) == pytest.approx(
+            tr.bits_per_round(st) / k
+        )
+
+
+def test_gt_trainer_matches_mean_trajectory():
+    """Network-mean invariant: with doubly-stochastic mixing the gt mean
+    trajectory follows plain local SGD's (gossip preserves both lane means),
+    so after any number of rounds mean(y) == mean(d_prev)."""
+    from benchmarks.common import make_adgda
+    from repro.data import rotated_minority_classification
+
+    m = 6
+    data = rotated_minority_classification(num_nodes=m, seed=0)
+    tr, init_fn, _ = make_adgda("logistic", m, compressor="q4b",
+                                consensus="gt", local_steps=2)
+    st = tr.init(init_fn(data.dim, data.num_classes), jax.random.PRNGKey(0))
+    gen = data.batches(40, seed=0)
+    for _ in range(5):
+        xb, yb = next(gen)
+        st, _ = tr.step(st, (jnp.asarray(xb), jnp.asarray(yb)))
+    for y, d in zip(jax.tree_util.tree_leaves(st.consensus.y),
+                    jax.tree_util.tree_leaves(st.consensus.d_prev)):
+        ym = np.asarray(y, np.float64).mean(0)
+        dm = np.asarray(d, np.float64).mean(0)
+        assert np.abs(ym - dm).max() < 1e-5, "tracker mean diverged from mean displacement"
+
+
 def test_hypothesis_random_masks_keep_invariant():
     """Property test: arbitrary alive/dead patterns over arbitrary phase
     offsets never break the mirror invariant or the oracle parity."""
