@@ -13,13 +13,26 @@ fleet" section):
   mean_request_tokens / slots``.  Tick-denominated latency percentiles
   (``p50/p95/p99_ttft_ticks``) are bit-deterministic given the loadgen
   seed — the gateable SLO — while wall metrics (``tok_per_s``,
-  ``per_token_ms``, ``p50/p99_ttft_ms``) are reported for trend only.
-  ``knee_rate`` is the measured latency knee: the largest tested rate whose
-  p99 TTFT stays within ``KNEE_INFLATION`` x max(p50, 1) ticks.  The
+  ``per_token_ms``, ``p50/p99_ttft_ms``, ``wall``) are reported for trend
+  only.  ``knee_rate`` is the measured latency knee: the largest tested rate
+  whose p99 TTFT stays within ``KNEE_INFLATION`` x max(p50, 1) ticks.  The
   admission queue bound (``max_queue = QUEUE_SLOTS_FACTOR x slots``) is
   sized so that below the knee nothing is ever rejected (the SLO
   ``check_regression`` re-asserts baseline-free) while overload sheds
   instead of queueing unboundedly.
+
+  Fast-path instrumentation (ISSUE 9): at ``SPEEDUP_UTIL`` each fleet also
+  runs a ``fastpath="off"`` twin — the pre-cache engine (per-engine jit,
+  batch-1 prefill, no prefix cache) on IDENTICAL traffic.  The twin must
+  match the fast row bit-for-bit on every tick-denominated field (the
+  correctness gate: the fast path is a wall-clock lever ONLY), and the fast
+  row records ``speedup_fastpath = twin.wall / fast.wall`` which
+  ``check_regression`` gates at an absolute >= 2x.  ``cache_hit_rate`` /
+  ``prefill_skipped`` count prefix-cache reuse.  Rows with a ``prompts``
+  key re-run m2s2 at the speedup util under skewed prompt identity:
+  ``prompts="zipf"`` draws from a hot pool of ``PROMPT_POOL`` prompts
+  (hit rate must clear 0.3), ``prompts="unique"`` makes every prompt
+  distinct (hit rate must be exactly 0 — no false sharing).
 
 * ``kind="train_serve"`` — the DRO guarantee as a serving SLO: a
   decentralized training run (AD-GDA vs its unweighted ``robust=False``
@@ -34,6 +47,10 @@ fleet" section):
   ``first_worst_acc`` the probe after the first reload (the across-reloads
   trajectory).  The acceptance bar: the AD-GDA row's ``worst_node_acc``
   beats the unweighted row's.
+
+A third row kind lives OUTSIDE the quick/full set: ``run_scale`` (CLI
+``--scale``) serves 10^6 offered requests end-to-end and persists the
+single ``kind="scale"`` row to ``BENCH_S_SCALE.json`` — see its docstring.
 """
 from __future__ import annotations
 
@@ -55,6 +72,10 @@ QUEUE_SLOTS_FACTOR = 6      # max_queue = 6 x slots (~ knee-load p99 queue depth
 FLEETS = {"m2s2": (2, 2), "m1s4": (1, 4)}
 # offered load as a fraction of per-node capacity slots/mean_request_tokens
 UTILIZATIONS = (0.4, 0.8, 1.4)
+# the util where fast-path twins run (and the speedup_fastpath gate applies)
+SPEEDUP_UTIL = 0.8
+# hot-prompt pool size for the prompts="zipf" rows
+PROMPT_POOL = 64
 
 
 def _serve_cfg():
@@ -67,10 +88,13 @@ def _serve_cfg():
     )
 
 
-def _latency_rows(quick: bool) -> list[dict]:
-    import jax as _jax
+def _fleet_run(cfg, params, m, slots, rate, n_requests, *, fastpath=True,
+               prompt_mode="iid", seed=0, retain="all", progress_every=0):
+    """One fleet point: build loadgen + engines, serve, return the report.
 
-    from repro.models import transformer as T
+    ``fastpath=False`` runs the pre-cache engine (per-engine jit, no prefix
+    cache, batch-1 prefill) on IDENTICAL traffic — the twin the suite-S gate
+    compares tick-for-tick."""
     from repro.serving import (
         AdmissionControl,
         FleetNode,
@@ -80,63 +104,136 @@ def _latency_rows(quick: bool) -> list[dict]:
         ServingFleet,
     )
 
+    lg = LoadGenConfig(num_nodes=m, rate=rate, vocab_size=cfg.vocab_size,
+                       prompt_min=4, prompt_max=24,
+                       output_min=1, output_max=8, seed=seed,
+                       prompt_mode=prompt_mode, prompt_pool=PROMPT_POOL)
+    nodes = [
+        FleetNode(
+            i,
+            ServeEngine(cfg, params, max_slots=slots, cache_len=48,
+                        prompt_bucket=8, fastpath=fastpath),
+            admission=AdmissionControl(
+                max_queue=QUEUE_SLOTS_FACTOR * slots, policy="reject"
+            ),
+            retain=retain,
+        )
+        for i in range(m)
+    ]
+    fleet = ServingFleet(nodes, LoadGenerator(lg),
+                         progress_every=progress_every)
+    return fleet.run(max_requests=n_requests, max_ticks=200_000_000)
+
+
+def _latency_row(rep, fleet_name, rate, util) -> dict:
+    f = rep.fleet
+    return {
+        "table": "S",
+        "kind": "latency",
+        "fleet": fleet_name,
+        "rate": rate,
+        "util": round(util, 4),
+        "requests": rep.offered,
+        "completed": f["completed"],
+        "rejected": f["rejected"],
+        "shed": f["shed"],
+        "ticks": rep.ticks,
+        "p50_ttft_ticks": f["p50_ttft_ticks"],
+        "p95_ttft_ticks": f["p95_ttft_ticks"],
+        "p99_ttft_ticks": f["p99_ttft_ticks"],
+        "p50_ttft_ms": f["p50_ttft_ms"],
+        "p99_ttft_ms": f["p99_ttft_ms"],
+        "per_token_ms": f["per_token_ms"],
+        "tok_per_s": f["tok_per_s"],
+        "mean_queue_depth": f["mean_queue_depth"],
+        "max_queue_depth": f["max_queue_depth"],
+        "slot_occupancy": f["slot_occupancy"],
+        "cache_hit_rate": f["cache_hit_rate"],
+        "prefill_skipped": f["prefill_skipped"],
+        "wall": rep.wall_seconds,
+    }
+
+
+def _latency_rows(quick: bool) -> list[dict]:
+    import jax as _jax
+
+    from repro.models import transformer as T
+
     cfg = _serve_cfg()
     params = T.init_model(_jax.random.PRNGKey(0), cfg)
     n_requests = 170 if quick else 4000
     rows = []
     for fleet_name, (m, slots) in FLEETS.items():
-        lg_probe = LoadGenConfig(num_nodes=m, rate=1.0, vocab_size=cfg.vocab_size,
-                                 prompt_min=4, prompt_max=24,
-                                 output_min=1, output_max=8, seed=0)
+        lg_probe = LoadGenConfig_probe(cfg, m)
         capacity = slots / lg_probe.mean_request_tokens()  # requests/tick/node
-        fleet_rows = []
+        fleet_rows, twin_rows = [], []
         for util in UTILIZATIONS:
             rate = round(util * capacity, 4)
-            gen = LoadGenerator(dataclasses.replace(lg_probe, rate=rate))
-            nodes = [
-                FleetNode(
-                    i,
-                    ServeEngine(cfg, params, max_slots=slots, cache_len=48,
-                                prompt_bucket=8),
-                    admission=AdmissionControl(
-                        max_queue=QUEUE_SLOTS_FACTOR * slots, policy="reject"
-                    ),
+            rep = _fleet_run(cfg, params, m, slots, rate, n_requests)
+            row = _latency_row(rep, fleet_name, rate, util)
+            fleet_rows.append(row)
+            if util == SPEEDUP_UTIL:
+                # the pre-cache twin: identical traffic through the legacy
+                # engine.  Tick metrics must match the fast row bitwise
+                # (check_regression re-asserts); wall is the claim.
+                off = _fleet_run(cfg, params, m, slots, rate, n_requests,
+                                 fastpath=False)
+                twin = _latency_row(off, fleet_name, rate, util)
+                twin["fastpath"] = "off"
+                row["speedup_fastpath"] = (
+                    off.wall_seconds / max(rep.wall_seconds, 1e-9)
                 )
-                for i in range(m)
-            ]
-            rep = ServingFleet(nodes, gen).run(
-                max_requests=n_requests, max_ticks=200_000
-            )
-            f = rep.fleet
-            fleet_rows.append({
-                "table": "S",
-                "kind": "latency",
-                "fleet": fleet_name,
-                "rate": rate,
-                "util": round(util, 4),
-                "requests": rep.offered,
-                "completed": f["completed"],
-                "rejected": f["rejected"],
-                "shed": f["shed"],
-                "ticks": rep.ticks,
-                "p50_ttft_ticks": f["p50_ttft_ticks"],
-                "p95_ttft_ticks": f["p95_ttft_ticks"],
-                "p99_ttft_ticks": f["p99_ttft_ticks"],
-                "p50_ttft_ms": f["p50_ttft_ms"],
-                "p99_ttft_ms": f["p99_ttft_ms"],
-                "per_token_ms": f["per_token_ms"],
-                "tok_per_s": f["tok_per_s"],
-                "mean_queue_depth": f["mean_queue_depth"],
-                "max_queue_depth": f["max_queue_depth"],
-                "slot_occupancy": f["slot_occupancy"],
-            })
+                twin_rows.append(twin)
         # measured knee: largest tested rate still inside the inflation SLO
         under = [r for r in fleet_rows
                  if r["p99_ttft_ticks"] <= KNEE_INFLATION * max(r["p50_ttft_ticks"], 1.0)]
         knee = max((r["rate"] for r in under), default=min(r["rate"] for r in fleet_rows))
-        for r in fleet_rows:
+        for r in fleet_rows + twin_rows:
             r["knee_rate"] = knee
-        rows += fleet_rows
+        rows += fleet_rows + twin_rows
+    rows += _prompt_mode_rows(cfg, params, n_requests)
+    return rows
+
+
+def LoadGenConfig_probe(cfg, m):
+    from repro.serving import LoadGenConfig
+
+    return LoadGenConfig(num_nodes=m, rate=1.0, vocab_size=cfg.vocab_size,
+                         prompt_min=4, prompt_max=24,
+                         output_min=1, output_max=8, seed=0)
+
+
+def _prompt_mode_rows(cfg, params, n_requests) -> list[dict]:
+    """Prompt-repetition structure rows (fleet m2s2 @ the speedup util):
+    ``prompts="zipf"`` draws from a hot pool of PROMPT_POOL prompts — the
+    workload the prefix cache converts into wall-clock (its on-row must
+    show ``cache_hit_rate > 0.3``) — and ``prompts="unique"`` guarantees
+    distinct prompts, the zero-hit-rate control (``cache_hit_rate == 0``).
+    The zipf pair also carries the tick-equality twin."""
+    m, slots = FLEETS["m2s2"]
+    capacity = slots / LoadGenConfig_probe(cfg, m).mean_request_tokens()
+    rate = round(SPEEDUP_UTIL * capacity, 4)
+    rows = []
+    for prompts, mode in (("zipf", "pool"), ("unique", "unique")):
+        rep = _fleet_run(cfg, params, m, slots, rate, n_requests,
+                         prompt_mode=mode)
+        row = _latency_row(rep, "m2s2", rate, SPEEDUP_UTIL)
+        row["prompts"] = prompts
+        rows.append(row)
+        if prompts == "zipf":
+            off = _fleet_run(cfg, params, m, slots, rate, n_requests,
+                             fastpath=False, prompt_mode=mode)
+            twin = _latency_row(off, "m2s2", rate, SPEEDUP_UTIL)
+            twin["prompts"] = prompts
+            twin["fastpath"] = "off"
+            row["speedup_fastpath"] = (
+                off.wall_seconds / max(rep.wall_seconds, 1e-9)
+            )
+            rows.append(twin)
+    # below-knee SLO applies at this util on this fleet; stamp the iid knee
+    # convention (rate itself — these rows are their own sweep point)
+    for r in rows:
+        r["knee_rate"] = rate
     return rows
 
 
@@ -146,6 +243,7 @@ def _train_serve_rows(quick: bool) -> list[dict]:
     from benchmarks.common import MODELS
     from repro.serving import (
         AdmissionControl,
+        BatchedProbe,
         ClassifierEngine,
         EvalRequest,
         FleetNode,
@@ -189,21 +287,23 @@ def _train_serve_rows(quick: bool) -> list[dict]:
 
                 return payload
 
+            # shared quality probe: ONE jitted forward over both populations
+            # per checkpoint step, shared by every node probing that step
+            # (m nodes x r reloads collapses to r forwards)
+            name_to_idx = {n: i for i, n in enumerate(data.val_names)}
+            probe = BatchedProbe(
+                apply_fn,
+                {name: (data.val_x[name_to_idx[name]],
+                        data.val_y[name_to_idx[name]])
+                 for name in ("majority", "minority")},
+                loss_fn=loss_fn,
+            )
+
             def quality_for(node):
                 # node's latent population: minority for the rotated nodes
-                dist = 1 if node < minority_nodes else 0
-                name_to_idx = {n: i for i, n in enumerate(data.val_names)}
-                vi = name_to_idx["minority" if dist else "majority"]
-                vx, vy = jnp.asarray(data.val_x[vi]), jnp.asarray(data.val_y[vi])
-
-                def quality(params):
-                    logits = apply_fn(params, vx)
-                    pred = np.asarray(jnp.argmax(logits, -1))
-                    loss = float(loss_fn(params, (vx, vy), None))
-                    return {"acc": float((pred == np.asarray(vy)).mean()),
-                            "loss": loss}
-
-                return quality
+                return probe.quality_fn(
+                    "minority" if node < minority_nodes else "majority"
+                )
 
             class _NodePayload:
                 """Route each node's traffic through its own data pool."""
@@ -265,6 +365,9 @@ def _train_serve_rows(quick: bool) -> list[dict]:
                 "mean_node_acc": float(np.mean([q["acc"] for q in final_probe])),
                 "worst_node_loss": max(q["loss"] for q in final_probe),
                 "served_worst_acc": min(served_acc),
+                # device forwards the shared probe actually ran (float so the
+                # row key stays stable across probe batching changes)
+                "probe_forwards": float(probe.probe_forwards),
             })
     return rows
 
@@ -273,7 +376,65 @@ def run(quick: bool = True) -> list[dict]:
     return _latency_rows(quick) + _train_serve_rows(quick)
 
 
+# ------------------------------------------------------------- the scale run
+SCALE_REQUESTS = 1_000_000
+
+
+def run_scale(n_requests: int = SCALE_REQUESTS,
+              progress_every: int = 200_000) -> dict:
+    """The 10^6-offered-requests end-to-end point (offline — run once via
+    ``python -m benchmarks.bench_serving --scale``, persisted to
+    ``BENCH_S_SCALE.json`` and referenced from the README; NOT part of the
+    quick/full row set so the regression gate's row keys stay stable).
+
+    Fleet m2s2 at the speedup util on the hot-pool (zipf) workload, nodes in
+    ``retain="stats"`` mode: every request streams into a constant-size
+    accumulator, so memory stays flat while percentiles remain exact.
+    Admission conservation (``completed + rejected + shed == offered``) is
+    asserted — a lost request anywhere in the pipeline fails the run."""
+    import jax as _jax
+
+    from repro.models import transformer as T
+
+    cfg = _serve_cfg()
+    params = T.init_model(_jax.random.PRNGKey(0), cfg)
+    m, slots = FLEETS["m2s2"]
+    capacity = slots / LoadGenConfig_probe(cfg, m).mean_request_tokens()
+    rate = round(SPEEDUP_UTIL * capacity, 4)
+    rep = _fleet_run(cfg, params, m, slots, rate, n_requests,
+                     prompt_mode="pool", retain="stats",
+                     progress_every=progress_every)
+    f = rep.fleet
+    terminal = f["completed"] + f["rejected"] + f["shed"]
+    assert terminal == rep.offered, (
+        f"admission conservation broken: {f['completed']}+{f['rejected']}"
+        f"+{f['shed']} != {rep.offered} offered"
+    )
+    row = _latency_row(rep, "m2s2", rate, SPEEDUP_UTIL)
+    row["prompts"] = "zipf"
+    row["kind"] = "scale"
+    return row
+
+
 if __name__ == "__main__":
+    import argparse
+    import json
+    from pathlib import Path
+
     from benchmarks.common import print_rows
 
-    print_rows(run())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", action="store_true",
+                    help=f"run the {SCALE_REQUESTS:,}-request scale point and "
+                         "write BENCH_S_SCALE.json (offline; ~tens of minutes)")
+    ap.add_argument("--requests", type=int, default=SCALE_REQUESTS,
+                    help="offered-request count for --scale")
+    args = ap.parse_args()
+    if args.scale:
+        row = run_scale(args.requests)
+        out = Path(__file__).resolve().parent.parent / "BENCH_S_SCALE.json"
+        out.write_text(json.dumps({"rows": [row]}, indent=1) + "\n")
+        print_rows([row])
+        print(f"wrote {out}")
+    else:
+        print_rows(run())

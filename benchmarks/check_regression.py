@@ -27,14 +27,20 @@ across machines:
   and the digest layer must have detected (and resynced) at least one
   divergence — a silent fault injector fails the gate.
 * suite **S** — ``p99_ttft_ticks`` per (fleet, rate) latency row
-  (tick-denominated TTFT is bit-deterministic given the loadgen seed) and
-  ``worst_node_acc`` per train-and-serve row, plus baseline-free SLO
-  invariants: every latency row at or below its fleet's measured knee
-  (``rate <= knee_rate``) must have ``rejected == 0`` and
-  ``p99_ttft_ticks`` within ``KNEE_INFLATION x max(p50_ttft_ticks, 1)``;
-  the AD-GDA train-and-serve row's ``worst_node_acc`` must beat its
-  unweighted twin's (the DRO-as-serving-SLO claim); and every
-  train-and-serve row must have actually hot-reloaded (``reloads > 0``).
+  (tick-denominated TTFT is bit-deterministic given the loadgen seed),
+  ``worst_node_acc`` per train-and-serve row, and ``speedup_fastpath``
+  (fast-path wall clock vs the legacy-engine twin on identical traffic;
+  2.0x absolute bar), plus baseline-free SLO invariants: every latency row
+  at or below its fleet's measured knee (``rate <= knee_rate``) must have
+  ``rejected == 0`` and ``p99_ttft_ticks`` within ``KNEE_INFLATION x
+  max(p50_ttft_ticks, 1)``; every ``fastpath="off"`` twin row must match
+  its fast row EXACTLY on every tick-denominated field (the fast path is a
+  wall-clock lever only); the hot-pool ``prompts="zipf"`` row must show
+  ``cache_hit_rate > 0.3`` and the ``prompts="unique"`` control exactly 0;
+  ``completed + rejected + shed == requests`` on every latency row; the
+  AD-GDA train-and-serve row's ``worst_node_acc`` must beat its unweighted
+  twin's (the DRO-as-serving-SLO claim); and every train-and-serve row must
+  have actually hot-reloaded (``reloads > 0``).
 
 Every suite's gate lives in one shared ``SuiteSpec`` table below — gated
 metrics, float scenario-axis fields exempt from the row-key rule, and the
@@ -126,8 +132,12 @@ def _ksweep_invariant_failures(rows: list) -> list:
     lane into worst-node accuracy, and it must also win the same-K
     comparison at K=16 outright.  Key names (``consensus``, ``local_steps``,
     ``bits_total_realized``) match bench_faults.run_ksweep / BENCH_FT.json."""
+    # rows with a tracker_compressor key run a coarser tracker lane — the
+    # 2x-lane bits reasoning below does not apply to them, and they must
+    # not shadow the plain gt@16 anchor cell
     ks = {(r.get("consensus"), r.get("local_steps")): r
-          for r in rows if r.get("schedule") == "ksweep-ring"}
+          for r in rows if r.get("schedule") == "ksweep-ring"
+          and not r.get("tracker_compressor")}
     if not ks:
         return []  # pre-ISSUE-8 baseline without the sweep: nothing to check
     failures = []
@@ -198,6 +208,57 @@ def _s_invariant_failures(fresh: dict) -> list:
 
     failures = []
     rows = [dict(r) for r in fresh.values()]
+
+    # ---- fast-path contracts (ISSUE-9): the serving fast path is a WALL
+    # CLOCK lever only.  (1) every fastpath="off" twin must match its fast
+    # row on every tick-denominated field EXACTLY (logical time is pure);
+    # (2) the hot-pool (zipf) row must actually hit the prefix cache and the
+    # unique-prompt control must never; (3) admission conserves requests.
+    TICK_FIELDS = ("requests", "completed", "rejected", "shed", "ticks",
+                   "p50_ttft_ticks", "p95_ttft_ticks", "p99_ttft_ticks")
+    lat = [r for r in rows if r.get("kind") == "latency"]
+    for off in [r for r in lat if r.get("fastpath") == "off"]:
+        match = [r for r in lat if r.get("fastpath") is None
+                 and r["fleet"] == off["fleet"] and r["rate"] == off["rate"]
+                 and r.get("prompts") == off.get("prompts")]
+        scen = (f"{off['fleet']}@{off['rate']:g}"
+                + (f"/{off['prompts']}" if off.get("prompts") else ""))
+        if len(match) != 1:
+            print(f"REGRESSION twin {scen}: {len(match)} fast rows match")
+            failures.append(((("scenario", f"twin:{scen}"),),
+                             "twin_match", 1.0, float(len(match))))
+            continue
+        on = match[0]
+        bad = [k for k in TICK_FIELDS if float(on[k]) != float(off[k])]
+        print(f"{'ok' if not bad else 'REGRESSION':10s} twin {scen}: "
+              f"tick metrics {'bit-identical' if not bad else 'DIVERGED: ' + ','.join(bad)}")
+        for k in bad:
+            failures.append(((("scenario", f"twin:{scen}"),),
+                             k, float(off[k]), float(on[k])))
+    for row in lat:
+        if row.get("fastpath") == "off" or "prompts" not in row:
+            continue
+        hit = float(row.get("cache_hit_rate", 0.0))
+        if row["prompts"] == "zipf":
+            ok, req = hit > 0.3, "> 0.3"
+        else:  # unique: the guaranteed-zero-hit-rate control
+            ok, req = hit == 0.0, "== 0"
+        scen = f"{row['fleet']}@{row['rate']:g}/{row['prompts']}"
+        print(f"{'ok' if ok else 'REGRESSION':10s} {scen}: "
+              f"cache_hit_rate {hit:.4g} (must be {req})")
+        if not ok:
+            failures.append(((("scenario", scen),), "cache_hit_rate",
+                             0.3 if row["prompts"] == "zipf" else 0.0, hit))
+    for row in lat:
+        total = float(row["completed"]) + float(row["rejected"]) + float(row["shed"])
+        ok = total == float(row["requests"])
+        if not ok:
+            scen = f"{row['fleet']}@{row['rate']:g}"
+            print(f"REGRESSION {scen}: completed+rejected+shed {total:g} "
+                  f"!= requests {row['requests']}")
+            failures.append(((("scenario", scen),), "request_conservation",
+                             float(row["requests"]), total))
+
     for row in rows:
         if row.get("kind") != "latency" or row["rate"] > row["knee_rate"]:
             continue
@@ -271,7 +332,11 @@ SPECS = {
                     axis_fields=frozenset({"dropout"}),
                     invariants=_ft_invariant_failures),
     "S": SuiteSpec(gates=(("p99_ttft_ticks", "lower", None),
-                          ("worst_node_acc", "higher", None)),
+                          ("worst_node_acc", "higher", None),
+                          # fast-path wall-clock claim: >= 2x vs the legacy
+                          # twin on the same traffic (absolute bar; timing
+                          # ratios get the suite-G retry absorber)
+                          ("speedup_fastpath", "higher", 2.0)),
                    axis_fields=frozenset({"rate"}),
                    invariants=_s_invariant_failures),
 }

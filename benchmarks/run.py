@@ -17,6 +17,12 @@ Roofline/dry-run artifacts live in launch/dryrun.py (§Dry-run, §Roofline).
 
 Each suite's rows are persisted to BENCH_<suite>.json next to this package's
 parent (the repo root) so the perf trajectory is tracked across PRs.
+
+Suite S additionally has an offline scale point outside this harness:
+``python -m benchmarks.bench_serving --scale`` serves 10^6 offered requests
+(fleet m2s2, hot-pool prompts, streaming retain="stats" accumulators) and
+writes BENCH_S_SCALE.json — kept out of BENCH_S.json so the quick/full row
+keys the regression gate matches on stay stable.
 """
 from __future__ import annotations
 

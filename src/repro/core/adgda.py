@@ -114,6 +114,11 @@ class ADGDAConfig:
     # heterogeneous data — 2x the per-round bits, aimed at K >> 1.
     tracker_gamma: float | None = None  # consensus step size for the tracker
     # lane (None -> same gamma resolution as the model lane)
+    tracker_compressor: str | None = None  # compression level for the tracker
+    # lane only (consensus="gt"), e.g. "kq2b" under a "kq4b" model lane: the
+    # tracker tolerates coarser quantization (arXiv 2405.00965), shaving the
+    # second lane's bits.  None -> the model compressor on both lanes
+    # (bit-identical to the single-compressor wire)
     fault_spec: str | None = None  # wire-fault injection, e.g.
     # "drop:0.05,corrupt:0.01,stale:2" (repro.core.faults.parse_fault_spec):
     # per-(edge, round) message drop/corrupt/dup/delay at the exchange
@@ -195,10 +200,16 @@ def adgda_trainer(config: ADGDAConfig, loss_fn: LossFn, prior=None, *,
         grad_accum_dtype=config.grad_accum_dtype,
         spmd_axis_name=config.spmd_axis_name,
     )
+    if config.tracker_compressor is not None and config.consensus != "gt":
+        raise ValueError(
+            "tracker_compressor only applies to consensus='gt' (there is no "
+            f"tracker lane under consensus={config.consensus!r})"
+        )
     if config.consensus == "gt":
         consensus = GradientTrackingConsensus(
             topology, compressor, config.gamma,
             tracker_gamma=config.tracker_gamma,
+            tracker_compressor=config.tracker_compressor,
             packed=config.packed_gossip, fused=config.fused_gossip,
             backend=config.gossip_backend, mesh=mesh, node_axes=node_axes,
             faults=config.fault_spec,

@@ -729,17 +729,18 @@ class ChocoConsensus(Consensus):
         return wire.HAT_DELTA if self.union is not None else wire.PAYLOAD
 
     def bits_per_round(self, theta_template, *, mode: str = "max",
-                       step=None, mask=None) -> float:
+                       step=None, mask=None, compressor=None) -> float:
+        comp = compressor if compressor is not None else self.compressor
         if self.union is not None:
             # cached union wire: every union edge carries one hat-delta
             # payload every round (that is what keeps the mirrors exact), so
             # the honest degree is the union out-degree
             return payload_bits(
-                self.compressor, theta_template, self.schedule,
+                comp, theta_template, self.schedule,
                 degree=_union_degree(self.union, self.schedule, mode, mask),
             )
         return payload_bits(
-            self.compressor, theta_template, self.schedule or self.topology,
+            comp, theta_template, self.schedule or self.topology,
             mode=mode, step=step, mask=mask,
         )
 
@@ -833,10 +834,40 @@ class GradientTrackingConsensus(ChocoConsensus):
     def __init__(self, topology: Topology | TopologySchedule,
                  compressor: Compressor, gamma: float | str | None = None, *,
                  tracker: bool = True, tracker_gamma: float | None = None,
+                 tracker_compressor: Compressor | str | None = None,
                  **kw):
         super().__init__(topology, compressor, gamma, **kw)
         self.tracker = tracker
         self.tracker_gamma_spec = tracker_gamma
+        # the tracker lane may run a DIFFERENT compression level than the
+        # model lane (arXiv 2405.00965 observes the tracker tolerates
+        # coarser quantization): None reuses the model compressor (and the
+        # model gamma — bit-identical to the single-compressor wire)
+        if isinstance(tracker_compressor, str):
+            from repro.core.compression import make_compressor
+
+            tracker_compressor = make_compressor(tracker_compressor)
+        self.tracker_compressor = tracker_compressor
+
+    @property
+    def _tracker_comp(self) -> Compressor:
+        return (self.tracker_compressor if self.tracker_compressor is not None
+                else self.compressor)
+
+    def _resolve_tracker_gamma(self, gamma: float, d: int) -> float:
+        """Tracker-lane step size: an explicit ``tracker_gamma`` wins; else
+        the model gamma when the lanes share a compressor (historical
+        behavior, bit-identical), else the default resolution against the
+        tracker compressor's own contraction factor."""
+        if self.tracker_gamma_spec is not None:
+            return float(self.tracker_gamma_spec)
+        if self.tracker_compressor is None:
+            return gamma
+        comp = self.tracker_compressor
+        delta = getattr(comp, "delta", 1.0)
+        if hasattr(comp, "delta_for"):
+            delta = comp.delta_for(max(int(d), 1))
+        return 0.5 * max(delta, 1e-3)
 
     def init(self, theta_stacked):
         base = super().init(theta_stacked)
@@ -863,11 +894,9 @@ class GradientTrackingConsensus(ChocoConsensus):
                 "pre-local-update theta) to form the local displacement — "
                 "the trainer threads it; standalone callers must pass it"
             )
-        gamma = self._resolve_gamma(self._encode_dim(theta_half))
-        tgamma = (
-            gamma if self.tracker_gamma_spec is None
-            else float(self.tracker_gamma_spec)
-        )
+        d = self._encode_dim(theta_half)
+        gamma = self._resolve_gamma(d)
+        tgamma = self._resolve_tracker_gamma(gamma, d)
         f32 = jnp.float32
 
         def upd(h, p, y, dp):
@@ -894,7 +923,7 @@ class GradientTrackingConsensus(ChocoConsensus):
         (x_new, y_new), (model_new, tracker_new) = choco_round_lanes(
             (
                 LaneRound(x_half, state.model, gamma, self.compressor),
-                LaneRound(y_half, state.tracker, tgamma, self.compressor),
+                LaneRound(y_half, state.tracker, tgamma, self._tracker_comp),
             ),
             self.topology, key, packed=self.packed, fused=self.fused,
             mixing=mixing, mask=mask, backend=self.backend, mesh=self.mesh,
@@ -911,17 +940,45 @@ class GradientTrackingConsensus(ChocoConsensus):
         if not self.tracker:
             return base
         kind = base.lanes[0].kind
+        tkind = kind
+        if self.tracker_compressor is not None:
+            tkind = (wire.DENSE.lanes[0].kind
+                     if isinstance(self.tracker_compressor, Identity)
+                     or not self.packed else kind)
         return wire.WireFormat(
-            (wire.Lane(kind, "model"), wire.Lane(kind, "tracker"))
+            (wire.Lane(kind, "model"), wire.Lane(tkind, "tracker"))
         )
 
     def bits_per_round(self, theta_template, *, mode: str = "max",
-                       step=None, mask=None) -> float:
+                       step=None, mask=None, compressor=None) -> float:
+        if compressor is not None:  # a single lane priced explicitly
+            return super().bits_per_round(
+                theta_template, mode=mode, step=step, mask=mask,
+                compressor=compressor,
+            )
         return sum(
             self.bits_per_lane(
                 theta_template, mode=mode, step=step, mask=mask
             ).values()
         )
+
+    def bits_per_lane(self, theta_template, *, mode: str = "max",
+                      step=None, mask=None) -> dict:
+        """Per-lane busiest-node bits, each lane priced at its OWN
+        compressor (the tracker lane may be coarser, see
+        ``tracker_compressor``)."""
+        if not self.tracker:
+            return super().bits_per_lane(
+                theta_template, mode=mode, step=step, mask=mask
+            )
+        comps = {"model": self.compressor, "tracker": self._tracker_comp}
+        return {
+            lane.name: super(GradientTrackingConsensus, self).bits_per_round(
+                theta_template, mode=mode, step=step, mask=mask,
+                compressor=comps[lane.name],
+            )
+            for lane in self.wire_format
+        }
 
     def bits_realized(self, theta_template, step, mask, consensus_state=None):
         if not self.tracker:
@@ -932,7 +989,14 @@ class GradientTrackingConsensus(ChocoConsensus):
             meter = _fault_bits_meter(consensus_state)
             if meter is not None:
                 return meter.max()
-        return 2.0 * super().bits_realized(theta_template, step, mask)
+        scale = 2.0
+        if self.tracker_compressor is not None:
+            model_total = payload_total_bits(self.compressor, theta_template)
+            scale = 1.0 + (
+                payload_total_bits(self.tracker_compressor, theta_template)
+                / model_total if model_total else 1.0
+            )
+        return scale * super().bits_realized(theta_template, step, mask)
 
 
 class ExactConsensus(Consensus):

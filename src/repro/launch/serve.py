@@ -75,12 +75,15 @@ def _run_fleet(args, cfg, params) -> None:
         num_nodes=args.fleet, rate=args.rate, vocab_size=cfg.vocab_size,
         prompt_min=4, prompt_max=prompt_max,
         output_min=1, output_max=args.gen, seed=args.seed,
+        prompt_mode={"iid": "iid", "zipf": "pool", "unique": "unique"}[args.prompts],
+        prompt_pool=args.prompt_pool,
     ))
     nodes = [
         FleetNode(
             i,
             ServeEngine(cfg, params, max_slots=args.slots, cache_len=cache_len,
-                        prompt_bucket=bucket),
+                        prompt_bucket=bucket, fastpath=not args.no_fastpath,
+                        prefix_cache=args.prefix_cache),
             admission=AdmissionControl(max_queue=args.max_queue,
                                        policy=args.admission),
             reloader=(HotReloader(args.restore, params) if args.follow else None),
@@ -107,6 +110,8 @@ def _run_fleet(args, cfg, params) -> None:
     print(f"queue depth mean/max = {f['mean_queue_depth']:.2f}/"
           f"{f['max_queue_depth']:.0f}  slot occupancy = {f['slot_occupancy']:.2f}"
           + (f"  reloads = {reloads}" if args.follow else ""))
+    print(f"cache_hit_rate = {f['cache_hit_rate']:.3f}  "
+          f"prefill_skipped = {f['prefill_skipped']:.0f}")
     if args.metrics_out:
         payload = {
             "arch": cfg.name,
@@ -166,6 +171,20 @@ def main() -> None:
                             "checkpoint (train-and-serve)")
     fleet.add_argument("--reload-every", type=int, default=16,
                        help="poll cadence in engine ticks for --follow")
+    fleet.add_argument("--prompts", choices=("iid", "zipf", "unique"),
+                       default="iid",
+                       help="prompt repetition structure: iid (historical "
+                            "stream), zipf (hot pool of --prompt-pool prompts "
+                            "-- the prefix-cache workload), unique (provably "
+                            "distinct prompts, zero-hit-rate control)")
+    fleet.add_argument("--prompt-pool", type=int, default=64,
+                       help="pool size for --prompts zipf")
+    fleet.add_argument("--prefix-cache", type=int, default=64,
+                       help="prefix KV cache entries per engine (0 disables)")
+    fleet.add_argument("--no-fastpath", action="store_true",
+                       help="serve with the legacy engine (no prefix cache, "
+                            "batch-1 prefill, full-pool decode) -- tick "
+                            "metrics are bit-identical, only wall differs")
     args = ap.parse_args()
 
     if args.follow and not (args.fleet and args.restore):

@@ -51,6 +51,7 @@ def make_trainer(
     local_steps: int = 1,
     consensus: str = "choco",
     tracker_gamma: float | None = None,
+    tracker_compressor: str | None = None,
     optimizer: str = "sgd",
     schedule: str = "exp",
     lr_decay: float = 1.0,
@@ -85,6 +86,7 @@ def make_trainer(
         local_steps=local_steps,
         consensus=consensus,
         tracker_gamma=tracker_gamma,
+        tracker_compressor=tracker_compressor,
         optimizer=optimizer,
         schedule=schedule,
         lr_decay=lr_decay,

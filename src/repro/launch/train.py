@@ -83,6 +83,10 @@ def main() -> None:
                          "rides lane 2 of the same wire round, cancelling the "
                          "client drift large --local-steps induce under "
                          "heterogeneous data (2x per-round bits)")
+    ap.add_argument("--tracker-compressor", default=None,
+                    help="compression level for the gt tracker lane only "
+                         "(e.g. kq2b beside a kq4b model lane); default "
+                         "reuses --compressor on both lanes")
     ap.add_argument("--tracker-gamma", type=float, default=None,
                     help="consensus step size for the gt tracker lane "
                          "(default: same resolution as the model lane)")
@@ -147,6 +151,7 @@ def main() -> None:
         local_steps=args.local_steps,
         consensus=args.consensus,
         tracker_gamma=args.tracker_gamma,
+        tracker_compressor=args.tracker_compressor,
         fused_gossip=args.fused_gossip,
         gossip_backend=args.gossip_backend,
         mesh=mesh,

@@ -1,6 +1,7 @@
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.fleet import (
     AdmissionControl,
+    BatchedProbe,
     ClassifierEngine,
     EvalRequest,
     FleetNode,
@@ -14,6 +15,7 @@ __all__ = [
     "Request",
     "ServeEngine",
     "AdmissionControl",
+    "BatchedProbe",
     "ClassifierEngine",
     "EvalRequest",
     "FleetNode",

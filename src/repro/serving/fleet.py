@@ -38,9 +38,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,6 +52,7 @@ __all__ = [
     "AdmissionControl",
     "HotReloader",
     "ClassifierEngine",
+    "BatchedProbe",
     "EvalRequest",
     "FleetNode",
     "ServingFleet",
@@ -184,6 +186,30 @@ class ClassifierEngine:
         self._ids = 0
         self.tokens_generated = 0  # one "token" = one prediction
         self.last_busy = 0  # slots used this tick (requests retire in-tick)
+        self._jit_apply = None  # padded-batch jitted forward (one trace)
+
+    def _forward(self, x: np.ndarray) -> np.ndarray:
+        """argmax predictions for a [B, d] feature batch.
+
+        Batches up to ``max_slots`` rows run through one jitted
+        fixed-shape forward (rows padded with zeros, argmax is
+        row-independent so predictions are bit-identical to the eager
+        variable-shape call); oversized batches fall back to the eager
+        path rather than compiling per shape.
+        """
+        total = x.shape[0]
+        if total <= self.max_slots:
+            if self._jit_apply is None:
+                self._jit_apply = jax.jit(self.apply_fn)
+            xp = np.zeros((self.max_slots,) + x.shape[1:], x.dtype)
+            xp[:total] = x
+            preds = np.asarray(jnp.argmax(
+                self._jit_apply(self.params, jnp.asarray(xp)), axis=-1
+            ))
+            return preds[:total]
+        return np.asarray(jnp.argmax(
+            self.apply_fn(self.params, jnp.asarray(x)), axis=-1
+        ))
 
     def submit(self, req: EvalRequest) -> int:
         req.rid = self._ids
@@ -202,7 +228,7 @@ class ClassifierEngine:
         if batch:
             x = np.concatenate([np.atleast_2d(r.features) for r in batch], axis=0)
             sizes = [np.atleast_2d(r.features).shape[0] for r in batch]
-            preds = np.asarray(jnp.argmax(self.apply_fn(self.params, jnp.asarray(x)), axis=-1))
+            preds = self._forward(x)
             off = 0
             now = time.time()
             for r, k in zip(batch, sizes):
@@ -218,6 +244,70 @@ class ClassifierEngine:
         self._steps += 1
 
 
+# -------------------------------------------------------------- batched probe
+class BatchedProbe:
+    """Shared quality probe: ONE vmapped/jitted forward over the concatenated
+    eval set per checkpoint, memoized per step — instead of one eager
+    forward per node per reload.
+
+    Nodes of the same population share the result verbatim: hand each node
+    ``probe.quality_fn(name)`` as its FleetNode ``quality_fn``.  The closure
+    advertises ``accepts_step`` so FleetNode passes the checkpoint step,
+    which keys the memo (per-node HotReloaders restore separate-but-equal
+    trees, so object identity cannot).  ``probe_forwards`` counts actual
+    device forwards — the batching claim's testable surface.
+    """
+
+    def __init__(self, apply_fn, populations: dict, *, loss_fn=None,
+                 memo_size: int = 8):
+        # populations: name -> (x, y) eval arrays
+        self.names = sorted(populations)
+        self._pop = {
+            n: (jnp.asarray(populations[n][0]), np.asarray(populations[n][1]))
+            for n in self.names
+        }
+        self._x = jnp.concatenate([self._pop[n][0] for n in self.names], axis=0)
+        self._sizes = [int(self._pop[n][0].shape[0]) for n in self.names]
+        self._jit_apply = jax.jit(apply_fn)
+        self._loss = jax.jit(loss_fn) if loss_fn is not None else None
+        self._memo: OrderedDict = OrderedDict()
+        self._memo_size = memo_size
+        self.probe_forwards = 0
+
+    def _evaluate(self, params) -> dict:
+        logits = self._jit_apply(params, self._x)
+        preds = np.asarray(jnp.argmax(logits, axis=-1))
+        self.probe_forwards += 1
+        out, off = {}, 0
+        for name, size in zip(self.names, self._sizes):
+            x, y = self._pop[name]
+            pred = preds[off:off + size]
+            off += size
+            q = {"acc": float((pred == y).mean())}
+            if self._loss is not None:
+                q["loss"] = float(self._loss(params, (x, jnp.asarray(y)), None))
+            out[name] = q
+        return out
+
+    def probe(self, params, step=None) -> dict:
+        """All populations' quality dicts for one checkpoint (memoized)."""
+        key = step if step is not None else ("obj", id(params))
+        if key not in self._memo:
+            self._memo[key] = self._evaluate(params)
+            while len(self._memo) > self._memo_size:
+                self._memo.popitem(last=False)
+        else:
+            self._memo.move_to_end(key)
+        return self._memo[key]
+
+    def quality_fn(self, name: str):
+        def quality(params, step=None):
+            return dict(self.probe(params, step=step)[name])
+
+        quality.accepts_step = True
+        return quality
+
+
 # ----------------------------------------------------------------- the fleet
 class FleetNode:
     """One node: engine + admission + (optional) hot reload + quality probe.
@@ -225,26 +315,56 @@ class FleetNode:
     ``quality_fn(params) -> dict`` is evaluated against the node's *local*
     distribution on every successful reload (and once at start), building
     the per-node serving-quality timeline the train-and-serve benchmark
-    gates on.
+    gates on (a :class:`BatchedProbe` closure additionally receives the
+    checkpoint step so equal-step probes are shared across nodes).
+
+    ``retain="all"`` (default) keeps every Request object in
+    ``self.requests``; ``retain="stats"`` streams terminal requests into a
+    compact :class:`~repro.serving.metrics.RequestStats` accumulator each
+    tick — identical summaries (exact pooled percentiles), bounded memory,
+    the mode the 10^6-request suite-S scale run uses.
     """
 
     def __init__(self, node_id: int, engine, *, admission: AdmissionControl | None = None,
-                 reloader: HotReloader | None = None, quality_fn=None):
+                 reloader: HotReloader | None = None, quality_fn=None,
+                 retain: str = "all"):
+        if retain not in ("all", "stats"):
+            raise ValueError(f"unknown retain mode {retain!r}")
         self.node_id = node_id
         self.engine = engine
         self.admission = admission or AdmissionControl(max_queue=8)
         self.reloader = reloader
         self.quality_fn = quality_fn
-        self.requests: list = []  # every request ever offered (any status)
+        self.retain = retain
+        self.requests: list = []  # all offered (retain="all") or in-flight
+        self.stats = M.RequestStats() if retain == "stats" else None
         self.queue_samples: list[int] = []
         self.occupancy_samples: list[int] = []
         self.quality_timeline: list[tuple[int | None, dict]] = []
         if quality_fn is not None:
-            self.quality_timeline.append((None, quality_fn(engine.params)))
+            self.quality_timeline.append((None, self._probe(engine.params, None)))
+
+    def _probe(self, params, step):
+        if getattr(self.quality_fn, "accepts_step", False):
+            return self.quality_fn(params, step=step)
+        return self.quality_fn(params)
 
     def offer(self, req, *, tick: int) -> str:
         self.requests.append(req)
         return self.admission.offer(self.engine, req, tick=tick)
+
+    def _harvest(self) -> None:
+        """retain="stats": fold terminal requests into the accumulator and
+        drop them; ``self.requests`` stays the bounded in-flight set."""
+        if self.stats is None:
+            return
+        keep = []
+        for r in self.requests:
+            if r.status in ("done", "rejected", "shed"):
+                self.stats.add(r)
+            else:
+                keep.append(r)
+        self.requests = keep
 
     def tick(self) -> None:
         self.engine.step()
@@ -254,6 +374,7 @@ class FleetNode:
         self.occupancy_samples.append(
             getattr(self.engine, "last_busy", 0) or len(self.engine.active)
         )
+        self._harvest()
 
     def maybe_reload(self) -> int | None:
         """Poll for newer consensus weights; swap + probe quality if found.
@@ -270,21 +391,34 @@ class FleetNode:
         params, step = got
         self.engine.params = params
         if self.quality_fn is not None:
-            self.quality_timeline.append((step, self.quality_fn(params)))
+            self.quality_timeline.append((step, self._probe(params, step)))
         return step
 
     @property
     def drained(self) -> bool:
         return not (self.engine.pending or self.engine.active)
 
+    def request_stats(self) -> M.RequestStats:
+        """This node's requests as a RequestStats accumulator (both retain
+        modes; in-flight requests count toward ``requests`` only, exactly
+        like non-terminal objects in the list-based path)."""
+        self._harvest()
+        parts = [self.stats] if self.stats is not None else []
+        s = M.RequestStats.merged(parts)
+        for r in self.requests:
+            s.add(r)
+        return s
+
     def summary(self, wall_seconds: float) -> dict:
         return M.summarize_node(
-            self.requests,
+            self.request_stats() if self.stats is not None else self.requests,
             queue_samples=self.queue_samples,
             occupancy_samples=self.occupancy_samples,
             max_slots=self.engine.max_slots,
             wall_seconds=wall_seconds,
             tokens_generated=self.engine.tokens_generated,
+            engine_stats=(self.engine.stats() if hasattr(self.engine, "stats")
+                          else None),
         )
 
 
@@ -309,10 +443,13 @@ class ServingFleet:
     ``max_ticks`` elapses.
     """
 
-    def __init__(self, nodes: list[FleetNode], loadgen=None, *, reload_every: int = 0):
+    def __init__(self, nodes: list[FleetNode], loadgen=None, *, reload_every: int = 0,
+                 progress_every: int = 0, log: Callable[[str], None] = print):
         self.nodes = nodes
         self.loadgen = loadgen
         self.reload_every = reload_every
+        self.progress_every = progress_every
+        self.log = log
         self.ticks = 0
         self.offered = 0
 
@@ -334,18 +471,27 @@ class ServingFleet:
             for node in self.nodes:
                 node.tick()
             self.ticks += 1
+            if self.progress_every and self.ticks % self.progress_every == 0:
+                self.log(
+                    f"fleet: tick {self.ticks}, offered {self.offered}"
+                    f"{'' if max_requests is None else f'/{max_requests}'}, "
+                    f"{time.time() - t0:.1f}s elapsed"
+                )
             if not feeding and (not drain or all(n.drained for n in self.nodes)):
                 break
         return self.report(time.time() - t0)
 
     def report(self, wall_seconds: float) -> FleetReport:
         summaries = [n.summary(wall_seconds) for n in self.nodes]
-        all_requests = [r for n in self.nodes for r in n.requests]
+        # pooled-percentile roll-up via RequestStats: identical to pooling
+        # the raw request lists, and the only representation retain="stats"
+        # nodes still have
+        pooled = M.RequestStats.merged([n.request_stats() for n in self.nodes])
         return FleetReport(
             ticks=self.ticks,
             wall_seconds=wall_seconds,
             offered=self.offered,
             node_summaries=summaries,
-            fleet=M.summarize_fleet(summaries, all_requests),
+            fleet=M.summarize_fleet(summaries, pooled),
             quality=[n.quality_timeline for n in self.nodes],
         )

@@ -12,7 +12,15 @@ populations, at up to ~10^6 simulated requests:
   wedge a slot);
 * **node-skewed prompt tokens**: the same Zipf unigram marginal under a
   node-specific vocabulary permutation — the serving-side mirror of
-  ``repro.data.node_token_stream``'s training heterogeneity.
+  ``repro.data.node_token_stream``'s training heterogeneity;
+* **three prompt modes** (``prompt_mode``): ``"iid"`` (default, the
+  historical stream bit-identically — every prompt token drawn i.i.d., so
+  whole-prompt repeats are vanishingly rare), ``"pool"`` (requests draw a
+  Zipf-popularity rank into a per-node pool of ``prompt_pool`` fixed
+  prompts — the hot-prompt workload the serving prefix cache converts into
+  throughput), and ``"unique"`` (the i.i.d. draw with the request index
+  stamped into the leading tokens, so every prompt is guaranteed distinct —
+  the zero-hit-rate control row of suite S).
 
 Every draw for request ``i`` of node ``n`` comes from a *counter-based* RNG
 keyed by ``(seed, n, i)`` (`np.random.SeedSequence`), so the stream is a
@@ -54,6 +62,17 @@ class LoadGenConfig:
     output_max: int = 8
     token_zipf: float = 1.2
     seed: int = 0
+    # prompt repetition structure (see module docstring): "iid" keeps the
+    # historical stream bit-identically; "pool" draws from prompt_pool
+    # fixed per-node prompts with Zipf(prompt_pool_zipf) popularity;
+    # "unique" makes every prompt provably distinct
+    prompt_mode: str = "iid"
+    prompt_pool: int = 512
+    prompt_pool_zipf: float = 1.1
+
+    def __post_init__(self):
+        if self.prompt_mode not in ("iid", "pool", "unique"):
+            raise ValueError(f"unknown prompt_mode {self.prompt_mode!r}")
 
     def rate_for(self, node: int) -> float:
         r = self.rate
@@ -87,6 +106,7 @@ class LoadGenerator:
 
     def __init__(self, cfg: LoadGenConfig, payload=None):
         self.cfg = cfg
+        self._default_payload = payload is None
         self._payload = payload or self._lm_request
         m = cfg.num_nodes
         self._next_index = np.zeros(m, np.int64)   # request counter per node
@@ -100,6 +120,11 @@ class LoadGenerator:
         self._token_cdf = np.cumsum(
             bounded_zipf_probs(cfg.token_zipf, 0, cfg.vocab_size - 1)
         )
+        # prompt-pool popularity (mode="pool"): rank 0 is the hottest prompt
+        self._pool_cdf = np.cumsum(
+            bounded_zipf_probs(cfg.prompt_pool_zipf, 0, cfg.prompt_pool - 1)
+        )
+        self._pool_cache: dict[tuple[int, int], np.ndarray] = {}
         # node-specific vocab permutation (namespaced so it can never collide
         # with a per-request (seed, 3, node, i) key)
         self._perms = [
@@ -134,12 +159,44 @@ class LoadGenerator:
         toks = self._perms[node][np.minimum(base, self.cfg.vocab_size - 1)]
         return Request(prompt=toks.astype(int).tolist(), max_new_tokens=max_new)
 
+    def _pool_prompt(self, node: int, rank: int) -> np.ndarray:
+        """Pool prompt ``rank`` of ``node``: a pure function of the config
+        (its own ``(seed, 4, node, rank)`` lane), memoized for speed."""
+        key = (node, int(rank))
+        if key not in self._pool_cache:
+            rng = np.random.default_rng(
+                np.random.SeedSequence((self.cfg.seed, 4, node, int(rank)))
+            )
+            plen = self._bounded_zipf(rng, self._prompt_cdf, self.cfg.prompt_min)
+            u = rng.random(plen)
+            base = np.searchsorted(self._token_cdf, u, side="right")
+            self._pool_cache[key] = self._perms[node][
+                np.minimum(base, self.cfg.vocab_size - 1)
+            ]
+        return self._pool_cache[key]
+
     def request(self, node: int, i: int):
         """Materialize request ``i`` of ``node`` (pure function of config)."""
         rng = self._rng(node, i)
+        if self.cfg.prompt_mode == "pool":
+            rank = self._bounded_zipf(rng, self._pool_cdf, 0)
+            prompt = self._pool_prompt(node, rank)
+            max_new = self._bounded_zipf(rng, self._output_cdf, self.cfg.output_min)
+            if self._default_payload:
+                return Request(prompt=prompt.astype(int).tolist(),
+                               max_new_tokens=max_new)
+            return self._payload(node, rng, len(prompt), max_new)
         plen = self._bounded_zipf(rng, self._prompt_cdf, self.cfg.prompt_min)
         max_new = self._bounded_zipf(rng, self._output_cdf, self.cfg.output_min)
-        return self._payload(node, rng, plen, max_new)
+        req = self._payload(node, rng, plen, max_new)
+        if self.cfg.prompt_mode == "unique" and self._default_payload:
+            # stamp the request index into the leading tokens: prompts are
+            # provably distinct for i < vocab_size^min(3, plen) per node —
+            # the guaranteed-zero-hit-rate control of suite S
+            v = self.cfg.vocab_size
+            for p in range(min(3, plen)):
+                req.prompt[p] = (i // v ** p) % v
+        return req
 
     # ------------------------------------------------------------- streaming
     def poll(self, until_tick: float) -> list[tuple[int, object]]:

@@ -20,7 +20,18 @@ the printed benchmark table, ``benchmarks/check_regression.py --suite S``,
 * ``requests`` / ``completed`` / ``rejected`` / ``shed`` — admission
   accounting (``rejected``: refused at arrival by the bounded queue;
   ``shed``: evicted from the queue to make room under the shed-oldest
-  policy).
+  policy);
+* ``cache_hit_rate`` — fraction of prefix-cache lookups that hit (0.0 when
+  the engine has no prefix cache or it is bypassed — recurrent/windowed
+  archs); ``prefill_skipped`` — absolute count of prefill forwards the
+  prefix cache avoided.  Both are wall-clock levers only: hits emit the
+  bit-identical tokens a prefill would, so tick metrics never move.
+
+Latency stats accept either a list of Request-like objects or a
+:class:`RequestStats` accumulator — the streaming form the fleet's
+``retain="stats"`` mode uses so a 10^6-request run does not hold every
+Request alive.  ``RequestStats`` keeps the raw TTFT samples (ints/floats,
+cheap) so percentiles stay exact, not approximated.
 
 The **SLO** suite S gates is stated on these keys: below the measured
 latency knee, ``rejected == 0`` and ``p99_ttft_ticks`` stays within a fixed
@@ -32,6 +43,7 @@ import numpy as np
 
 __all__ = [
     "LATENCY_KEYS",
+    "RequestStats",
     "percentiles",
     "summarize_requests",
     "summarize_node",
@@ -54,7 +66,58 @@ LATENCY_KEYS = (
     "mean_queue_depth",
     "max_queue_depth",
     "slot_occupancy",
+    "cache_hit_rate",
+    "prefill_skipped",
 )
+
+
+class RequestStats:
+    """Streaming accumulator over terminal requests (done/rejected/shed).
+
+    Holds the per-request TTFT samples (exact percentiles) plus counters —
+    a few machine words per request instead of a live Request object, so
+    the fleet's ``retain="stats"`` mode scales to 10^6+ requests.  Merging
+    accumulators concatenates the samples, so fleet-wide percentiles are
+    pooled over every node's requests exactly like the list-based path.
+    """
+
+    __slots__ = ("requests", "completed", "rejected", "shed", "tokens",
+                 "ttft_ticks", "ttft_ms")
+
+    def __init__(self):
+        self.requests = 0
+        self.completed = 0
+        self.rejected = 0
+        self.shed = 0
+        self.tokens = 0
+        self.ttft_ticks: list[int] = []
+        self.ttft_ms: list[float] = []
+
+    def add(self, r) -> None:
+        """Absorb a TERMINAL request (caller checks the status)."""
+        self.requests += 1
+        if r.status == "done":
+            self.completed += 1
+            self.tokens += len(r.output)
+            self.ttft_ticks.append(r.ttft_ticks)
+            self.ttft_ms.append((r.first_wall - r.submit_wall) * 1e3)
+        elif r.status == "rejected":
+            self.rejected += 1
+        elif r.status == "shed":
+            self.shed += 1
+
+    @classmethod
+    def merged(cls, parts) -> "RequestStats":
+        out = cls()
+        for p in parts:
+            out.requests += p.requests
+            out.completed += p.completed
+            out.rejected += p.rejected
+            out.shed += p.shed
+            out.tokens += p.tokens
+            out.ttft_ticks.extend(p.ttft_ticks)
+            out.ttft_ms.extend(p.ttft_ms)
+        return out
 
 
 def percentiles(xs, qs=(50, 95, 99)) -> dict[float, float]:
@@ -68,27 +131,31 @@ def percentiles(xs, qs=(50, 95, 99)) -> dict[float, float]:
     return {q: float(np.percentile(xs, q, method="higher")) for q in qs}
 
 
+def _as_stats(requests) -> RequestStats:
+    if isinstance(requests, RequestStats):
+        return requests
+    s = RequestStats()
+    for r in requests:
+        s.add(r)
+    return s
+
+
 def summarize_requests(requests) -> dict:
-    """Latency stats over a set of Request-like objects (done/rejected/shed).
+    """Latency stats over Request-like objects OR a RequestStats accumulator.
 
     Only the queue/engine timestamps stamped by the engine and admission
     layer are read (duck-typed: the LM ``ServeEngine`` and the classifier
     engine both qualify).
     """
-    done = [r for r in requests if r.status == "done"]
-    rejected = sum(r.status == "rejected" for r in requests)
-    shed = sum(r.status == "shed" for r in requests)
-    ttft_ticks = [r.ttft_ticks for r in done]
-    ttft_ms = [(r.first_wall - r.submit_wall) * 1e3 for r in done]
-    p_t = percentiles(ttft_ticks)
-    p_w = percentiles(ttft_ms, (50, 99))
-    tokens = sum(len(r.output) for r in done)
+    s = _as_stats(requests)
+    p_t = percentiles(s.ttft_ticks)
+    p_w = percentiles(s.ttft_ms, (50, 99))
     return {
-        "requests": len(requests),
-        "completed": len(done),
-        "rejected": int(rejected),
-        "shed": int(shed),
-        "tokens": tokens,
+        "requests": s.requests,
+        "completed": s.completed,
+        "rejected": s.rejected,
+        "shed": s.shed,
+        "tokens": s.tokens,
         "p50_ttft_ticks": p_t[50],
         "p95_ttft_ticks": p_t[95],
         "p99_ttft_ticks": p_t[99],
@@ -98,8 +165,9 @@ def summarize_requests(requests) -> dict:
 
 
 def summarize_node(requests, *, queue_samples, occupancy_samples, max_slots,
-                   wall_seconds, tokens_generated) -> dict:
-    """Per-node roll-up: request latency stats + queue/slot telemetry."""
+                   wall_seconds, tokens_generated, engine_stats=None) -> dict:
+    """Per-node roll-up: request latency stats + queue/slot telemetry (+
+    the engine's fast-path counters when it exposes ``stats()``)."""
     out = summarize_requests(requests)
     q = np.asarray(queue_samples, np.float64)
     occ = np.asarray(occupancy_samples, np.float64)
@@ -110,21 +178,34 @@ def summarize_node(requests, *, queue_samples, occupancy_samples, max_slots,
         "per_token_ms": (wall_seconds * 1e3 / tokens_generated) if tokens_generated else 0.0,
         "tok_per_s": (tokens_generated / wall_seconds) if wall_seconds > 0 else 0.0,
     })
+    es = engine_stats or {}
+    out.update({
+        "cache_hit_rate": float(es.get("cache_hit_rate", 0.0)),
+        "prefill_skipped": float(es.get("prefill_skipped", 0.0)),
+        # raw lookup counts so the fleet roll-up can pool hit rates exactly
+        "prefix_hits": float(es.get("prefix_hits", 0.0)),
+        "prefix_misses": float(es.get("prefix_misses", 0.0)),
+    })
     return out
 
 
 def summarize_fleet(node_summaries: list[dict], all_requests) -> dict:
     """Fleet-wide roll-up: percentiles pooled over every node's requests
     (NOT a mean of per-node percentiles), throughput and admission totals
-    summed, queue/occupancy averaged."""
+    summed, queue/occupancy averaged, cache hit rate pooled over lookups."""
     out = summarize_requests(all_requests)
     if not node_summaries:
         return out
+    hits = float(np.sum([n.get("prefix_hits", 0.0) for n in node_summaries]))
+    lookups = hits + float(np.sum([n.get("prefix_misses", 0.0) for n in node_summaries]))
     out.update({
         "per_token_ms": float(np.mean([n["per_token_ms"] for n in node_summaries])),
         "tok_per_s": float(np.sum([n["tok_per_s"] for n in node_summaries])),
         "mean_queue_depth": float(np.mean([n["mean_queue_depth"] for n in node_summaries])),
         "max_queue_depth": float(np.max([n["max_queue_depth"] for n in node_summaries])),
         "slot_occupancy": float(np.mean([n["slot_occupancy"] for n in node_summaries])),
+        "cache_hit_rate": (hits / lookups) if lookups else 0.0,
+        "prefill_skipped": float(np.sum([n.get("prefill_skipped", 0.0)
+                                         for n in node_summaries])),
     })
     return out

@@ -199,3 +199,92 @@ def test_metrics_ttft_is_queue_wait():
     for _ in range(6):
         node.tick()
     assert [r.ttft_ticks for r in reqs] == [0, 1, 2, 3, 4]
+
+
+# ------------------------------------------------------------- batched probe
+def test_batched_probe_matches_per_population_eval():
+    """ONE concatenated forward must reproduce the per-population accuracies
+    an eager per-node probe would compute."""
+    from repro.serving import BatchedProbe
+
+    rng = np.random.default_rng(0)
+    params = _params(scale=2.0)
+    pops = {}
+    for name in ("a", "b", "c"):
+        y = rng.integers(0, 3, 17)
+        x = np.zeros((17, 4), np.float32)
+        x[np.arange(17), y] = 1.0
+        x += rng.normal(size=x.shape).astype(np.float32) * 0.3
+        pops[name] = (x, y)
+    probe = BatchedProbe(_apply, pops)
+    got = probe.probe(params, step=0)
+    for name, (x, y) in pops.items():
+        ref = float((np.argmax(_apply(params, x), axis=-1) == y).mean())
+        assert got[name]["acc"] == pytest.approx(ref)
+    fn = probe.quality_fn("b")
+    assert fn.accepts_step
+    assert fn(params, step=0) == got["b"]
+
+
+def test_batched_probe_memoizes_per_step():
+    """N nodes probing the same checkpoint step share ONE device forward;
+    a new step (even with an equal-valued tree) re-evaluates."""
+    from repro.serving import BatchedProbe
+
+    rng = np.random.default_rng(1)
+    y = rng.integers(0, 3, 9)
+    x = rng.normal(size=(9, 4)).astype(np.float32)
+    probe = BatchedProbe(_apply, {"a": (x, y), "b": (x, y)})
+    p1, p2 = _params(), _params()  # separate-but-equal trees (hot reload)
+    fa, fb = probe.quality_fn("a"), probe.quality_fn("b")
+    fa(p1, step=10)
+    fb(p2, step=10)  # different object, same step -> memo hit
+    assert probe.probe_forwards == 1
+    fa(p1, step=20)
+    assert probe.probe_forwards == 2
+    fb(_params(scale=3.0), step=20)  # stale tree, same step: still shared
+    assert probe.probe_forwards == 2
+
+
+# ------------------------------------------------------------- retain="stats"
+def test_retain_stats_summary_matches_retain_all():
+    """retain="stats" streams requests into an accumulator; every gateable
+    (tick-denominated) field and count must equal the list-based path."""
+    reports = {}
+    for retain in ("all", "stats"):
+        gen = LoadGenerator(
+            LoadGenConfig(num_nodes=2, rate=1.5, vocab_size=16, seed=3),
+            payload=_eval_payload(),
+        )
+        nodes = [
+            FleetNode(
+                i,
+                ClassifierEngine(_apply, _params(), max_slots=2),
+                admission=AdmissionControl(max_queue=2, policy="reject"),
+                retain=retain,
+            )
+            for i in range(2)
+        ]
+        reports[retain] = ServingFleet(nodes, gen).run(max_requests=120, max_ticks=4000)
+    a, s = reports["all"], reports["stats"]
+    assert a.offered == s.offered and a.ticks == s.ticks
+    for key in ("requests", "completed", "rejected", "shed", "tokens",
+                "p50_ttft_ticks", "p95_ttft_ticks", "p99_ttft_ticks",
+                "mean_queue_depth", "max_queue_depth", "slot_occupancy"):
+        assert a.fleet[key] == s.fleet[key], key
+    assert s.fleet["requests"] == s.offered
+
+
+def test_retain_stats_bounds_live_requests():
+    """The accumulator path drops terminal Request objects every tick."""
+    gen = LoadGenerator(
+        LoadGenConfig(num_nodes=1, rate=1.0, vocab_size=16, seed=4),
+        payload=_eval_payload(),
+    )
+    node = FleetNode(0, ClassifierEngine(_apply, _params(), max_slots=2),
+                     admission=AdmissionControl(max_queue=4), retain="stats")
+    ServingFleet([node], gen).run(max_requests=100, max_ticks=4000)
+    assert node.stats.requests >= 100
+    assert len(node.requests) == 0  # drained: nothing in flight
+    with pytest.raises(ValueError):
+        FleetNode(0, ClassifierEngine(_apply, _params()), retain="bogus")

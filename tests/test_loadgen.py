@@ -137,3 +137,62 @@ def test_mean_request_tokens_matches_empirical():
     gen = LoadGenerator(cfg)
     outs = [gen.request(0, i).max_new_tokens for i in range(4000)]
     assert abs(np.mean(outs) - cfg.mean_request_tokens()) < 0.1
+
+
+def test_pool_mode_repeats_prompts_deterministically():
+    """mode="pool": prompts come from a small fixed per-node pool with Zipf
+    popularity — repeats are common (the prefix-cache workload) and the
+    stream stays a pure function of the config."""
+    cfg = _cfg(prompt_mode="pool", prompt_pool=16, rate=0.8)
+    a, b = LoadGenerator(cfg), LoadGenerator(cfg)
+    sa, sb = _stream(a, 400), _stream(b, 400)
+    assert sa == sb
+    assert len(sa) > 100
+    per_node_prompts = {}
+    for n, prompt, _ in sa:
+        per_node_prompts.setdefault(n, []).append(prompt)
+    for n, prompts in per_node_prompts.items():
+        distinct = len(set(prompts))
+        assert distinct <= 16  # never more prompts than the pool
+        assert distinct < len(prompts)  # repeats actually happen
+    # arrival statistics are untouched: same clock as the iid stream
+    iid = LoadGenerator(_cfg(rate=0.8))
+    iid_stream = _stream(iid, 400)
+    assert [n for n, *_ in sa] == [n for n, *_ in iid_stream]
+    assert np.array_equal(a._next_time, iid._next_time)
+
+
+def test_unique_mode_never_repeats_prompts():
+    """mode="unique": the request index is stamped into the leading tokens,
+    so every prompt is distinct — the zero-hit-rate control row."""
+    gen = LoadGenerator(_cfg(prompt_mode="unique", rate=0.8))
+    s = _stream(gen, 400)
+    assert len(s) > 100
+    per_node = {}
+    for n, prompt, _ in s:
+        per_node.setdefault(n, []).append(prompt)
+    for prompts in per_node.values():
+        assert len(set(prompts)) == len(prompts)
+
+
+def test_pool_mode_kill_resume_bit_parity(tmp_path):
+    """The resume cursor covers pool mode too (pool prompts are pure
+    functions of (seed, node, rank), nothing extra to checkpoint)."""
+    from repro.checkpoint import restore, save
+
+    cfg = _cfg(prompt_mode="pool", prompt_pool=8, rate=0.6)
+    ref = LoadGenerator(cfg)
+    full = _stream(ref, 200) + _stream(ref, 400)
+
+    gen = LoadGenerator(cfg)
+    head = _stream(gen, 200)
+    fname = save(str(tmp_path / "lg"), gen.state())
+    resumed = LoadGenerator(cfg)
+    resumed.restore(restore(fname, resumed.state()))
+    tail = _stream(resumed, 400)
+    assert head + tail == full
+
+
+def test_unknown_prompt_mode_rejected():
+    with pytest.raises(ValueError):
+        _cfg(prompt_mode="zipf")

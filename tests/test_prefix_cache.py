@@ -1,0 +1,123 @@
+"""Prefix KV cache contracts (serving fast path): hit-vs-miss bit-identical
+outputs, LRU eviction, invalidation on hot reload (the garbled-cache analog
+of the torn-checkpoint test — stale slices must never be served under new
+weights), and recurrent/windowed-arch bypass."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              long_context_window=None)
+    params = T.init_model(KEY, cfg)
+    return cfg, params
+
+
+def _serve(engine, prompt, n_new=4):
+    req = Request(prompt=list(prompt), max_new_tokens=n_new)
+    engine.run([req])
+    return req.output
+
+
+def test_prefix_hit_is_bit_identical(setup):
+    """The same prompt served twice: the second pass skips the prefill
+    (cache hit) and must emit the exact same tokens."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab_size, 7).tolist()
+    engine = ServeEngine(cfg, params, max_slots=2, cache_len=48, prompt_bucket=8)
+    first = _serve(engine, prompt)
+    assert engine.prefix_hits == 0 and engine.prefix_misses == 1
+    second = _serve(engine, prompt)
+    assert engine.prefix_hits == 1
+    assert engine.prefill_skipped == 1
+    assert second == first
+    # a different prompt in the same bucket is a miss, not a false hit
+    other = rng.integers(1, cfg.vocab_size, 7).tolist()
+    _serve(engine, other)
+    assert engine.prefix_hits == 1 and engine.prefix_misses == 2
+    assert engine.stats()["cache_hit_rate"] == pytest.approx(1 / 3)
+
+
+def test_prefix_lru_eviction(setup):
+    """The cache is bounded: the least-recently-used prompt is evicted and
+    must prefill again (counted), while a touched entry survives."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, 6).tolist() for _ in range(3)]
+    engine = ServeEngine(cfg, params, max_slots=1, cache_len=48,
+                         prompt_bucket=8, prefix_cache=2)
+    _serve(engine, prompts[0])
+    _serve(engine, prompts[1])
+    _serve(engine, prompts[0])       # touch 0: now 1 is the LRU entry
+    _serve(engine, prompts[2])       # evicts 1
+    assert engine.prefix_evictions == 1
+    hits = engine.prefix_hits
+    _serve(engine, prompts[1])       # miss: it was evicted ({0,2} -> evict 0)
+    assert engine.prefix_hits == hits
+    assert engine.prefix_evictions == 2
+    _serve(engine, prompts[1])       # immediate re-serve: now a hit
+    assert engine.prefix_hits == hits + 1
+
+
+def test_prefix_invalidated_on_hot_reload(setup):
+    """Reassigning engine.params (the fleet hot-reload hook) clears the
+    cache: post-reload generations must reflect the NEW weights, never a
+    stale slice computed under the old ones."""
+    cfg, params = setup
+    params2 = T.init_model(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(1, cfg.vocab_size, 9).tolist()
+
+    engine = ServeEngine(cfg, params, max_slots=1, cache_len=48, prompt_bucket=8)
+    old_out = _serve(engine, prompt)
+    assert engine.prefix_misses == 1
+
+    engine.params = params2  # hot reload
+    assert engine.prefix_invalidations == 1
+    assert engine.stats()["prefix_entries"] == 0.0
+    new_out = _serve(engine, prompt)
+    assert engine.prefix_misses == 2  # recomputed, not served stale
+
+    fresh = ServeEngine(cfg, params2, max_slots=1, cache_len=48, prompt_bucket=8)
+    assert new_out == _serve(fresh, prompt)
+    assert new_out != old_out  # different weights actually changed the tokens
+
+
+def test_prefix_bypassed_for_recurrent_arch():
+    """SSM states absorb every consumed token — a cached slice is
+    position-dependent, so the prefix cache must not even count lookups."""
+    cfg = dataclasses.replace(get_config("mamba2-1.3b").reduced(), ssm_chunk=8)
+    params = T.init_model(KEY, cfg)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab_size, 16).tolist()
+    engine = ServeEngine(cfg, params, max_slots=1, cache_len=64)
+    a = _serve(engine, prompt)
+    b = _serve(engine, prompt)
+    assert engine.prefix_hits == engine.prefix_misses == 0
+    assert engine.prefill_skipped == 0
+    assert a == b  # determinism comes from the model, not the cache
+
+
+def test_prefix_bypassed_for_windowed_arch():
+    """A wrapped sliding-window ring buffer attends every slot; the engine
+    prefills at exact length and must bypass the prefix cache."""
+    cfg = get_config("qwen3-1.7b").reduced()  # 16-token sliding window
+    params = T.init_model(KEY, cfg)
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(1, cfg.vocab_size, 7).tolist()
+    engine = ServeEngine(cfg, params, max_slots=1, cache_len=32, prompt_bucket=8)
+    assert engine._windowed
+    _serve(engine, prompt)
+    _serve(engine, prompt)
+    assert engine.prefix_hits == engine.prefix_misses == 0

@@ -141,23 +141,84 @@ def test_engine_eos_at_prefill_releases_slot_same_tick(dense_setup):
 
 
 def test_engine_prefill_retraces_bounded_by_buckets(nowindow_setup):
-    """The warm-cache claim, pinned: serving many prompt lengths retraces
-    the prefill once per BUCKET (not once per length) and the vmapped decode
-    exactly once, regardless of traffic mix."""
+    """The warm-cache claim, pinned: serving many prompt lengths compiles
+    the prefill once per BUCKET (not once per length) and the decode exactly
+    once, regardless of traffic mix — and a second engine over the same
+    shapes compiles NOTHING, because fast-path programs are process-shared."""
+    from repro.serving.engine import PROGRAMS
+
     cfg, params = nowindow_setup
+    PROGRAMS.clear()
     rng = np.random.default_rng(7)
     engine = ServeEngine(cfg, params, max_slots=2, cache_len=48, prompt_bucket=8)
     # lengths spanning exactly two buckets (<=8 and <=16), many of each
     for n in (3, 5, 7, 8, 11, 13, 16, 4, 9, 15):
         engine.run([Request(prompt=rng.integers(1, cfg.vocab_size, n).tolist(),
                             max_new_tokens=3)])
-    assert sorted(engine._prefills) == [8, 16]
     assert engine.prefill_traces == 2, engine.prefill_traces
     assert engine.decode_traces == 1, engine.decode_traces
     # a third bucket compiles exactly one more prefill, no decode retrace
     engine.run([Request(prompt=rng.integers(1, cfg.vocab_size, 20).tolist(),
                         max_new_tokens=3)])
     assert engine.prefill_traces == 3 and engine.decode_traces == 1
+    # shared program cache: a fresh engine with identical shapes is warm
+    twin = ServeEngine(cfg, params, max_slots=2, cache_len=48, prompt_bucket=8)
+    twin.run([Request(prompt=rng.integers(1, cfg.vocab_size, 6).tolist(),
+                      max_new_tokens=3)])
+    assert twin.prefill_traces == 0 and twin.decode_traces == 0
+
+
+def test_engine_fastpath_matches_legacy(nowindow_setup):
+    """fastpath=False restores the original per-request engine; the fast
+    path must agree token-for-token AND tick-for-tick (the suite-S bit-
+    identity gate in miniature)."""
+    cfg, params = nowindow_setup
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist()
+               for n in (5, 9, 5, 13, 7, 5, 9)]  # repeats -> prefix-cache hits
+    runs = {}
+    for fast in (True, False):
+        reqs = [Request(prompt=list(p), max_new_tokens=4) for p in prompts]
+        engine = ServeEngine(cfg, params, max_slots=2, cache_len=48,
+                             prompt_bucket=8, fastpath=fast)
+        engine.run(reqs)
+        runs[fast] = reqs
+    for fast_r, legacy_r in zip(runs[True], runs[False]):
+        assert fast_r.output == legacy_r.output
+        assert fast_r.admit_tick == legacy_r.admit_tick
+        assert fast_r.finish_tick == legacy_r.finish_tick
+
+
+def test_engine_batched_prefill_parity(nowindow_setup):
+    """Same-bucket requests admitted together run as ONE batched prefill;
+    every row must match the batch-1 sequential reference exactly."""
+    cfg, params = nowindow_setup
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist() for n in (4, 6, 7, 8)]
+    reqs = [Request(prompt=p, max_new_tokens=5) for p in prompts]
+    engine = ServeEngine(cfg, params, max_slots=4, cache_len=48, prompt_bucket=8)
+    before = engine.prefill_traces
+    engine.run(reqs)
+    # all four share the 8-bucket: exactly one prefill program was built
+    assert engine.prefill_traces - before <= 1
+    for p, r in zip(prompts, reqs):
+        ref = _sequential_generate(cfg, params, p, 5, cache_len=48)
+        assert r.output == ref, (r.output, ref)
+
+
+def test_engine_legacy_prefills_lru_bounded(dense_setup):
+    """Satellite: many distinct exact-length prefills (windowed arch) no
+    longer grow the per-engine jit cache without bound."""
+    cfg, params = dense_setup  # reduced qwen3: 16-token window -> exact lengths
+    rng = np.random.default_rng(10)
+    engine = ServeEngine(cfg, params, max_slots=1, cache_len=32,
+                         fastpath=False, max_prefill_programs=3)
+    for n in (4, 5, 6, 7, 8, 9):
+        engine.run([Request(prompt=rng.integers(1, cfg.vocab_size, n).tolist(),
+                            max_new_tokens=2)])
+    assert len(engine._prefills) == 3
+    assert engine.prefill_evictions == 3
+    assert engine.stats()["prefill_programs"] == 3.0
 
 
 def test_engine_recurrent_arch():

@@ -466,6 +466,65 @@ def test_gt_wire_format_and_bits_accounting():
         )
 
 
+def test_gt_tracker_compressor_none_matches_shared_compressor():
+    """An explicit tracker compressor equal to the model lane's (with default
+    gamma resolution) is bit-identical to the shared-compressor wire — the
+    tracker_compressor=None legacy path is the same arithmetic."""
+    from repro.core.compression import make_compressor
+    from repro.core.trainer import GradientTrackingConsensus
+
+    m = 8
+    ring = topology.ring(m)
+    comp = make_compressor("q4b")
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(1), (m, 40))}
+    key = jax.random.PRNGKey(5)
+    ga = GradientTrackingConsensus(ring, comp, None)
+    gb = GradientTrackingConsensus(ring, comp, None, tracker_compressor="q4b")
+    ta, sa = ga.mix(theta, ga.init(theta), key, None, theta_prev=theta)
+    tb, sb = gb.mix(theta, gb.init(theta), key, None, theta_prev=theta)
+    assert _worst((ta, sa.model.s, sa.tracker.s, sa.y),
+                  (tb, sb.model.s, sb.tracker.s, sb.y)) == 0.0
+    assert str(ga.wire_format) == str(gb.wire_format)
+
+
+def test_gt_tracker_compressor_coarser_lane_bills_fewer_bits():
+    """A q2b tracker beside a q4b model lane: the round runs, the tracker
+    lane is billed at ITS compressor's cost (bits_per_lane), and the
+    realized total scales by (1 + q2b/q4b) instead of 2x."""
+    from repro.core.compression import make_compressor
+    from repro.core.gossip import payload_total_bits
+    from repro.core.trainer import GradientTrackingConsensus
+
+    m = 8
+    ring = topology.ring(m)
+    comp = make_compressor("q4b")
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(2), (m, 64))}
+    gc = GradientTrackingConsensus(ring, comp, None, tracker_compressor="q2b")
+    t, s = gc.mix(theta, gc.init(theta), jax.random.PRNGKey(7), None,
+                  theta_prev=theta)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(t))
+    lanes = gc.bits_per_lane(theta)
+    base = GradientTrackingConsensus(ring, comp, None)
+    ref = base.bits_per_lane(theta)
+    assert lanes["model"] == ref["model"]
+    assert lanes["tracker"] < ref["tracker"]
+    assert gc.bits_per_round(theta) == sum(lanes.values())
+    tc = make_compressor("q2b")
+    ratio = 1.0 + payload_total_bits(tc, theta) / payload_total_bits(comp, theta)
+    assert float(gc.bits_realized(theta, None, None)) == pytest.approx(
+        ratio / 2.0 * float(base.bits_realized(theta, None, None))
+    )
+
+
+def test_tracker_compressor_requires_gt_consensus():
+    from benchmarks.common import make_adgda
+
+    with pytest.raises(ValueError, match="tracker_compressor"):
+        make_adgda("logistic", 6, compressor="q4b", consensus="choco",
+                   tracker_compressor="q2b")
+
+
 def test_gt_trainer_matches_mean_trajectory():
     """Network-mean invariant: with doubly-stochastic mixing the gt mean
     trajectory follows plain local SGD's (gossip preserves both lane means),
