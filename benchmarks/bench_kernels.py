@@ -1,9 +1,29 @@
-"""Kernel hot-spot benchmark — Pallas compression kernels vs pure-jnp refs.
+"""Suite K — Pallas kernel suite vs refs/baselines, with roofline columns.
 
-Measures wall time per call (interpret mode on CPU — indicative only; the
-BlockSpec tiling targets TPU VMEM), asserts allclose against ref.py, and
-reports the wire-size reduction each kernel buys (the quantity that drives
-the paper's communication saving).
+Two row families:
+
+* **compression** (`quantize_*`, `block_top*`) — wall time + the wire-size
+  reduction each kernel buys, with the paper's contraction property asserted
+  inline.
+* **attention** (`attn_*`, `decode_*`) — each row times the suite kernel
+  against an honest baseline *of the same execution technology* and reports
+  ``speedup = us_baseline / us_kernel`` (the gated metric, see
+  check_regression SPECS["K"]):
+
+    - sliding-window kernel vs the flash kernel with its leading-block skip
+      disabled (``skip_blocks=False`` — window *masking* without block
+      skipping, both under the Pallas interpreter off-TPU);
+    - block-sparse kernel vs the dense causal flash kernel;
+    - fused int8 quantized-KV decode vs the engine's pre-kernel XLA decode
+      (``_repeat_kv`` + materialized softmax over an f32 cache), both XLA.
+
+  Every attention row asserts ref-parity (kernels/ref.py) on the exact
+  tensors it times — a fast-but-wrong kernel fails the bench, not just the
+  test suite.  Roofline columns follow launch/roofline.py vocabulary:
+  ``hbm_mb_modeled`` is the kernel's modeled HBM traffic (the bytes a
+  memory-bound op is bounded by) and ``bytes_x`` the baseline/kernel ratio —
+  on TPU the wall-clock speedup of these memory-bound ops tracks ``bytes_x``;
+  the CPU-measured ``speedup`` is the compute-proxy the gate pins.
 """
 from __future__ import annotations
 
@@ -14,18 +34,213 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from repro.kernels.ref import tau_for
+from repro.kernels.block_sparse import BlockSparsePattern, block_sparse_attention_pallas
+from repro.kernels.decode import decode_attention_fused_xla
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import (
+    block_sparse_attention_ref,
+    decode_attention_ref,
+    flash_attention_ref,
+    quantize_kv_ref,
+)
+from repro.kernels.sliding_window import sliding_window_attention_pallas
 
 
 def _time(fn, *args, reps=3):
     fn(*args)  # compile
-    t0 = time.time()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.time()
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6  # us
+        best = min(best, time.time() - t0)
+    return best * 1e6  # us (min-of-N: the gate's noise absorber expects it)
 
 
-def run(quick: bool = True) -> list[dict]:
+def _qkv(key, bh, s, hd, dtype):
+    ks = jax.random.split(key, 3)
+    return tuple(
+        jax.random.normal(k, (bh, s, hd), jnp.float32).astype(dtype) for k in ks
+    )
+
+
+def _attn_bytes_mb(bh, s_q, kv_blocks_loaded, block_k, hd, itemsize):
+    """Modeled HBM traffic of a streaming attention kernel: Q and O once,
+    K and V once per *loaded* kv block (the roofline's memory-bound bound)."""
+    qo = 2 * bh * s_q * hd * itemsize
+    kv = 2 * kv_blocks_loaded * block_k * hd * itemsize
+    return (qo + kv) / 2**20
+
+
+def _sliding_rows(quick: bool) -> list[dict]:
+    rows = []
+    s = 2048 if quick else 8192
+    window, hd, bh, bq, bk = 128, 64, 2, 128, 128
+    for dtype in (jnp.float32,) if quick else (jnp.float32, jnp.bfloat16):
+        q, k, v = _qkv(jax.random.PRNGKey(1), bh, s, hd, dtype)
+        fast = jax.jit(
+            lambda q, k, v: sliding_window_attention_pallas(
+                q, k, v, window=window, block_q=bq, block_k=bk, interpret=True
+            )
+        )
+        slow = jax.jit(
+            lambda q, k, v: flash_attention_pallas(
+                q, k, v, causal=True, window=window, block_q=bq, block_k=bk,
+                interpret=True, skip_blocks=False,
+            )
+        )
+        out, base = fast(q, k, v), slow(q, k, v)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        ref = flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=tol, rtol=tol)
+        np.testing.assert_allclose(
+            np.asarray(base, np.float32), np.asarray(ref, np.float32),
+            atol=tol, rtol=tol)
+        us_k, us_b = _time(fast, q, k, v), _time(slow, q, k, v)
+        nq = s // bq
+        nkv_kernel = min(s // bk, (bq + window - 2) // bk + 2)
+        # the masked baseline visits every causal block; the kernel only the band
+        blocks_base = bh * sum(min(((i + 1) * bq - 1) // bk + 1, s // bk) for i in range(nq))
+        blocks_kern = bh * nq * nkv_kernel
+        isz = jnp.dtype(dtype).itemsize
+        rows.append({
+            "table": "K",
+            "kernel": "attn_sliding_window",
+            "baseline": "flash_window_masked",
+            "dtype": jnp.dtype(dtype).name,
+            "shape": f"bh{bh}_s{s}_hd{hd}_w{window}",
+            "us_kernel": us_k,
+            "us_baseline": us_b,
+            "speedup": us_b / us_k,
+            "hbm_mb_modeled": _attn_bytes_mb(bh, s, blocks_kern, bk, hd, isz),
+            "bytes_x": blocks_base / blocks_kern,
+        })
+    return rows
+
+
+def _block_sparse_rows(quick: bool) -> list[dict]:
+    rows = []
+    s, hd, bh, blk = (2048, 64, 2, 128) if quick else (4096, 64, 2, 128)
+    q, k, v = _qkv(jax.random.PRNGKey(2), bh, s, hd, jnp.float32)
+    dense_pat = BlockSparsePattern.causal_pattern(s, s, blk, blk)
+    for name, pattern in [
+        ("strided", BlockSparsePattern.strided(
+            s, s, local_blocks=2, stride=4, block_q=blk, block_k=blk)),
+        ("windowed", BlockSparsePattern.windowed(s, s, 256, blk, blk)),
+    ]:
+        fast = jax.jit(
+            lambda q, k, v, p=pattern: block_sparse_attention_pallas(
+                q, k, v, p, interpret=True)
+        )
+        slow = jax.jit(
+            lambda q, k, v: flash_attention_pallas(
+                q, k, v, causal=True, interpret=True)
+        )
+        out = fast(q, k, v)
+        ref = block_sparse_attention_ref(q, k, v, pattern)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+        us_k, us_b = _time(fast, q, k, v), _time(slow, q, k, v)
+        blocks_kern = int((pattern.bitmap != 0).sum()) * bh
+        blocks_base = int((dense_pat.bitmap != 0).sum()) * bh
+        rows.append({
+            "table": "K",
+            "kernel": f"attn_block_sparse_{name}",
+            "baseline": "flash_causal_dense",
+            "dtype": "float32",
+            "shape": f"bh{bh}_s{s}_hd{hd}",
+            "density": pattern.density(),
+            "us_kernel": us_k,
+            "us_baseline": us_b,
+            "speedup": us_b / us_k,
+            "hbm_mb_modeled": _attn_bytes_mb(bh, s, blocks_kern, blk, hd, 4),
+            "bytes_x": blocks_base / blocks_kern,
+        })
+    return rows
+
+
+def _xla_decode_baseline(q, k, v, valid):
+    """The engine's pre-kernel decode math: repeat kv heads to H, materialize
+    the [B, H, 1, L] score row, softmax, contract — over the f32 cache."""
+    B, KV, G, hd = q.shape
+    H = KV * G
+    kk = jnp.repeat(k, G, axis=2)  # [B, L, H, hd]
+    vv = jnp.repeat(v, G, axis=2)
+    qq = q.reshape(B, 1, H, hd)
+    logits = jnp.einsum("bqhk,bshk->bhqs", qq, kk).astype(jnp.float32)
+    logits = logits / np.sqrt(hd)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, vv).reshape(B, KV, G, hd)
+
+
+def _decode_rows(quick: bool) -> list[dict]:
+    rows = []
+    B, KV, G, hd = 8, 4, 2, 64
+    L = 4096 if quick else 16384
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, L, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, L, KV, hd), jnp.float32)
+    valid = jnp.broadcast_to(jnp.arange(L)[None, :] < (L - 7), (B, L))
+
+    base = jax.jit(_xla_decode_baseline)
+    f32_ref = base(q, k, v, valid)
+    cache_mb = 2 * B * L * KV * hd / 2**20  # per tick, k+v
+
+    # fused f32: grouped heads contracted in place (no repeat_kv copy)
+    fused_f32 = jax.jit(lambda q, k, v, m: decode_attention_fused_xla(q, k, v, m))
+    out = fused_f32(q, k, v, valid)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(f32_ref), atol=2e-5, rtol=1e-4)
+    us_b = _time(base, q, k, v, valid)
+    us_k = _time(fused_f32, q, k, v, valid)
+    rows.append({
+        "table": "K",
+        "kernel": "decode_fused_f32",
+        "baseline": "xla_repeat_kv_f32",
+        "dtype": "float32",
+        "shape": f"B{B}_L{L}_kv{KV}_g{G}_hd{hd}",
+        "us_kernel": us_k,
+        "us_baseline": us_b,
+        "speedup": us_b / us_k,
+        "hbm_mb_modeled": cache_mb * 4,
+        "bytes_x": float(G),  # repeat_kv reads/writes the cache G-fold
+    })
+
+    # fused int8 quantized-KV: 1/4 the cache bytes, dequant inside the
+    # contractions; parity asserted against BOTH the quantized oracle (exact)
+    # and the f32 decode (documented tolerance)
+    kq, ksc = quantize_kv_ref(k)
+    vq, vsc = quantize_kv_ref(v)
+    fused_q = jax.jit(
+        lambda q, kq, vq, m, ks_, vs_: decode_attention_fused_xla(
+            q, kq, vq, m, k_scale=ks_, v_scale=vs_)
+    )
+    outq = fused_q(q, kq, vq, valid, ksc, vsc)
+    np.testing.assert_allclose(
+        np.asarray(outq),
+        np.asarray(decode_attention_ref(q, kq, vq, valid, k_scale=ksc, v_scale=vsc)),
+        atol=2e-5, rtol=1e-4)
+    assert float(jnp.abs(outq - f32_ref).max()) < 2e-2  # int8 tolerance bar
+    us_k = _time(fused_q, q, kq, vq, valid, ksc, vsc)
+    rows.append({
+        "table": "K",
+        "kernel": "decode_fused_int8",
+        "baseline": "xla_repeat_kv_f32",
+        "dtype": "int8",
+        "shape": f"B{B}_L{L}_kv{KV}_g{G}_hd{hd}",
+        "us_kernel": us_k,
+        "us_baseline": us_b,
+        "speedup": us_b / us_k,
+        "hbm_mb_modeled": cache_mb / 4 + B * L * KV * 8 / 2**20,  # int8 kv + scales
+        "bytes_x": 4.0 * G,  # 1/4 bytes AND no G-fold repeat
+    })
+    return rows
+
+
+def _compression_rows(quick: bool) -> list[dict]:
     rows = []
     d = 1 << 14 if quick else 1 << 20
     key = jax.random.PRNGKey(0)
@@ -50,7 +265,6 @@ def run(quick: bool = True) -> list[dict]:
         })
 
     for frac in (0.25, 0.10):
-        k = max(1, int(frac * d))
         topk = jax.jit(lambda x: ops.block_topk(x, fraction=frac))
         y = topk(x)
         nnz = int((np.asarray(y) != 0).sum())
@@ -65,6 +279,15 @@ def run(quick: bool = True) -> list[dict]:
             "compression_x": 1.0 / frac / 2,  # value+index per kept entry
         })
     return rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    return (
+        _compression_rows(quick)
+        + _sliding_rows(quick)
+        + _block_sparse_rows(quick)
+        + _decode_rows(quick)
+    )
 
 
 if __name__ == "__main__":

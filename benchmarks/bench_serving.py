@@ -192,6 +192,7 @@ def _latency_rows(quick: bool) -> list[dict]:
             r["knee_rate"] = knee
         rows += fleet_rows + twin_rows
     rows += _prompt_mode_rows(cfg, params, n_requests)
+    rows += _decode_kernel_rows(cfg, params, n_requests)
     return rows
 
 
@@ -234,6 +235,40 @@ def _prompt_mode_rows(cfg, params, n_requests) -> list[dict]:
     # convention (rate itself — these rows are their own sweep point)
     for r in rows:
         r["knee_rate"] = rate
+    return rows
+
+
+def _decode_kernel_rows(cfg, params, n_requests) -> list[dict]:
+    """ISSUE-10 decode-kernel twin (``kind="decode_kernel"``, not gated):
+    identical m1s4 traffic served by the stock f32 engine and by one with
+    ``quantized_kv=True`` (int8 KV cache + fused dequant decode).  Logical
+    scheduling is token-count-driven, so tick metrics match; the int8 row
+    carries ``wall_ratio_f32`` = f32 wall / int8 wall, informational only:
+    at this smoke scale (cache_len=48 on CPU) the per-tick quantize-on-store
+    overhead dominates and there are no cache bytes worth saving, so the
+    ratio sits *below* 1 — the serving-shape win (L=4096, cache read once at
+    1/4 bytes) is measured and gated in suite K instead."""
+    m, slots = FLEETS["m1s4"]
+    capacity = slots / LoadGenConfig_probe(cfg, m).mean_request_tokens()
+    rate = round(SPEEDUP_UTIL * capacity, 4)
+    qcfg = dataclasses.replace(cfg, quantized_kv=True)
+    # warm the process-wide ProgramCache for BOTH configs so the wall ratio
+    # compares steady-state decode, not one side's first-compile
+    for c in (cfg, qcfg):
+        _fleet_run(c, params, m, slots, rate, min(24, n_requests))
+    rep_f32 = _fleet_run(cfg, params, m, slots, rate, n_requests)
+    rep_int8 = _fleet_run(qcfg, params, m, slots, rate, n_requests)
+    rows = []
+    for name, rep in (("f32", rep_f32), ("int8", rep_int8)):
+        row = _latency_row(rep, "m1s4", rate, SPEEDUP_UTIL)
+        row["kind"] = "decode_kernel"
+        row["kv_cache"] = name
+        row["knee_rate"] = rate
+        if name == "int8":
+            row["wall_ratio_f32"] = (
+                rep_f32.wall_seconds / max(rep.wall_seconds, 1e-9)
+            )
+        rows.append(row)
     return rows
 
 

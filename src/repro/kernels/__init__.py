@@ -1,10 +1,38 @@
-"""Pallas-TPU kernels for the paper's compression hot-spots.
+"""Pallas-TPU kernels for the paper's compression + attention hot-spots.
 
-quantize.py — fused stochastic b-bit quantization + bit-packing
-topk.py     — blockwise top-k sparsification via threshold bisection
-ops.py      — jit'd wrappers + gossip-pluggable compressor classes
-ref.py      — pure-jnp oracles the kernels are tested against
+quantize.py        — fused stochastic b-bit quantization + bit-packing
+topk.py            — blockwise top-k sparsification via threshold bisection
+choco_fused.py     — single-pass fused CHOCO gossip round (+ digest lane)
+flash_attention.py — causal/windowed flash attention (training)
+sliding_window.py  — O(window)-VMEM local attention (long-context training)
+block_sparse.py    — block-bitmap sparse attention + BlockSparsePattern
+decode.py          — fused single-query decode over the serving KV cache,
+                     opt-in int8 quantized-KV mode
+ops.py             — jit'd wrappers + gossip-pluggable compressor classes
+ref.py             — pure-jnp oracles the kernels are tested against
 """
-from repro.kernels.ops import KernelBlockTopK, KernelQuantization, block_topk, dequantize, quantize
+from repro.kernels.ops import (
+    KernelBlockTopK,
+    KernelQuantization,
+    block_sparse_attention,
+    block_topk,
+    decode_attention_kernel,
+    dequantize,
+    flash_attention,
+    quantize,
+    quantize_kv,
+    sliding_window_attention,
+)
 
-__all__ = ["KernelBlockTopK", "KernelQuantization", "block_topk", "dequantize", "quantize"]
+__all__ = [
+    "KernelBlockTopK",
+    "KernelQuantization",
+    "block_sparse_attention",
+    "block_topk",
+    "decode_attention_kernel",
+    "dequantize",
+    "flash_attention",
+    "quantize",
+    "quantize_kv",
+    "sliding_window_attention",
+]

@@ -75,9 +75,15 @@ def _pick_block(rows: int, unit: int, m: int, f32_operands: float) -> int:
 
 # ------------------------------------------------------------- fused encode
 def _fused_encode_kernel(enc_ref, deq_ref, tn_ref, hat_ref, xi_ref,
-                         lvl_ref, sign_ref, hat_new_ref, *, bits: int):
+                         lvl_ref, sign_ref, hat_new_ref, *maybe_dig,
+                         bits: int, with_digest: bool = False):
     """One row-block across all m nodes: residual -> quantize -> pack -> hat
-    update.  enc_ref/deq_ref: [m, 128] lane-broadcast per-node scales."""
+    update.  enc_ref/deq_ref: [m, 128] lane-broadcast per-node scales.
+
+    With ``with_digest`` a per-node int32 wraparound digest of the stored
+    ``hat_new`` accumulates in an extra [m, 128] output whose constant index
+    map revisits the same tile every grid step (TPU grids are sequential, so
+    the read-modify-write accumulation is well-defined)."""
     pack = 8 // bits
     maxlvl = (1 << bits) - 1
 
@@ -101,16 +107,38 @@ def _fused_encode_kernel(enc_ref, deq_ref, tn_ref, hat_ref, xi_ref,
     # hat <- hat + deq(payload), without re-reading the packed payload
     mag = lvlf * deq_ref[...][:, None, :]
     q_self = jnp.where(neg, -mag, mag)
-    hat_new_ref[...] = (hat.astype(jnp.float32) + q_self).astype(hat_new_ref.dtype)
+    stored = (hat.astype(jnp.float32) + q_self).astype(hat_new_ref.dtype)
+    hat_new_ref[...] = stored
+
+    if with_digest:
+        (dig_ref,) = maybe_dig
+        # same arithmetic as core.faults.digest: bitcast to same-width int,
+        # widen to int32, wraparound-sum — int32 addition commutes, so the
+        # per-block accumulation order doesn't matter
+        nbits = stored.dtype.itemsize * 8
+        part = (
+            jax.lax.bitcast_convert_type(stored, jnp.dtype(f"int{nbits}"))
+            .astype(jnp.int32)
+            .sum(axis=1)
+        )  # [m, 128]
+
+        @pl.when(pl.program_id(0) == 0)
+        def _zero():
+            dig_ref[...] = jnp.zeros_like(dig_ref)
+
+        dig_ref[...] += part
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
-def fused_encode_pallas(theta_new, hat, xi, scales, bits: int, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("bits", "interpret", "with_digest"))
+def fused_encode_pallas(theta_new, hat, xi, scales, bits: int,
+                        interpret: bool = True, with_digest: bool = False):
     """theta_new/hat: [m, R, 128] (leaf dtype), xi: [m, R, 128] f32,
     scales: [m, 2] f32 — per-node (encode scale, dequant scale).
 
     Returns (packed_levels [m, R/pack, 128] u8, packed_signs [m, R/8, 128] u8,
-    hat_new [m, R, 128] in hat.dtype).
+    hat_new [m, R, 128] in hat.dtype), plus a per-node int32 digest [m] equal
+    to ``core.faults.digest(hat_new)`` when ``with_digest`` — the fault lane
+    rides the encode pass for free instead of a separate XLA reduction.
     """
     m, rows, lanes = theta_new.shape
     assert lanes == LANES
@@ -123,8 +151,19 @@ def fused_encode_pallas(theta_new, hat, xi, scales, bits: int, interpret: bool =
     enc = jnp.broadcast_to(scales[:, 0:1], (m, LANES)).astype(jnp.float32)
     deq = jnp.broadcast_to(scales[:, 1:2], (m, LANES)).astype(jnp.float32)
     row_spec = lambda div: pl.BlockSpec((m, block // div, LANES), lambda r: (0, r, 0))
-    return pl.pallas_call(
-        functools.partial(_fused_encode_kernel, bits=bits),
+    out_specs = [row_spec(pack), row_spec(8), row_spec(1)]
+    out_shape = [
+        jax.ShapeDtypeStruct((m, rows // pack, LANES), jnp.uint8),
+        jax.ShapeDtypeStruct((m, rows // 8, LANES), jnp.uint8),
+        jax.ShapeDtypeStruct((m, rows, LANES), hat.dtype),
+    ]
+    if with_digest:
+        # constant index map: the digest tile is revisited (and accumulated
+        # into) on every sequential grid step
+        out_specs.append(pl.BlockSpec((m, LANES), lambda r: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((m, LANES), jnp.int32))
+    out = pl.pallas_call(
+        functools.partial(_fused_encode_kernel, bits=bits, with_digest=with_digest),
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, LANES), lambda r: (0, 0)),
@@ -133,14 +172,14 @@ def fused_encode_pallas(theta_new, hat, xi, scales, bits: int, interpret: bool =
             row_spec(1),
             row_spec(1),
         ],
-        out_specs=[row_spec(pack), row_spec(8), row_spec(1)],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, rows // pack, LANES), jnp.uint8),
-            jax.ShapeDtypeStruct((m, rows // 8, LANES), jnp.uint8),
-            jax.ShapeDtypeStruct((m, rows, LANES), hat.dtype),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(enc, deq, theta_new, hat, xi)
+    if with_digest:
+        lvl, sign, hat_new, dig = out
+        return lvl, sign, hat_new, dig.sum(axis=1)
+    return out
 
 
 # --------------------------------------------------------------- fused mix
@@ -204,7 +243,7 @@ def fused_mix_pallas(rolled_lvl, rolled_sign, s, wscale, bits: int, interpret: b
 # ------------------------------------------------------------- leaf round
 def fused_round_leaf(leaf, hat, s, key, shifts: Sequence[tuple[int, float]],
                      gamma, bits: int, interpret: bool = True, *,
-                     roll_fn=None, node_keys=None):
+                     roll_fn=None, node_keys=None, with_digest: bool = False):
     """One CHOCO round for a stacked leaf [m, ...] on the fused fast path.
 
     Matches ``gossip._round_leaf`` with a ``KernelQuantization(bits)``
@@ -218,7 +257,11 @@ def fused_round_leaf(leaf, hat, s, key, shifts: Sequence[tuple[int, float]],
     node block; ``node_keys`` then carries that block's slice of the global
     per-node key array (the default is the full ``split(key, m)``).
 
-    Returns (theta_new, hat_new, s_new), all shaped like ``leaf``.
+    Returns (theta_new, hat_new, s_new), all shaped like ``leaf``; with
+    ``with_digest`` a fourth element — the per-node int32 wraparound digest of
+    ``hat_new``, equal to ``core.faults.digest(hat_new)`` (the zero padding
+    rows quantize to exact zeros, so the padded-grid digest matches the
+    unpadded one) — computed inside the encode pass at no extra HBM traffic.
     """
     m = leaf.shape[0]
     inner_shape, dtype = leaf.shape[1:], leaf.dtype
@@ -251,9 +294,14 @@ def fused_round_leaf(leaf, hat, s, key, shifts: Sequence[tuple[int, float]],
     scale_deq = norms / ((1 << bits) * tau_for(d, bits))
     scales = jnp.stack([scale_enc, scale_deq], axis=1).astype(jnp.float32)
 
-    lvl, sign, hat_new_g = fused_encode_pallas(
-        grid3(flat_tn), grid3(flat_hat), xi, scales, bits, interpret=interpret
+    enc_out = fused_encode_pallas(
+        grid3(flat_tn), grid3(flat_hat), xi, scales, bits,
+        interpret=interpret, with_digest=with_digest,
     )
+    if with_digest:
+        lvl, sign, hat_new_g, dig = enc_out
+    else:
+        lvl, sign, hat_new_g = enc_out
 
     # roll the *packed* payload along the node axis (wire-sized traffic;
     # lowers to collective-permute under a sharded node axis).  Shifts are
@@ -280,4 +328,6 @@ def fused_round_leaf(leaf, hat, s, key, shifts: Sequence[tuple[int, float]],
         )
 
     unpad = lambda x: x.reshape(m, -1)[:, :d].reshape((m,) + inner_shape)
+    if with_digest:
+        return theta_new, unpad(hat_new_g), unpad(s_new_g).astype(dtype), dig
     return theta_new, unpad(hat_new_g), unpad(s_new_g).astype(dtype)

@@ -1,0 +1,157 @@
+"""Fused decode-attention kernel for the serving engine.
+
+Per-tick decode is the serving fleet's hottest loop and it is memory-bound:
+one query token attends over the whole KV cache, so the arithmetic intensity
+is O(1) FLOPs per cache byte and throughput is set by how many bytes the
+cache read moves.  The XLA path today (a) materializes ``_repeat_kv`` —
+re-reading the kv heads G times for grouped-query attention — and (b) reads
+the cache at f32/bf16 width.
+
+This kernel fixes both:
+
+* grid (B, KV): each cell handles one (batch, kv-head) pair's G query heads
+  at once, so k/v stream through VMEM exactly once — no repeat.
+* opt-in int8 quantized-KV mode (``k_scale``/``v_scale`` per (position,
+  kv-head), built by ``ref.quantize_kv_ref`` at cache-store time): dequant
+  is fused into the contractions — scores scale by ``k_scale`` *after* the
+  int8 QK matmul and probabilities by ``v_scale`` *before* the int8 PV
+  matmul — so the cache is read once at 1/4 the f32 bytes and no dequantized
+  copy is ever materialized.
+
+A ``valid`` row mask handles both linear caches (slots beyond ``pos``) and
+ring-buffer windowed caches (wrapped slot ages); masked slots use the same
+finite -1e30 sentinel as the other attention kernels.  The length loop runs
+over ``block_l`` slabs inside the kernel (whole-L VMEM residency is fine at
+serving cache lengths; L up to ~64k f32 at hd=64 fits comfortably).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import NEG_INF
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, *rest, scale, block_l,
+                   num_l, quantized):
+    if quantized:
+        ks_ref, vs_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+    g, hd = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [G, hd]
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        sl = pl.dslice(j * block_l, block_l)
+        k = pl.load(k_ref, (pl.dslice(0, 1), sl, pl.dslice(0, 1),
+                            pl.dslice(0, hd)))[0, :, 0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), sl, pl.dslice(0, 1),
+                            pl.dslice(0, hd)))[0, :, 0].astype(jnp.float32)
+        s = q @ k.T  # [G, block_l]
+        if quantized:
+            ks = pl.load(ks_ref, (pl.dslice(0, 1), sl, pl.dslice(0, 1)))[
+                0, :, 0
+            ]
+            s = s * ks[None, :]
+        live = pl.load(valid_ref, (pl.dslice(0, 1), sl))[0] != 0
+        s = jnp.where(live[None, :], s, NEG_INF)
+
+        m_cur = jnp.maximum(m_prev, s.max(-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(-1)
+        if quantized:
+            vs = pl.load(vs_ref, (pl.dslice(0, 1), sl, pl.dslice(0, 1)))[
+                0, :, 0
+            ]
+            p = p * vs[None, :]
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_cur, l_cur
+
+    acc = jnp.zeros((g, hd), jnp.float32)
+    m = jnp.full((g,), NEG_INF, jnp.float32)
+    l = jnp.zeros((g,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, num_l, body, (acc, m, l))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,  # [B, KV, G, hd]
+    k: jax.Array,  # [B, L, KV, hd]  (int8 when k_scale given)
+    v: jax.Array,  # [B, L, KV, hd]
+    valid: jax.Array,  # [B, L] bool/int — live cache slots
+    *,
+    scale: float | None = None,
+    k_scale: jax.Array | None = None,  # [B, L, KV] f32
+    v_scale: jax.Array | None = None,
+    block_l: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kv, g, hd = q.shape
+    length = k.shape[1]
+    assert k.shape == v.shape == (b, length, kv, hd), (q.shape, k.shape)
+    quantized = k_scale is not None
+    assert (k_scale is None) == (v_scale is None)
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    block_l = min(block_l, length)
+    assert length % block_l == 0, (length, block_l)
+
+    kv_spec = pl.BlockSpec((1, length, 1, hd), lambda bi, h: (bi, 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda bi, h: (bi, h, 0, 0)),
+        kv_spec,
+        kv_spec,
+        pl.BlockSpec((1, length), lambda bi, h: (bi, 0)),
+    ]
+    operands = [q, k, v, valid.astype(jnp.int32)]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, length, 1), lambda bi, h: (bi, 0, h))
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale, v_scale]
+
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=scale,
+        block_l=block_l,
+        num_l=length // block_l,
+        quantized=quantized,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kv),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, h: (bi, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )(*operands)
+
+
+def decode_attention_fused_xla(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    valid: jax.Array,
+    *,
+    scale: float | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """XLA twin of the decode kernel (same fused-dequant math, no Pallas).
+
+    Off-TPU the Pallas path would run under ``interpret=True`` — correct but
+    slow — so the CPU serving engine dispatches here instead: grouped heads
+    without a materialized ``_repeat_kv`` and int8 dequant fused into the
+    einsums.  Identical contraction order to the kernel's per-slab loop up
+    to the online-softmax reassociation.
+    """
+    from repro.kernels.ref import decode_attention_ref
+
+    return decode_attention_ref(
+        q, k, v, valid, scale=scale, k_scale=k_scale, v_scale=v_scale
+    )

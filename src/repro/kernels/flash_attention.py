@@ -35,7 +35,7 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
-                  block_q, block_k, seq_k):
+                  block_q, block_k, seq_k, skip_blocks):
     """One (batch*head, q-block) grid cell: stream kv blocks in VMEM."""
     qi = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32) * scale  # [block_q, hd]
@@ -49,7 +49,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
         num_live = jnp.minimum((last_q // block_k) + 1, num_kv)
     else:
         num_live = num_kv
-    if window is not None:
+    if window is not None and skip_blocks:
         first_q = qi * block_q
         first_live = jnp.maximum((first_q - window + 1) // block_k, 0)
     else:
@@ -96,7 +96,11 @@ def flash_attention_pallas(
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
+    skip_blocks: bool = True,
 ) -> jax.Array:
+    """skip_blocks=False disables the window's leading-block loop clamp so
+    window masking still applies but every kv block is visited — the honest
+    mask-only baseline the sliding-window kernel is benchmarked against."""
     bh, sq, hd = q.shape
     sk = k.shape[1]
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
@@ -111,6 +115,7 @@ def flash_attention_pallas(
         block_q=block_q,
         block_k=block_k,
         seq_k=sk,
+        skip_blocks=skip_blocks,
     )
     return pl.pallas_call(
         kernel,

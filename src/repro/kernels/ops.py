@@ -211,3 +211,125 @@ def flash_attention(
     if pad_q:
         out = out[:, :Sq]
     return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+def sliding_window_attention(
+    q: jax.Array,  # [B, S, H, hd]
+    k: jax.Array,  # [B, S, H, hd] (kv heads already repeated to H)
+    v: jax.Array,
+    *,
+    window: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Causal sliding-window attention over the model's [B, S, H, hd] layout.
+
+    Unlike ``flash_attention`` this grids over the kv window band, so VMEM
+    stays O(window) instead of O(S) and fully-out-of-window kv blocks are
+    never fetched from HBM — the long-context local_attn fast path.
+    """
+    from repro.kernels.sliding_window import sliding_window_attention_pallas
+
+    if interpret is None:
+        interpret = _interpret_default()
+    B, S, H, hd = q.shape
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, S))
+    pad = (-S) % max(bq, bk)
+
+    def fold(x):
+        x = x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+
+    out = sliding_window_attention_pallas(
+        fold(q), fold(k), fold(v), window=window, block_q=bq, block_k=bk,
+        interpret=interpret,
+    )
+    if pad:
+        out = out[:, :S]
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def block_sparse_attention(
+    q: jax.Array,  # [B, S, H, hd]
+    k: jax.Array,
+    v: jax.Array,
+    pattern,  # BlockSparsePattern — must match the padded sequence length
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Block-sparse attention over [B, S, H, hd]; the pattern's bitmap picks
+    which (q-block, kv-block) tiles are computed (see kernels/block_sparse.py).
+    """
+    from repro.kernels.block_sparse import block_sparse_attention_pallas
+
+    if interpret is None:
+        interpret = _interpret_default()
+    B, S, H, hd = q.shape
+    assert pattern.seq_q == pattern.seq_k == S, (pattern.seq_q, S)
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    out = block_sparse_attention_pallas(
+        fold(q), fold(k), fold(v), pattern, interpret=interpret
+    )
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def decode_attention_kernel(
+    q: jax.Array,  # [B, 1, H, hd] — single decode-step query
+    k: jax.Array,  # [B, L, KV, hd] cache (int8 when k_scale given)
+    v: jax.Array,
+    valid: jax.Array,  # [B, L] live cache slots
+    *,
+    k_scale: jax.Array | None = None,  # [B, L, KV] f32
+    v_scale: jax.Array | None = None,
+    impl: str | None = None,  # "pallas" | "xla_fused" | None (auto)
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused decode attention over the serving cache layout -> [B, 1, H, hd].
+
+    Grouped-query heads are handled inside the kernel (no materialized
+    ``_repeat_kv``); with ``k_scale``/``v_scale`` the cache is int8 and
+    dequant fuses into the contractions.  ``impl`` auto-resolves to the
+    Pallas kernel on TPU and the fused-XLA twin elsewhere (interpret-mode
+    Pallas is a correctness oracle, not a serving fast path).
+    """
+    from repro.kernels.decode import (
+        decode_attention_fused_xla,
+        decode_attention_pallas,
+    )
+
+    B, one, H, hd = q.shape
+    assert one == 1, q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # model convention (see layers._repeat_kv): q heads are kv-major — head
+    # j*G+g belongs to kv head j — so [B,1,H,hd] reshapes straight to groups
+    qg = q.reshape(B, KV, G, hd)
+    if impl is None:
+        impl = "xla_fused" if _interpret_default() else "pallas"
+    if impl == "pallas":
+        if interpret is None:
+            interpret = _interpret_default()
+        L = k.shape[1]
+        block_l = next(b for b in (512, 256, 128, 64, 32, 16, 8, 1) if L % b == 0)
+        out = decode_attention_pallas(
+            qg, k, v, valid, k_scale=k_scale, v_scale=v_scale,
+            block_l=block_l, interpret=interpret,
+        )
+    else:
+        out = decode_attention_fused_xla(
+            qg, k, v, valid, k_scale=k_scale, v_scale=v_scale
+        )
+    return out.reshape(B, 1, H, hd)
+
+
+def quantize_kv(x: jax.Array):
+    """Per-(position, kv-head) int8 symmetric KV quantization; see
+    ref.quantize_kv_ref.  x: [..., hd] -> (int8 [..., hd], f32 scales [...])."""
+    from repro.kernels.ref import quantize_kv_ref
+
+    return quantize_kv_ref(x)

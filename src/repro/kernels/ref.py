@@ -172,3 +172,86 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     s = jnp.where(mask[None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqs,bsk->bqk", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# --------------------------------------------------- block-sparse attention
+def block_sparse_attention_ref(q, k, v, pattern, *, scale=None):
+    """Oracle for block_sparse.block_sparse_attention_pallas.
+
+    Expands the pattern's block bitmap to an element mask (block-live AND
+    causal/window for PARTIAL blocks) and runs materialized-softmax
+    attention.  Patterns keep the diagonal live, so every q row has >= 1
+    live key and the softmax is well-defined.
+    """
+    import math
+
+    hd = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    sq, sk = q.shape[1], k.shape[1]
+    bq, bk = pattern.block_q, pattern.block_k
+    block = jnp.asarray(pattern.bitmap)  # [nq, nk]
+    block_live = jnp.repeat(jnp.repeat(block != 0, bq, axis=0), bk, axis=1)
+    block_full = jnp.repeat(jnp.repeat(block == 2, bq, axis=0), bk, axis=1)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    elem = jnp.ones((sq, sk), bool)
+    if pattern.causal:
+        elem &= qpos[:, None] >= kpos[None, :]
+    if pattern.window is not None:
+        elem &= qpos[:, None] - kpos[None, :] < pattern.window
+    mask = block_live & (block_full | elem)
+    s = (
+        jnp.einsum("bqk,bsk->bqs", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqs,bsk->bqk", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ------------------------------------------------------------- decode attention
+def quantize_kv_ref(x: jax.Array):
+    """Per-(position, kv-head) int8 symmetric quantization of a KV tensor.
+
+    x: [..., hd] -> (int8 values [..., hd], f32 scales [...]).  scale =
+    absmax/127 so dequant is ``values * scale``; all-zero rows get scale 0
+    and dequant back to exact zeros.
+    """
+    absmax = jnp.abs(x.astype(jnp.float32)).max(axis=-1)
+    scale = absmax / 127.0
+    inv = jnp.where(absmax > 0, 127.0 / absmax, 0.0)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) * inv[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention_ref(q, k, v, valid, *, scale=None, k_scale=None,
+                         v_scale=None):
+    """Oracle for decode.decode_attention_pallas.
+
+    Single-query attention over a KV cache with grouped-query heads:
+      q: [B, KV, G, hd]           (G = query heads per kv head)
+      k, v: [B, L, KV, hd]        (f32/bf16, or int8 when *_scale given)
+      valid: [B, L] bool          live cache slots
+      k_scale, v_scale: [B, L, KV] f32 — when given, k/v are int8 and
+        dequant is fused into the contractions (the kernel's quantized-KV
+        mode: the cache is read once at 1/4 the bytes).
+    Returns [B, KV, G, hd] f32-accumulated in q.dtype.
+    """
+    import math
+
+    hd = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bngd,blnd->bngl", q.astype(jnp.float32) * scale, kf)
+    if k_scale is not None:
+        s = s * k_scale.transpose(0, 2, 1)[:, :, None, :]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p = p * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    return jnp.einsum("bngl,blnd->bngd", p, vf).astype(q.dtype)

@@ -1,0 +1,155 @@
+"""Sliding-window local attention as a Pallas TPU kernel.
+
+The flash kernel (``flash_attention.py``) already clamps its in-kernel kv
+loop to the live block range, but it maps the ENTIRE key/value sequence into
+each grid cell's VMEM block: its working set is O(S), which overflows the
+~16 MiB VMEM budget around 32k context (f32, hd=128) and wastes HBM->VMEM
+bandwidth streaming keys the window will mask anyway.
+
+This kernel makes the kv iteration part of the *grid* instead: the grid is
+(batch*heads, q_blocks, window_blocks) and the K/V BlockSpec index map
+computes, per q block, the first kv block the window can reach —
+
+    start(i) = clamp(last_block(i) - nkv + 1, 0)
+
+so Pallas only ever fetches the ``nkv = O(window / block_k)`` kv blocks a
+q block can see.  VMEM is O(block), not O(S); blocks left of the window are
+never loaded at all (the flash kernel skips computing them but still holds
+the full sequence resident).  The online-softmax carry (m / l / acc) lives
+in VMEM scratch across the innermost grid dimension — TPU grids execute
+sequentially, which is exactly the contract this pattern relies on — and the
+output tile is written once, on the last kv step.
+
+Numerics match ``ref.flash_attention_ref(causal=True, window=w)``: the same
+finite -1e30 mask sentinel makes rows that have not yet met a live key
+self-correct on the first real block (their bogus uniform contribution is
+annihilated by the exp(m_prev - m_cur) rescale).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import NEG_INF
+
+DEFAULT_BLOCK = 128
+
+
+def _num_window_blocks(block_q: int, block_k: int, window: int, num_kv: int) -> int:
+    """Static kv-block trip count per q block: the window band [first_q -
+    window + 1, last_q] spans at most (block_q + window - 2)//block_k + 2
+    kv blocks (one extra for each unaligned edge)."""
+    span = (block_q + window - 2) // block_k + 2
+    return min(num_kv, span)
+
+
+def _kv_start(qi, *, block_q: int, block_k: int, nkv: int):
+    """First kv block fetched for q block ``qi``: anchored so the last
+    fetched block contains the q block's final (diagonal) position."""
+    last_block = ((qi + 1) * block_q - 1) // block_k
+    return jnp.maximum(last_block - (nkv - 1), 0)
+
+
+def _sliding_window_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                           *, scale, window, block_q, block_k, nkv):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    kb = _kv_start(qi, block_q=block_q, block_k=block_k, nkv=nkv) + kj
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [block_q, hd]
+    k = k_ref[0].astype(jnp.float32)  # [block_k, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T  # [block_q, block_k] — MXU matmul
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = (q_pos >= k_pos) & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    l_prev = l_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_cur = l_prev * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = jnp.broadcast_to(m_cur[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_cur[:, None], l_ref.shape)
+
+    @pl.when(kj == nkv - 1)
+    def _flush():
+        l_fin = l_ref[:, 0]
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_fin, 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def sliding_window_attention_pallas(
+    q: jax.Array,  # [BH, S, hd]
+    k: jax.Array,  # [BH, S, hd]
+    v: jax.Array,  # [BH, S, hd]
+    *,
+    window: int,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal sliding-window self-attention; only the live KV band is loaded."""
+    bh, s, hd = q.shape
+    assert k.shape == v.shape == (bh, s, hd), (q.shape, k.shape, v.shape)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    assert window >= 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    num_kv = s // block_k
+    nkv = _num_window_blocks(block_q, block_k, window, num_kv)
+
+    kv_spec = pl.BlockSpec(
+        (1, block_k, hd),
+        lambda b, i, j: (
+            b,
+            _kv_start(i, block_q=block_q, block_k=block_k, nkv=nkv) + j,
+            0,
+        ),
+    )
+    kernel = functools.partial(
+        _sliding_window_kernel,
+        scale=scale,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        nkv=nkv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // block_q, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

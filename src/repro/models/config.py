@@ -74,6 +74,17 @@ class ModelConfig:
     dtype: str = "bfloat16"
     source: str = ""  # citation for the assigned config
 
+    # attention kernel dispatch (kernels/): None = plain XLA attention
+    # (bit-identical to every pre-kernel baseline).  "flash" routes causal
+    # self-attention through the flash / sliding-window Pallas kernels;
+    # "block_sparse" through the block-bitmap kernel (causal or windowed
+    # pattern).  Decode ticks route through the fused decode kernel whenever
+    # either knob is on.
+    attn_kernel: str | None = None
+    # opt-in int8 KV cache: quantize at store (decode + prefill), dequant
+    # fused into the decode contractions — 1/4 the cache bytes per tick
+    quantized_kv: bool = False
+
     @property
     def hd(self) -> int:
         return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads

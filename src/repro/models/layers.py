@@ -149,6 +149,35 @@ def _attend(q, k, v, mask, scale):
     return jnp.einsum("bhqs,bshk->bqhk", probs, v)
 
 
+@functools.lru_cache(maxsize=64)
+def _sparse_pattern(seq: int, window, block: int):
+    from repro.kernels.block_sparse import BlockSparsePattern
+
+    if window is None:
+        return BlockSparsePattern.causal_pattern(seq, seq, block, block)
+    return BlockSparsePattern.windowed(seq, seq, window, block, block)
+
+
+def _kernel_attention(q, k, v, kernel: str, window: int | None):
+    """Route [B,S,H,hd] q/k/v through a kernels/ attention kernel, or return
+    None when no kernel fits the shape (caller keeps the XLA path)."""
+    from repro.kernels import ops
+
+    S = q.shape[1]
+    if kernel == "flash":
+        if window is not None and S >= 256:
+            return ops.sliding_window_attention(q, k, v, window=window)
+        return ops.flash_attention(q, k, v, causal=True, window=window)
+    if kernel == "block_sparse":
+        block = next((b for b in (128, 64, 32, 16, 8) if S % b == 0), None)
+        if block is None:
+            return None
+        return ops.block_sparse_attention(
+            q, k, v, _sparse_pattern(S, window, block)
+        )
+    raise ValueError(f"unknown attn_kernel {kernel!r}")
+
+
 def apply_attention(
     params,
     x: jax.Array,
@@ -164,6 +193,7 @@ def apply_attention(
     cross = kv_src is not None
     kv_in = kv_src if cross else x
     Sk = kv_in.shape[1]
+    default_positions = positions is None
     if positions is None:
         positions = jnp.arange(S)
     kv_positions = jnp.arange(Sk)
@@ -171,6 +201,18 @@ def apply_attention(
     k = _repeat_kv(k, cfg.num_heads)
     v = _repeat_kv(v, cfg.num_heads)
     scale = 1.0 / math.sqrt(cfg.hd)
+
+    # Pallas kernel dispatch (cfg.attn_kernel): causal self-attention with
+    # contiguous positions only — cross attention and explicit position maps
+    # keep the XLA path.  Default (None) is bit-identical pre-kernel XLA.
+    kernel = getattr(cfg, "attn_kernel", None)
+    if kernel is not None and not cross and causal and default_positions:
+        out = _kernel_attention(q, k, v, kernel, window)
+        if out is not None:
+            y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+            if "bo" in params:
+                y = y + params["bo"]
+            return y
 
     def mask_for(q_pos):
         # q_pos: [Sq] absolute query positions
@@ -210,10 +252,18 @@ def apply_attention(
 # --------------------------------------------------------------- decode path
 def init_attn_cache(cfg, batch: int, length: int, dtype=None):
     dt = dtype or cfg.activation_dtype
-    return {
-        "k": jnp.zeros((batch, length, cfg.num_kv_heads, cfg.hd), dt),
-        "v": jnp.zeros((batch, length, cfg.num_kv_heads, cfg.hd), dt),
-    }
+    shape = (batch, length, cfg.num_kv_heads, cfg.hd)
+    if getattr(cfg, "quantized_kv", False):
+        # int8 cache + per-(slot, kv-head) dequant scales: 1/4 the bytes per
+        # decode tick, read by the fused decode kernel which dequants inside
+        # its contractions (never materializing an f32 copy)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
 def decode_attention(
@@ -252,12 +302,23 @@ def decode_attention(
     q, k, v = _project_qkv(params, x, x, cfg, positions, positions[:, 0:1], cross=False)
 
     slot = pos % length if window is not None else pos  # ring buffer for windows
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-    new_cache = {"k": ck, "v": cv}
+    quantized = "k_scale" in cache
+    if quantized:
+        from repro.kernels import quantize_kv
 
-    kk = _repeat_kv(ck.astype(x.dtype), cfg.num_heads)
-    vv = _repeat_kv(cv.astype(x.dtype), cfg.num_heads)
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0)),
+        }
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+
     idx = jnp.arange(length)
     if window is not None:
         # ring buffer slot i holds absolute position: valid iff within window
@@ -266,8 +327,26 @@ def decode_attention(
         valid = age < jnp.minimum(pos + 1, length)
     else:
         valid = idx <= pos
-    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, length))
-    out = _attend(q, kk, vv, mask, scale)
+
+    if quantized or getattr(cfg, "attn_kernel", None) is not None:
+        # fused decode kernel: one pass over the cache, grouped heads handled
+        # in-kernel (no _repeat_kv materialization), int8 dequant fused into
+        # the contractions when the cache is quantized
+        from repro.kernels import decode_attention_kernel
+
+        out = decode_attention_kernel(
+            q,
+            new_cache["k"],
+            new_cache["v"],
+            jnp.broadcast_to(valid[None], (B, length)),
+            k_scale=new_cache.get("k_scale"),
+            v_scale=new_cache.get("v_scale"),
+        ).astype(x.dtype)
+    else:
+        kk = _repeat_kv(new_cache["k"].astype(x.dtype), cfg.num_heads)
+        vv = _repeat_kv(new_cache["v"].astype(x.dtype), cfg.num_heads)
+        mask = jnp.broadcast_to(valid[None, None, :], (B, 1, length))
+        out = _attend(q, kk, vv, mask, scale)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     if "bo" in params:
         y = y + params["bo"]

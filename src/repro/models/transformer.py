@@ -462,7 +462,27 @@ def prefill(params, batch, cfg: ModelConfig, cache_len: int):
             positions = jnp.arange(S)
             q, k, v = _project_qkv(p["mixer"], h, h, cfg, positions, positions, False)
             L = c["k"].shape[1]
-            if S <= L:
+            if "k_scale" in c:
+                # quantized cache: quantize at prefill-store so every decode
+                # tick reads int8 (scales stored alongside, see layers)
+                from repro.kernels import quantize_kv
+
+                (k, k_sc), (v, v_sc) = quantize_kv(k), quantize_kv(v)
+                if S <= L:
+                    upd4 = lambda dst, src: jax.lax.dynamic_update_slice(
+                        dst, src.astype(dst.dtype), (0, 0, 0, 0))
+                    upd3 = lambda dst, src: jax.lax.dynamic_update_slice(
+                        dst, src, (0, 0, 0))
+                    c = {"k": upd4(c["k"], k), "v": upd4(c["v"], v),
+                         "k_scale": upd3(c["k_scale"], k_sc),
+                         "v_scale": upd3(c["v_scale"], v_sc)}
+                else:
+                    ring4 = lambda src, dt: jnp.roll(
+                        src[:, S - L:].astype(dt), S % L, axis=1)
+                    c = {"k": ring4(k, c["k"].dtype), "v": ring4(v, c["v"].dtype),
+                         "k_scale": ring4(k_sc, jnp.float32),
+                         "v_scale": ring4(v_sc, jnp.float32)}
+            elif S <= L:
                 # linear cache (or ring buffer not yet wrapped): slot == pos
                 c = {
                     "k": jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype), (0, 0, 0, 0)),

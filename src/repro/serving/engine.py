@@ -502,7 +502,13 @@ class ServeEngine:
                 and not (self._recurrent or self._windowed)
                 and not self.extra_inputs
             )
-            key = (bucket, tuple(req.prompt)) if cacheable else None
+            # keyed by quantization mode too: an int8 cached slice must never
+            # splice into an f32 pool after a config flip (or vice versa)
+            key = (
+                (bucket, bool(getattr(self.cfg, "quantized_kv", False)), tuple(req.prompt))
+                if cacheable
+                else None
+            )
             if key is not None and key in self._prefix:
                 row, first = self._prefix[key]
                 self._prefix.move_to_end(key)

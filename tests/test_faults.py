@@ -132,6 +132,30 @@ else:
         _digest_single_flip(seed, pos)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("d", [2**12, 2**12 + 37])  # aligned + padded grids
+def test_fused_encode_digest_parity(dtype, d):
+    """The digest lane folded into the fused encode kernel equals the XLA
+    ``digest(hat_new)`` — and turning it on changes no other output."""
+    from repro.kernels.choco_fused import fused_round_leaf
+
+    m = 4
+    ks = jax.random.split(jax.random.PRNGKey(d), 3)
+    leaf = jax.random.normal(ks[0], (m, d)).astype(dtype)
+    hat = (jax.random.normal(ks[1], (m, d)) * 0.1).astype(dtype)
+    s = jnp.zeros_like(leaf)
+    shifts = ((1, 0.3), (3, 0.2))
+    plain = fused_round_leaf(leaf, hat, s, ks[2], shifts, 0.5, 4)
+    tn, hn, sn, dig = fused_round_leaf(
+        leaf, hat, s, ks[2], shifts, 0.5, 4, with_digest=True
+    )
+    for a, b in zip(plain, (tn, hn, sn)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(dig), np.asarray(digest(hn)))
+    # the lane detects a garbled hat like the XLA digest does
+    assert (np.asarray(digest(garble(hn))) != np.asarray(dig)).all()
+
+
 # ----------------------------------------------------------------- fixtures
 def _theta(m, d, seed=0):
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
